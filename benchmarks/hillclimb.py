@@ -1,0 +1,111 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb measurement driver (§Perf).
+
+For a cell, measures roofline terms for a sequence of named variants
+(baseline, kernelized cores, remat policy, logits dtype, replicated serving
+weights, ...), each a config tweak re-lowered through the same pipeline, and
+writes experiments/perf/<cell>.json for the §Perf log.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell mixtral_train
+"""
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+from repro import flags
+from repro.configs import get_config, get_shape
+from repro.launch.dryrun import roofline_terms
+from repro.launch.mesh import make_production_mesh
+
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "perf"
+
+
+def measure(cfg, shape, mesh, no_core: bool = False) -> dict:
+    if no_core:
+        flags.ROOFLINE_NO_ATTN = True
+        if cfg.family in ("ssm", "hybrid"):
+            flags.ROOFLINE_NO_SSD = True
+    try:
+        t = roofline_terms(cfg, shape, mesh)
+    finally:
+        flags.ROOFLINE_NO_ATTN = False
+        flags.ROOFLINE_NO_SSD = False
+    return {k: t[k] for k in ("flops", "bytes", "transcendentals",
+                              "collective_total")}
+
+
+def run_mixtral_train() -> dict:
+    cfg = get_config("mixtral-8x22b")
+    shape = get_shape("train_4k")
+    mesh = make_production_mesh()
+    steps = {}
+    steps["baseline_naive"] = measure(cfg, shape, mesh)
+    steps["no_core"] = measure(cfg, shape, mesh, no_core=True)
+    # iter 1: remat policy 'dots' — save matmul outputs, recompute the rest
+    cfg1 = dataclasses.replace(cfg, remat_policy="dots")
+    steps["remat_dots"] = measure(cfg1, shape, mesh)
+    steps["remat_dots_no_core"] = measure(cfg1, shape, mesh, no_core=True)
+    # iter 2: + bf16 CE logits
+    cfg2 = dataclasses.replace(cfg1, logits_dtype="bfloat16")
+    steps["remat_dots_bf16logits_no_core"] = measure(cfg2, shape, mesh,
+                                                     no_core=True)
+    return {"cell": "mixtral-8x22b x train_4k x pod16x16", "steps": steps,
+            "n_devices": 256}
+
+
+def run_qwen2_prefill() -> dict:
+    cfg = get_config("qwen2-0.5b")
+    shape = get_shape("prefill_32k")
+    mesh = make_production_mesh()
+    steps = {}
+    steps["baseline_naive"] = measure(cfg, shape, mesh)
+    steps["no_core"] = measure(cfg, shape, mesh, no_core=True)
+    # iter 2: bf16 cache+logits head already; try logits bf16 anyway (head
+    # matmul output): prefill emits [B, 1, V] so this is tiny — measured to
+    # confirm the hypothesis that it does NOT matter here.
+    cfg1 = dataclasses.replace(cfg, logits_dtype="bfloat16")
+    steps["bf16_logits_no_core"] = measure(cfg1, shape, mesh, no_core=True)
+    # iter 3: replicate weights for serving (0.5B bf16 = 1.25 GB/chip):
+    # kills the per-layer FSDP all-gathers that dominate collectives
+    cfg2 = dataclasses.replace(cfg, serve_replicate_weights=True)
+    steps["replicated_no_core"] = measure(cfg2, shape, mesh, no_core=True)
+    return {"cell": "qwen2-0.5b x prefill_32k x pod16x16", "steps": steps,
+            "n_devices": 256}
+
+
+def run_whisper_decode() -> dict:
+    cfg = get_config("whisper-tiny")
+    shape = get_shape("decode_32k")
+    mesh = make_production_mesh()
+    steps = {}
+    steps["baseline"] = measure(cfg, shape, mesh)
+    cfg1 = dataclasses.replace(cfg, serve_replicate_weights=True)
+    steps["replicated_weights"] = measure(cfg1, shape, mesh)
+    return {"cell": "whisper-tiny x decode_32k x pod16x16", "steps": steps,
+            "n_devices": 256}
+
+
+CELLS = {
+    "mixtral_train": run_mixtral_train,
+    "qwen2_prefill": run_qwen2_prefill,
+    "whisper_decode": run_whisper_decode,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    args = ap.parse_args()
+    res = CELLS[args.cell]()
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / f"{args.cell}.json"
+    path.write_text(json.dumps(res, indent=1))
+    print(json.dumps(res, indent=1))
+
+
+if __name__ == "__main__":
+    main()

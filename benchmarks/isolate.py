@@ -1,0 +1,74 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Core-isolation measurements for the hillclimbed cells (§Perf).
+
+For a cell, lowers the depth-1/2 roofline variants twice more with the
+attention (and, for SSM archs, SSD) core replaced by an identity-shaped
+stand-in.  The difference  naive - no_core  is the measured share of the
+core in every roofline term; the Pallas kernel's analytic cost is then
+substituted by benchmarks/perf_model.py.
+
+  PYTHONPATH=src python -m benchmarks.isolate --arch qwen2-0.5b \
+      --shape prefill_32k [--multi-pod]
+
+Writes experiments/dryrun/<mesh>/<arch>__<shape>.isolate.json.
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+from repro import flags
+from repro.configs import get_config, get_shape
+from repro.launch.dryrun import ART_DIR, _roofline_lowering, roofline_terms
+from repro.launch.mesh import make_production_mesh
+
+
+def isolate_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = "pod2x16x16" if multi_pod else "pod16x16"
+
+    out = {"arch": arch, "shape": shape_name, "mesh": tag}
+    # baseline (naive attention) terms — recomputed so both sides of the
+    # subtraction share one code version
+    out["naive"] = roofline_terms(cfg, shape, mesh)
+
+    flags.ROOFLINE_NO_ATTN = True
+    if cfg.family in ("ssm", "hybrid"):
+        flags.ROOFLINE_NO_SSD = True
+    try:
+        out["no_core"] = roofline_terms(cfg, shape, mesh)
+    finally:
+        flags.ROOFLINE_NO_ATTN = False
+        flags.ROOFLINE_NO_SSD = False
+
+    core = {
+        k: out["naive"][k] - out["no_core"][k]
+        for k in ("flops", "bytes", "transcendentals")
+    }
+    core["collective_total"] = (out["naive"]["collective_total"]
+                                - out["no_core"]["collective_total"])
+    out["core"] = core
+
+    path = ART_DIR / tag / f"{arch}__{shape_name}.isolate.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=1))
+    print(f"[isolate] {arch} x {shape_name} x {tag}: "
+          f"core flops {core['flops']:.3e}, bytes {core['bytes']:.3e}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    isolate_cell(args.arch, args.shape, args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

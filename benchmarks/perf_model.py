@@ -1,0 +1,106 @@
+"""Analytic cost models for the Pallas kernels, used to substitute the
+measured cost of the XLA reference cores (attention / SSD) in the
+hillclimbed cells:  corrected_cell = measured(no_core) + kernel_model(core).
+
+Conventions: per-device numbers; batch shards over the batch axes, heads
+shard over the model axis only when divisible (mirrors layers.shard's
+divisibility rule); f32 accumulate, bf16 streams.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+BYTES = 2          # bf16 streams
+QB, KB = 512, 1024  # kernel default blocks (kernels/flash_attention.py)
+
+
+def _shards(cfg: ArchConfig, mesh_devices: int, multi_pod: bool) -> Dict:
+    model = 16
+    batch_axes = mesh_devices // model
+    head_shard = model if cfg.n_heads and cfg.n_heads % model == 0 else 1
+    return {"batch": batch_axes, "head": head_shard}
+
+
+def _vis(tq, tk, window, causal=True):
+    causal_vis = 0.5 * (1 + 1 / tq) if causal and tq == tk else 1.0
+    if window is not None:
+        return min(causal_vis, min(window, tk) / tk)
+    return causal_vis
+
+
+def flash_attention_cell(cfg: ArchConfig, shape: ShapeConfig,
+                         n_dev: int) -> Dict[str, float]:
+    """Whole-cell flash attention kernel cost (all attention layers)."""
+    from benchmarks.roofline import _attn_layers
+    b, t = shape.global_batch, shape.seq_len
+    sh = _shards(cfg, n_dev, n_dev > 256)
+    div = sh["batch"] * sh["head"]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    train = shape.kind == "train"
+    # matmul passes: fwd 2; train fwd(2) + flash-bwd(5, incl recompute)
+    passes = 7 if train else 2
+    byte_mult = 3 if train else 1   # bwd re-streams k,v + dq/dk/dv writes
+
+    flops = byt = 0.0
+    for grp in _attn_layers(cfg):
+        vis = _vis(t, t, grp["window"])
+        flops += grp["n"] * vis * 2.0 * b * hq * t * t * hd * passes
+        nq = math.ceil(t / QB)
+        kv_stream = nq * 2.0 * b * hkv * (vis * t) * hd * BYTES
+        qo = 2.0 * b * hq * t * hd * BYTES + 4.0 * b * hq * t  # + lse f32
+        byt += grp["n"] * (kv_stream + qo) * byte_mult
+    if cfg.n_enc_layers:
+        ta = cfg.enc_seq
+        flops += cfg.n_enc_layers * 2.0 * b * hq * ta * ta * hd * passes
+        byt += cfg.n_enc_layers * (
+            math.ceil(ta / QB) * 2.0 * b * hkv * ta * hd * BYTES
+            + 2.0 * b * hq * ta * hd * BYTES) * byte_mult
+    return {"flops": flops / div, "bytes": byt / div}
+
+
+def ssd_cell(cfg: ArchConfig, shape: ShapeConfig, n_dev: int,
+             chunk: int = 256) -> Dict[str, float]:
+    """Whole-cell SSD kernel cost (all mamba layers)."""
+    if not cfg.ssm_state:
+        return {"flops": 0.0, "bytes": 0.0}
+    b, t = shape.global_batch, shape.seq_len
+    sh = _shards(cfg, n_dev, n_dev > 256)
+    di = cfg.ssm_expand * cfg.d_model
+    h = di // cfg.ssm_head
+    dh, ds = cfg.ssm_head, cfg.ssm_state
+    head_shard = 16 if h % 16 == 0 else 1
+    div = sh["batch"] * head_shard
+
+    prog = cfg.program()
+    n_mamba = sum(s.n for s in prog.segments if s.kind == "mamba") \
+        * prog.repeats + sum(s.n for s in prog.tail if s.kind == "mamba")
+    nc = max(1, t // chunk)
+    q = min(chunk, t)
+    per_layer_flops = b * nc * h * (2.0 * q * q * (ds + dh)
+                                    + 4.0 * q * ds * dh)
+    per_layer_bytes = (2.0 * b * t * h * dh + b * t * h
+                       + 4.0 * b * t * ds) * 4.0
+    passes = 3.0 if shape.kind == "train" else 1.0   # fwd + bwd(2x)
+    return {"flops": n_mamba * per_layer_flops * passes / div,
+            "bytes": n_mamba * per_layer_bytes * passes / div}
+
+
+def kernelized_terms(no_core: Dict, cfg: ArchConfig, shape: ShapeConfig,
+                     n_dev: int) -> Dict[str, float]:
+    """measured(no_core) + analytic kernel cost -> roofline terms."""
+    from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+    fa = flash_attention_cell(cfg, shape, n_dev)
+    sd = ssd_cell(cfg, shape, n_dev)
+    flops = no_core["flops"] + fa["flops"] + sd["flops"]
+    byt = no_core["bytes"] + fa["bytes"] + sd["bytes"]
+    coll = no_core["collective_total"]
+    return {
+        "flops": flops, "bytes": byt, "collective": coll,
+        "t_compute_s": flops / PEAK_FLOPS,
+        "t_memory_s": byt / HBM_BW,
+        "t_collective_s": coll / ICI_BW,
+    }

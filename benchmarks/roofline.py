@@ -1,0 +1,260 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), in seconds-per-step-per-chip:
+
+  compute    = flops_per_device / PEAK_FLOPS
+  memory     = hbm_bytes_per_device / HBM_BW
+  collective = collective_operand_bytes_per_device / ICI_BW
+
+Sources: the dry-run's depth-extrapolated cost_analysis (scan bodies counted
+once by XLA, so flops/bytes/collectives are measured on unrolled depth-1/2
+lowerings and extrapolated linearly — see launch/dryrun.py).  The roofline
+lowerings use *naive* attention so every flop is visible to cost_analysis;
+`attention_correction` swaps those terms for the flash kernel's
+(block-skipped flops, VMEM-resident logits), per DESIGN.md §3.
+
+MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) gives the useful-compute
+ratio (remat/dispatch overhead shows up as ratio < 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, SHAPES, get_config, get_shape
+from repro.configs.base import ArchConfig, ShapeConfig
+
+ART_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (brief's constant)
+
+
+# ---------------------------------------------------------------------------
+# analytic attention accounting
+# ---------------------------------------------------------------------------
+
+def _attn_layers(cfg: ArchConfig) -> List[Dict]:
+    """(count, window) per attention layer class."""
+    prog = cfg.program()
+    out = []
+    for rep in (prog.repeats,):
+        for seg in prog.segments:
+            if seg.kind in ("attn", "attn_local", "attn_global",
+                            "shared_attn", "moe"):
+                window = cfg.window
+                if seg.kind == "attn_local":
+                    window = cfg.local_window
+                elif seg.kind == "attn_global":
+                    window = None
+                out.append({"n": seg.n * rep, "window": window})
+    for seg in prog.tail:
+        if seg.kind != "mamba":
+            window = cfg.local_window if seg.kind == "attn_local" \
+                else cfg.window
+            out.append({"n": seg.n, "window": window})
+    return out
+
+
+def _visibility(tq: int, tk: int, window: Optional[int],
+                causal: bool = True) -> float:
+    """Average fraction of the Tq x Tk rectangle a flash kernel computes."""
+    causal_vis = 0.5 * (1 + 1 / tq) if causal and tq == tk else 1.0
+    if window is not None:
+        return min(causal_vis, min(window, tk) / tk)
+    return causal_vis
+
+
+def attention_correction(cfg: ArchConfig, shape: ShapeConfig,
+                         n_dev: int) -> Dict[str, float]:
+    """Returns flops/bytes DELTAS to apply to the measured (naive) totals:
+    corrected = measured - naive_delta + flash_delta."""
+    if shape.kind in ("decode", "long") or cfg.n_heads == 0:
+        return {"flops_delta": 0.0, "bytes_delta": 0.0}
+    b = shape.global_batch
+    tq = shape.seq_len if shape.kind != "train" else shape.seq_len
+    if cfg.family == "vlm":
+        tq = shape.seq_len  # img prefix + text fills the same budget
+    tk = tq
+    hd = cfg.head_dim
+    hq = cfg.n_heads
+
+    # matmul passes in the measured module: fwd QK+PV = 2; train adds
+    # bwd(4) + remat fwd(2) = 8 total
+    passes = 2 if shape.kind == "prefill" else 8
+    # f32 logits materialization round-trips in the naive module
+    byte_passes = 3 if shape.kind == "prefill" else 8
+
+    naive_f = 0.0
+    flash_f = 0.0
+    logits_bytes = 0.0
+    for grp in _attn_layers(cfg):
+        full = 2.0 * b * hq * tq * tk * hd * passes * grp["n"]
+        naive_f += full
+        flash_f += full * _visibility(tq, tk, grp["window"])
+        logits_bytes += (4.0 * b * hq * tq * tk * byte_passes * grp["n"]
+                         * _visibility(tq, tk, grp["window"]) ** 0)
+    # whisper encoder (non-causal, full): counted once (fwd[+bwd] handled
+    # by passes above via the decoder count; encoder layers:
+    if cfg.n_enc_layers:
+        ta = cfg.enc_seq
+        full = 2.0 * b * hq * ta * ta * hd * passes * cfg.n_enc_layers
+        naive_f += full
+        flash_f += full          # non-causal full attention
+        logits_bytes += 4.0 * b * hq * ta * ta * byte_passes \
+            * cfg.n_enc_layers
+    return {
+        "flops_delta": (naive_f - flash_f) / n_dev,
+        "bytes_delta": logits_bytes / n_dev,
+    }
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (6*N*D convention)
+# ---------------------------------------------------------------------------
+
+def _param_counts(cfg: ArchConfig) -> Dict[str, float]:
+    """Analytic total + active params (embedding included once)."""
+    d = cfg.d_model
+    v = cfg.vocab
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    per_attn = d * (cfg.n_heads + 2 * cfg.n_kv) * cfg.head_dim \
+        + cfg.n_heads * cfg.head_dim * d if cfg.n_heads else 0
+    per_mlp = d * cfg.d_ff * (3 if cfg.gated_mlp else 2)
+    di = cfg.ssm_expand * d
+    g = cfg.ssm_groups
+    per_mamba = d * (2 * di + 2 * g * cfg.ssm_state
+                     + (di // max(cfg.ssm_head, 1))) + di * d if \
+        cfg.ssm_state else 0
+
+    total = emb
+    active = emb
+    prog = cfg.program()
+    for rep, segs in ((prog.repeats, prog.segments), (1, prog.tail)):
+        for seg in segs:
+            n = seg.n * rep
+            if seg.kind == "mamba":
+                total += n * per_mamba
+                active += n * per_mamba
+            elif seg.kind == "moe":
+                moe_total = cfg.n_experts * 3 * d * cfg.d_ff
+                moe_active = cfg.top_k * 3 * d * cfg.d_ff
+                total += n * (per_attn + moe_total + d * cfg.n_experts)
+                active += n * (per_attn + moe_active + d * cfg.n_experts)
+            elif seg.kind == "shared_attn":
+                total += (per_attn + per_mlp) * (1 if rep else 1)
+                active += n * (per_attn + per_mlp)  # applied n*rep times
+            else:
+                total += n * (per_attn + per_mlp)
+                active += n * (per_attn + per_mlp)
+    if cfg.n_enc_layers:
+        total += cfg.n_enc_layers * (per_attn + per_mlp)
+        active += cfg.n_enc_layers * (per_attn + per_mlp)
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    counts = _param_counts(cfg)
+    n = counts["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# table builder
+# ---------------------------------------------------------------------------
+
+def load_cell(mesh_tag: str, arch: str, shape: str) -> Optional[dict]:
+    p = ART_DIR / mesh_tag / f"{arch}__{shape}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def cell_terms(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "OK" or "roofline" not in rec \
+            or "error" in rec.get("roofline", {}):
+        return None
+    cfg = get_config(rec["arch"])
+    shape = get_shape(rec["shape"])
+    n_dev = rec["n_devices"]
+    roof = rec["roofline"]
+    corr = attention_correction(cfg, shape, n_dev)
+    flops = max(roof["flops"] - corr["flops_delta"], 0.0)
+    hbm = max(roof["bytes"] - corr["bytes_delta"], 0.0)
+    coll = roof["collective_total"]
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_n = coll / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))
+    mf = model_flops(cfg, shape) / n_dev
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "flops_per_dev": flops, "hbm_bytes_per_dev": hbm,
+        "coll_bytes_per_dev": coll,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_n,
+        "bottleneck": dom[1],
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (max(t_c, t_m, t_n) and
+                              t_c / max(t_c, t_m, t_n)),
+        "step_time_bound_s": max(t_c, t_m, t_n),
+    }
+
+
+def build_table(mesh_tag: str = "pod16x16") -> List[dict]:
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = load_cell(mesh_tag, arch, shape.name)
+            if rec is None:
+                continue
+            if rec["status"] == "SKIP":
+                rows.append({"arch": arch, "shape": shape.name,
+                             "mesh": mesh_tag, "skip": rec["reason"]})
+                continue
+            t = cell_terms(rec)
+            if t:
+                rows.append(t)
+            else:
+                rows.append({"arch": arch, "shape": shape.name,
+                             "mesh": mesh_tag,
+                             "skip": f"status={rec['status']}"})
+    return rows
+
+
+def format_table(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | | | | | "
+                         f"{r['skip'][:40]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for tag in ("pod16x16", "pod2x16x16"):
+        rows = build_table(tag)
+        if rows:
+            print(f"\n== {tag} ==")
+            print(format_table(rows))

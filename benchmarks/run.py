@@ -1,0 +1,251 @@
+"""Benchmark harness: one function per paper table/figure, plus the roofline
+reader.  Prints ``name,us_per_call,derived`` CSV rows (brief's format).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table1 eq12 ...
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_util import row, time_fn
+
+RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def _save(name: str, payload: dict) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1,
+                                                     default=float))
+
+
+# ---------------------------------------------------------------------------
+# Table 1: Izhikevich conductance-scaling regression
+# ---------------------------------------------------------------------------
+
+def bench_table1_izhikevich_gscale() -> None:
+    from benchmarks.gscale_experiments import izhikevich_gscale_sweep
+    t0 = time.perf_counter()
+    res = izhikevich_gscale_sweep()
+    us = (time.perf_counter() - t0) * 1e6
+    _save("table1_izhikevich", res)
+    row("table1_izhikevich_k1", us / len(res["n_conns"]),
+        f"k1={res['k1']:.4g}")
+    row("table1_izhikevich_k2", 0.0, f"k2={res['k2']:.4g}")
+    row("table1_izhikevich_k3", 0.0, f"k3={res['k3']:.4g}")
+    row("table1_izhikevich_mape", 0.0,
+        f"mape_pct={res['mape_pct']:.2f} (paper: 3.95)")
+
+
+# ---------------------------------------------------------------------------
+# Table 2 / Fig 3: mushroom-body regression at two LHI counts
+# ---------------------------------------------------------------------------
+
+def bench_table2_mushroom_gscale() -> None:
+    from benchmarks.gscale_experiments import mushroom_gscale_sweep
+    for n_lhi in (5, 10):     # reduced stand-ins for the paper's 20/40
+        t0 = time.perf_counter()
+        res = mushroom_gscale_sweep(n_lhi=n_lhi)
+        us = (time.perf_counter() - t0) * 1e6
+        _save(f"table2_mushroom_lhi{n_lhi}", res)
+        row(f"table2_pn_kc_lhi{n_lhi}_k1", us / len(res["n_pns"]),
+            f"k1={res['k1']:.4g}")
+        row(f"table2_pn_kc_lhi{n_lhi}_mape", 0.0,
+            f"mape_pct={res['mape_pct']:.2f} (paper PN-KC: 16.1)")
+        row(f"table2_pn_lhi_lhi{n_lhi}_k1", 0.0,
+            f"k1={res['k1_lhi']:.4g}")
+        row(f"table2_pn_lhi_lhi{n_lhi}_mape", 0.0,
+            f"mape_pct={res['mape_lhi_pct']:.2f} (paper PN-LHI: 71.4)")
+
+
+# ---------------------------------------------------------------------------
+# Fig 2: representation (sparse vs dense) must not change the scaling
+# ---------------------------------------------------------------------------
+
+def bench_fig2_representation_agreement() -> None:
+    from benchmarks.gscale_experiments import izhikevich_gscale_sweep
+    res = {}
+    for rep in ("sparse", "dense"):
+        t0 = time.perf_counter()
+        res[rep] = izhikevich_gscale_sweep(
+            n_total=300, n_conns=(60, 150, 300), n_steps=200,
+            representation=rep)
+        us = (time.perf_counter() - t0) * 1e6
+        row(f"fig2_gscale_{rep}", us / 4,
+            "gscales=" + "/".join(f"{g:.3g}" for g in
+                                  res[rep]["gscales"]))
+    a = np.asarray(res["sparse"]["gscales"])
+    b = np.asarray(res["dense"]["gscales"])
+    mape = float(np.mean(np.abs(a - b) / np.maximum(np.abs(b), 1e-9))) * 100
+    _save("fig2_agreement", {"sparse": res["sparse"], "dense": res["dense"],
+                             "mape_pct": mape})
+    row("fig2_sparse_vs_dense_mape", 0.0,
+        f"mape_pct={mape:.2f} (paper: 3.95, 'negligible')")
+
+
+# ---------------------------------------------------------------------------
+# Eq (1)/(2): memory model
+# ---------------------------------------------------------------------------
+
+def bench_eq12_memory_model() -> None:
+    from repro.sparse import formats as F
+    rows = []
+    for n_conn in range(100, 1001, 100):
+        nnz = 1000 * n_conn
+        s = F.sparse_memory_elements(nnz, 1000, 1000)
+        d = F.dense_memory_elements(1000, 1000)
+        rows.append((n_conn, s, d))
+    _save("eq12_memory", {"rows": rows})
+    crossover = next((n for n, s, d in rows if s >= d), None)
+    row("eq12_memory_sparse_at_100", 0.0,
+        f"sparse={rows[0][1]}el dense={rows[0][2]}el")
+    row("eq12_memory_crossover_nconn", 0.0,
+        f"crossover={crossover} (sparse wins below)")
+
+
+# ---------------------------------------------------------------------------
+# Sparse vs dense step timing (CPU proxy for the paper's GPU speedups)
+# ---------------------------------------------------------------------------
+
+def bench_sparse_vs_dense_step() -> None:
+    from repro.core.models import izhikevich_net
+    out = {}
+    for n_total, n_conn in ((500, 50), (1000, 100)):
+        for rep in ("sparse", "dense"):
+            cfg = izhikevich_net.IzhikevichNetConfig(
+                n_total=n_total, n_conn=n_conn, representation=rep)
+            net, sim = izhikevich_net.build(cfg)
+            st = sim.init_state()
+            names = [g.name for g in net.synapses]
+            run = jax.jit(lambda s: sim.run(
+                s, 100, {n: jnp.float32(1.0) for n in names}).state)
+            us = time_fn(run, st, warmup=1, iters=3) / 100
+            out[f"{n_total}_{n_conn}_{rep}"] = us
+            row(f"speed_step_n{n_total}_c{n_conn}_{rep}", us,
+                f"density={n_conn/n_total:.2f}")
+    for key in ("500_50", "1000_100"):
+        sp = out[f"{key}_sparse"]
+        dn = out[f"{key}_dense"]
+        row(f"speed_ratio_{key}", 0.0, f"dense/sparse={dn/sp:.2f}x")
+    _save("sparse_vs_dense_step", out)
+
+
+# ---------------------------------------------------------------------------
+# Kernel microbenchmarks (jnp semantics on CPU; Pallas targets TPU)
+# ---------------------------------------------------------------------------
+
+def bench_kernel_latencies() -> None:
+    from repro.kernels import ref as R
+    r = np.random.default_rng(0)
+    n = 1 << 14
+    v = jnp.asarray(r.uniform(-70, -50, n), jnp.float32)
+    u = jnp.asarray(r.uniform(-15, -5, n), jnp.float32)
+    isyn = jnp.asarray(r.standard_normal(n) * 3, jnp.float32)
+    ab = jnp.full((n,), 0.02), jnp.full((n,), 0.2)
+    cd = jnp.full((n,), -65.0), jnp.full((n,), 8.0)
+    f = jax.jit(lambda *a: R.izhikevich_step_ref(*a, 1.0))
+    us = time_fn(f, v, u, isyn, *ab, *cd)
+    row("kernel_izhikevich_step_16k", us, f"neurons_per_us={n/us:.0f}")
+
+    m = jnp.asarray(r.random(n), jnp.float32)
+    f = jax.jit(lambda *a: R.hh_step_ref(*a, 0.1))
+    us = time_fn(f, v, m, m, m, isyn)
+    row("kernel_hh_step_16k", us, f"neurons_per_us={n/us:.0f}")
+
+    npre, k, npost, b = 1024, 128, 1024, 8
+    g = jnp.asarray(r.standard_normal((npre, k)), jnp.float32)
+    idx = jnp.asarray(r.integers(0, npost, (npre, k)), jnp.int32)
+    valid = jnp.ones((npre, k), bool)
+    spk = jnp.asarray((r.random((b, npre)) < 0.1), jnp.float32)
+    f = jax.jit(lambda *a: R.ell_spmv_ref(*a, npost))
+    us = time_fn(f, g, idx, valid, spk)
+    row("kernel_ell_spmv_1kx128x8", us,
+        f"synapses_per_us={b*npre*k/us:.0f}")
+    w = jnp.zeros((npre, npost), jnp.float32)
+    fd = jax.jit(lambda s, w: s @ w)
+    usd = time_fn(fd, spk, w)
+    row("kernel_dense_spmv_1kx1k", usd, f"ell_speedup={usd/us:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Occupancy table (paper §3 adapted to VMEM)
+# ---------------------------------------------------------------------------
+
+def bench_occupancy_blocksize() -> None:
+    from repro.kernels.autotune import occupancy_report
+    for line in occupancy_report().splitlines()[1:]:
+        name, block, grid, occ = line.split(",")
+        row(f"occupancy_{name}", 0.0,
+            f"block={block} grid={grid} occ={occ}")
+
+
+# ---------------------------------------------------------------------------
+# LM-side: fan-in scaling probe (the paper's law on the LM stack)
+# ---------------------------------------------------------------------------
+
+def bench_lm_scaling_probe() -> None:
+    from repro.core.scaling import probe_and_fit
+    t0 = time.perf_counter()
+    pol = probe_and_fit(jax.random.PRNGKey(0),
+                        fanins=(64, 128, 256, 512, 1024, 2048))
+    us = (time.perf_counter() - t0) * 1e6
+    _save("lm_scaling_policy", {"k1": pol.k1, "k2": pol.k2, "k3": pol.k3})
+    row("lm_scaling_fit", us / 6,
+        f"k1={pol.k1:.4g} k2={pol.k2:.4g} k3={pol.k3:.4g}")
+    # sanity: the fitted law should track 1/fan_in on variance
+    s256, s1024 = pol.scale(256), pol.scale(1024)
+    row("lm_scaling_ratio_256_1024", 0.0,
+        f"scale_ratio={s256/s1024:.2f} (ideal 2.0)")
+
+
+# ---------------------------------------------------------------------------
+# Roofline table from dry-run artifacts
+# ---------------------------------------------------------------------------
+
+def bench_roofline() -> None:
+    from benchmarks import roofline as RL
+    for tag in ("pod16x16", "pod2x16x16"):
+        rows_ = RL.build_table(tag)
+        ok = [r for r in rows_ if "skip" not in r]
+        if not ok:
+            continue
+        for r in ok:
+            row(f"roofline_{tag}_{r['arch']}_{r['shape']}",
+                r["step_time_bound_s"] * 1e6,
+                f"bottleneck={r['bottleneck']} "
+                f"frac={r['roofline_fraction']:.2f} "
+                f"useful={r['useful_ratio']:.2f}")
+        _save(f"roofline_{tag}", {"rows": ok})
+
+
+BENCHES = {
+    "table1": bench_table1_izhikevich_gscale,
+    "table2": bench_table2_mushroom_gscale,
+    "fig2": bench_fig2_representation_agreement,
+    "eq12": bench_eq12_memory_model,
+    "speed": bench_sparse_vs_dense_step,
+    "kernels": bench_kernel_latencies,
+    "occupancy": bench_occupancy_blocksize,
+    "lm_scaling": bench_lm_scaling_probe,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

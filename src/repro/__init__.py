@@ -1,0 +1,16 @@
+"""repro: JAX/Pallas reproduction and production framework for GeNN (2014).
+
+Layers:
+  repro.core       -- the paper's contribution (SNN codegen, conductance scaling)
+  repro.sparse     -- CSR/ELL synapse representations + memory model
+  repro.kernels    -- Pallas TPU kernels (+ pure-jnp oracles)
+  repro.models     -- LM architecture family (dense/GQA/MoE/SSM/hybrid/enc-dec/VLM)
+  repro.configs    -- architecture configs (paper models + 10 assigned archs)
+  repro.optim      -- sharded AdamW, schedules, gradient compression
+  repro.data       -- deterministic resumable data pipeline
+  repro.checkpoint -- step-atomic checkpoint manager
+  repro.runtime    -- fault tolerance / elastic remesh / straggler mitigation
+  repro.launch     -- mesh construction, sharding rules, dry-run, train, serve
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,177 @@
+"""Step-atomic checkpointing with retention, async writes and manifests.
+
+Layout per step:
+  <dir>/step_<N>/
+    manifest.json      -- tree structure + leaf metadata + status=COMPLETE
+    shard_<p>.npz      -- this process's param/opt/data leaves
+
+Atomicity: leaves are written first, the manifest last (write-to-temp +
+rename); a step directory without a COMPLETE manifest is ignored by
+`latest_step` and garbage-collected — a crash mid-write can never be
+restored from.  Multi-host: each process writes only the leaves (shards) it
+owns; on CPU tests there is one process.  `restore` reshards on load when
+the device layout changed (elastic restart) because leaves are saved
+unsharded per-process and re-placed via the current sharding rules.
+
+An async writer thread overlaps serialization with training; `wait()` joins
+it (call before exit or before deleting old steps).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, max_to_keep: int = 3,
+                 process_index: Optional[int] = None,
+                 async_writes: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.max_to_keep = max_to_keep
+        self.process_index = (jax.process_index() if process_index is None
+                              else process_index)
+        self.async_writes = async_writes
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Dict[str, Any],
+             blocking: bool = False) -> None:
+        """Snapshot now (device->host copy is synchronous; disk IO async)."""
+        flat, _ = _flatten(tree)
+        host_leaves = []
+        for k, v in flat:
+            if v is None:
+                continue
+            a = np.asarray(v)
+            if a.dtype.name == "bfloat16":   # npz can't store ml_dtypes
+                a = a.view(np.uint16)
+            host_leaves.append((k, a))
+        self.wait()
+
+        def _write():
+            try:
+                self._write(step, host_leaves)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        if self.async_writes and not blocking:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def _write(self, step: int, host_leaves) -> None:
+        d = self.dir / f"step_{step:09d}"
+        d.mkdir(parents=True, exist_ok=True)
+        shard = d / f"shard_{self.process_index}.npz"
+        tmp = shard.with_suffix(".tmp.npz")
+        np.savez(tmp, **{k: v for k, v in host_leaves})
+        tmp.rename(shard)
+        manifest = {
+            "step": step,
+            "status": "COMPLETE",
+            "time": time.time(),
+            "process_count": jax.process_count(),
+            "keys": [k for k, _ in host_leaves],
+        }
+        mtmp = d / "manifest.tmp.json"
+        mtmp.write_text(json.dumps(manifest))
+        mtmp.rename(d / "manifest.json")
+
+    # ------------------------------------------------------------------
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint write failed: {err!r}")
+
+    # ------------------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for d in sorted(self.dir.glob("step_*")):
+            if (d / "manifest.json").exists():
+                try:
+                    m = json.loads((d / "manifest.json").read_text())
+                    if m.get("status") == "COMPLETE":
+                        out.append(int(m["step"]))
+                except (json.JSONDecodeError, KeyError):
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def restore(self, step: int, like: Dict[str, Any],
+                shardings=None) -> Dict[str, Any]:
+        """Restore into the structure of `like` (pytree of arrays or
+        ShapeDtypeStructs); re-places onto current devices (resharding on
+        elastic restarts handled by jax.device_put with new shardings)."""
+        d = self.dir / f"step_{step:09d}"
+        if not (d / "manifest.json").exists():
+            raise FileNotFoundError(f"no COMPLETE checkpoint at {d}")
+        data: Dict[str, np.ndarray] = {}
+        for shard in sorted(d.glob("shard_*.npz")):
+            with np.load(shard) as z:
+                for k in z.files:
+                    data[k] = z[k]
+        flat, treedef = _flatten(like)
+        leaves = []
+        for key, ref in flat:
+            if ref is None:
+                leaves.append(None)
+                continue
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"leaf {key!r} shape {arr.shape} != {ref.shape}")
+            ref_dtype = np.dtype(ref.dtype)
+            if ref_dtype.name == "bfloat16" and arr.dtype == np.uint16:
+                arr = arr.view(ref_dtype)   # undo the storage view
+            leaves.append(arr.astype(ref_dtype))
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree
+
+    # ------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = self.steps()
+        # incomplete dirs: remove immediately
+        for d in self.dir.glob("step_*"):
+            if not (d / "manifest.json").exists():
+                mtime = d.stat().st_mtime
+                if time.time() - mtime > 60:
+                    shutil.rmtree(d, ignore_errors=True)
+        if self.max_to_keep and len(steps) > self.max_to_keep:
+            for s in steps[: -self.max_to_keep]:
+                shutil.rmtree(self.dir / f"step_{s:09d}",
+                              ignore_errors=True)

@@ -1,0 +1,2 @@
+"""The paper's primary contribution: GeNN-style code generation for SNNs,
+synaptic conductance scaling, and the LM adaptation of the scaling law."""

@@ -1,0 +1,107 @@
+"""The Izhikevich (2003) cortical network, as used in the paper §5.1.
+
+1000 spiking cortical neurons (4:1 excitatory:inhibitory), each pre neuron
+connected to `n_conn` random post neurons (the paper sweeps n_conn from 100
+to 1000 in steps of 50).  Weights: excitatory 0.5*U(0,1), inhibitory
+-1.0*U(0,1); thalamic input 5*N(0,1) (exc) / 2*N(0,1) (inh) per ms, as in
+Izhikevich's original script.  dt = 0.5 ms with 2 substeps on V (the GeNN
+default for this model).
+
+The reference configuration (n_conn = n_total, gscale = 1) defines the target
+spiking rate the conductance-scaling study maintains.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.snn import neurons as N
+from repro.core.snn.network import Network
+from repro.core.snn.simulator import Simulator
+from repro.core.snn.synapses import make_group
+
+__all__ = ["IzhikevichNetConfig", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IzhikevichNetConfig:
+    n_total: int = 1000
+    exc_frac: float = 0.8
+    n_conn: int = 1000
+    representation: str = "auto"   # 'auto' | 'sparse' | 'dense'
+    dt: float = 1.0                # 1 ms, two half-steps on V (as Izhikevich)
+    seed: int = 1234
+    input_scale: float = 1.0
+
+
+def build(cfg: IzhikevichNetConfig) -> tuple[Network, Simulator]:
+    n_exc = int(round(cfg.n_total * cfg.exc_frac))
+    n_inh = cfg.n_total - n_exc
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    net = Network(name=f"izhikevich_{cfg.n_total}_{cfg.n_conn}")
+
+    pkey, _ = jax.random.split(key)
+    params = N.izhikevich_population_params(pkey, n_exc, n_inh)
+    exc_params = {k: v[:n_exc] for k, v in params.items()}
+    inh_params = {k: v[n_exc:] for k, v in params.items()}
+
+    s_in = cfg.input_scale
+
+    def thalamic_exc(k, t, n):
+        return 5.0 * s_in * jax.random.normal(k, (n,))
+
+    def thalamic_inh(k, t, n):
+        return 2.0 * s_in * jax.random.normal(k, (n,))
+
+    net.add_population("exc", N.IZHIKEVICH, n_exc, exc_params, thalamic_exc)
+    net.add_population("inh", N.IZHIKEVICH, n_inh, inh_params, thalamic_inh)
+
+    # fixed-fanout random connectivity, n_conn targets per pre neuron,
+    # targets drawn over the WHOLE population then split by post group
+    def split_targets(weight_fn, sign):
+        """Build exc->exc/inh or inh->exc/inh groups from one draw."""
+        groups = []
+        for pre, n_pre in (("exc", n_exc), ("inh", n_inh)):
+            if sign > 0 and pre != "exc":
+                continue
+            if sign < 0 and pre != "inh":
+                continue
+            from repro.sparse.formats import (ELLSynapses,
+                                              fixed_fanout_connectivity)
+            post_all, g_all = fixed_fanout_connectivity(
+                rng, n_pre, cfg.n_total, cfg.n_conn, weight_fn)
+            for post, lo, hi in (("exc", 0, n_exc),
+                                 ("inh", n_exc, cfg.n_total)):
+                mask = (post_all >= lo) & (post_all < hi)
+                idx = np.where(mask, post_all - lo, 0).astype(np.int32)
+                gg = np.where(mask, g_all, 0.0).astype(np.float32)
+                ell = ELLSynapses(
+                    g=jnp.asarray(gg), post_ind=jnp.asarray(idx),
+                    valid=jnp.asarray(mask), n_post=hi - lo)
+                from repro.core.snn.synapses import SynapseGroup
+                groups.append(SynapseGroup(
+                    name=f"{pre}_{post}", pre=pre, post=post, ell=ell,
+                    representation=cfg.representation, dynamics="pulse",
+                    sign=1.0))
+        return groups
+
+    exc_w = lambda r, shape: 0.5 * r.random(shape)
+    inh_w = lambda r, shape: -1.0 * r.random(shape)
+    for grp in split_targets(exc_w, +1):
+        net.add_synapse(grp)
+    for grp in split_targets(inh_w, -1):
+        net.add_synapse(grp)
+
+    sim = Simulator(net, dt=cfg.dt, seed=cfg.seed)
+    return net, sim
+
+
+def gscale_keys(net: Network) -> list[str]:
+    """Synapse-group names the conductance search scales together."""
+    return [g.name for g in net.synapses]

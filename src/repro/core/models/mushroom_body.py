@@ -1,0 +1,93 @@
+"""The insect olfactory system / mushroom-body model (paper §5.1, ref [10]).
+
+Populations (as in Nowotny et al. 2005 and the GeNN MBody example):
+  PN   projection neurons       — Poisson inputs (odor-driven rates)
+  LHI  lateral horn interneurons— HH, driven by PNs, inhibit KCs (feedforward
+                                  gain control)
+  KC   Kenyon cells (1000)      — HH, sparse PN input
+  DN   detection neurons (100)  — HH, driven by KCs, mutual inhibition
+
+The paper varies the PN population (and therefore the PN->KC / PN->LHI
+fan-in) and fits gScale(nConn) for those two synapse groups, with 20 and 40
+LHIs for verification.  Connectivities follow the GeNN example: PN->KC sparse
+(prob 0.5 -> fixed fanout here), PN->LHI all-to-all-ish dense, LHI->KC dense
+inhibitory, KC->DN all-to-all plastic (static here), DN->DN inhibitory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.snn import neurons as N
+from repro.core.snn.network import Network
+from repro.core.snn.simulator import Simulator
+from repro.core.snn.synapses import SynapseGroup, make_group
+
+__all__ = ["MushroomBodyConfig", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MushroomBodyConfig:
+    n_pn: int = 100
+    n_lhi: int = 20
+    n_kc: int = 1000
+    n_dn: int = 100
+    pn_kc_fanout_frac: float = 0.5     # fraction of KCs each PN contacts
+    pn_rate_hz: float = 50.0           # odor-on Poisson rate
+    dt: float = 0.1
+    seed: int = 7
+    representation: str = "auto"
+    # baseline conductances (uS) — GeNN MBody-like magnitudes
+    g_pn_kc: float = 0.01
+    g_pn_lhi: float = 0.0025
+    g_lhi_kc: float = 0.15
+    g_kc_dn: float = 0.05
+    g_dn_dn: float = 0.1
+
+
+def build(cfg: MushroomBodyConfig) -> tuple[Network, Simulator]:
+    rng = np.random.default_rng(cfg.seed)
+    net = Network(name=f"mbody_pn{cfg.n_pn}_lhi{cfg.n_lhi}")
+
+    net.add_population("PN", N.POISSON, cfg.n_pn,
+                       {"rate_hz": cfg.pn_rate_hz})
+    net.add_population("LHI", N.TRAUBMILES_HH, cfg.n_lhi)
+    net.add_population("KC", N.TRAUBMILES_HH, cfg.n_kc)
+    net.add_population("DN", N.TRAUBMILES_HH, cfg.n_dn)
+
+    const = lambda g: (lambda r, shape: np.full(shape, g, np.float32))
+
+    n_kc_per_pn = max(1, int(round(cfg.pn_kc_fanout_frac * cfg.n_kc)))
+    net.add_synapse(make_group(
+        rng, "PN_KC", "PN", "KC", cfg.n_pn, cfg.n_kc, n_kc_per_pn,
+        weight_fn=const(cfg.g_pn_kc), representation=cfg.representation,
+        dynamics="exp_decay", tau_ms=2.0, e_rev=0.0, sign=1.0))
+
+    net.add_synapse(make_group(
+        rng, "PN_LHI", "PN", "LHI", cfg.n_pn, cfg.n_lhi, cfg.n_lhi,
+        weight_fn=const(cfg.g_pn_lhi), representation="dense",
+        dynamics="exp_decay", tau_ms=1.0, e_rev=0.0, sign=1.0))
+
+    net.add_synapse(make_group(
+        rng, "LHI_KC", "LHI", "KC", cfg.n_lhi, cfg.n_kc, cfg.n_kc,
+        weight_fn=const(cfg.g_lhi_kc), representation="dense",
+        dynamics="exp_decay", tau_ms=3.0, e_rev=-92.0, sign=1.0))
+
+    net.add_synapse(make_group(
+        rng, "KC_DN", "KC", "DN", cfg.n_kc, cfg.n_dn, cfg.n_dn,
+        weight_fn=lambda r, s: (cfg.g_kc_dn * r.random(s)).astype(
+            np.float32),
+        representation=cfg.representation,
+        dynamics="exp_decay", tau_ms=5.0, e_rev=0.0, sign=1.0))
+
+    net.add_synapse(make_group(
+        rng, "DN_DN", "DN", "DN", cfg.n_dn, cfg.n_dn, cfg.n_dn,
+        weight_fn=const(cfg.g_dn_dn), representation="dense",
+        dynamics="exp_decay", tau_ms=10.0, e_rev=-92.0, sign=1.0))
+
+    sim = Simulator(net, dt=cfg.dt, seed=cfg.seed)
+    return net, sim

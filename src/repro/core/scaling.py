@@ -1,0 +1,113 @@
+"""Fan-in-indexed weight scaling for the LM stack — the paper's conductance
+scaling transplanted to deep networks (DESIGN.md §4).
+
+Correspondence: a linear layer's fan-in plays nConn; the activation RMS after
+the layer plays the post-synaptic spiking rate; float overflow/NaN during a
+probe forward/backward plays the paper's overflow guard.  The same guarded
+search (probe → band check → bisect) and the same hyperbola regression
+  scale(fan_in) = k1/(k2 + fan_in) + k3
+are reused verbatim from repro.core.conductance.
+
+For Gaussian activations theory says scale ≈ 1/sqrt(fan_in); the probe-based
+search *discovers* the right curve rather than assuming it, exactly as the
+paper refuses to assume a law and fits simulations instead.  `fit_scaling_law`
+fits the hyperbola to sqrt-scales so both regimes (sparse spike-like inputs
+-> 1/n, dense Gaussian -> 1/sqrt(n)) are representable; the fitted law is then
+queried at each layer's fan-in at init time.
+
+`ScalingPolicy` is what model configs carry; `probe_and_fit` is run once per
+family (or the closed-form default used) and cached.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.conductance import fit_hyperbola, hyperbola
+
+__all__ = ["ScalingPolicy", "probe_scale_for_fanin", "probe_and_fit",
+           "DEFAULT_POLICY"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingPolicy:
+    """init std = scale(fan_in) * base;  residual branches additionally
+    multiplied by residual_alpha / sqrt(2 * n_layers) (muP-style depth term).
+    """
+
+    k1: float
+    k2: float
+    k3: float
+    base: float = 1.0
+    residual_alpha: float = 1.0
+    squared: bool = True   # law fitted on scale^2 (variance) vs fan_in
+
+    def scale(self, fan_in: int) -> float:
+        v = hyperbola(np.asarray([fan_in], np.float64), self.k1, self.k2,
+                      self.k3)[0]
+        v = max(float(v), 1e-12)
+        return self.base * (math.sqrt(v) if self.squared else v)
+
+    def init_std(self, fan_in: int) -> float:
+        return self.scale(fan_in)
+
+    def residual_std(self, fan_in: int, n_layers: int) -> float:
+        return self.scale(fan_in) * self.residual_alpha / math.sqrt(
+            max(1, 2 * n_layers))
+
+
+# The closed-form limit of the probe for dense Gaussian activations:
+# variance law 1/fan_in is the hyperbola with k2=k3=0, k1=1.
+DEFAULT_POLICY = ScalingPolicy(k1=1.0, k2=0.0, k3=0.0)
+
+
+def probe_scale_for_fanin(
+    key: jax.Array, fan_in: int, fan_out: int = 256,
+    target_rms: float = 1.0, band: float = 0.05, batch: int = 512,
+    max_iters: int = 40,
+) -> float:
+    """Guarded bisection (paper Fig-1) on one linear layer's output RMS."""
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (batch, fan_in), jnp.float32)
+    w0 = jax.random.normal(kw, (fan_in, fan_out), jnp.float32)
+
+    @jax.jit
+    def rms_of(scale):
+        y = x @ (scale * w0)
+        r = jnp.sqrt(jnp.mean(y * y))
+        return r, jnp.isfinite(r)
+
+    lo, hi = 0.0, 16.0
+    s = 1.0
+    for _ in range(max_iters):
+        s = 0.5 * (lo + hi)
+        r, finite = rms_of(jnp.float32(s))
+        r = float(r)
+        if not bool(finite) or r > target_rms * (1 + band):
+            hi = s
+        elif r < target_rms * (1 - band):
+            lo = s
+        else:
+            break
+    return s
+
+
+def probe_and_fit(
+    key: jax.Array, fanins: Sequence[int] = (64, 128, 256, 512, 1024,
+                                             2048, 4096, 8192),
+    **probe_kw,
+) -> ScalingPolicy:
+    """Probe a fan-in sweep and fit the paper's hyperbola on variance."""
+    scales = []
+    for i, f in enumerate(fanins):
+        scales.append(probe_scale_for_fanin(
+            jax.random.fold_in(key, i), int(f), **probe_kw))
+    var = np.asarray(scales, np.float64) ** 2
+    k1, k2, k3, err = fit_hyperbola(np.asarray(fanins, np.float64), var)
+    return ScalingPolicy(k1=k1, k2=k2, k3=k3)

@@ -1,0 +1,193 @@
+"""The simulator: generates and runs the per-step update for a Network.
+
+This is the JAX analogue of GeNN's generated simulation loop:
+
+  for each step:
+    1. synaptic propagation: last step's spikes -> post-synaptic currents
+       (sparse ELL / dense matmul per the representation choice)
+    2. neuron updates: the codegen'd model equations advance every population
+    3. spike extraction (threshold / reset, or rising-edge detection)
+
+`build_step` returns a pure function suitable for jax.jit / lax.scan / vmap;
+`run` scans it.  gScale factors enter as *traced arguments* so a single
+compiled simulator serves the whole conductance-scaling sweep (vmap over
+candidates — the batch dimension the TPU spmv kernel wants).
+
+NaN containment (paper §2): every step folds an `isfinite` reduction over
+membrane state into a carried `finite` flag; overflow from an over-scaled
+conductance is detected without host round-trips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codegen
+from repro.core.snn.network import Network
+
+__all__ = ["Simulator", "SimState", "RunResult"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SimState:
+    neurons: Dict[str, Dict[str, jax.Array]]
+    spikes: Dict[str, jax.Array]        # last step's spikes (bool)
+    prev_above: Dict[str, jax.Array]    # for edge-spike populations
+    syn: Dict[str, object]              # SynapseState per group name
+    t: jax.Array                        # ms
+    key: jax.Array
+    finite: jax.Array                   # bool: no NaN/Inf so far
+
+    def tree_flatten(self):
+        return ((self.neurons, self.spikes, self.prev_above, self.syn,
+                 self.t, self.key, self.finite), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RunResult:
+    state: SimState
+    spike_counts: Dict[str, jax.Array]   # per-neuron spike totals
+    rates_hz: Dict[str, jax.Array]       # population mean rate
+    finite: jax.Array
+    raster: object = None                # optional [steps, n] bool per pop
+
+    def tree_flatten(self):
+        return ((self.state, self.spike_counts, self.rates_hz, self.finite,
+                 self.raster), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class Simulator:
+    def __init__(self, net: Network, dt: float = 0.5, seed: int = 0):
+        self.net = net
+        self.dt = float(dt)
+        self.seed = seed
+        # --- code generation: one update fn per population model ---
+        self._updates = {
+            name: codegen.compile_sim(pop.model)
+            for name, pop in net.populations.items()
+        }
+        self._incoming = {
+            name: [g for g in net.synapses if g.post == name]
+            for name in net.populations
+        }
+
+    # ------------------------------------------------------------------
+    def init_state(self, key: Optional[jax.Array] = None) -> SimState:
+        if key is None:
+            key = jax.random.PRNGKey(self.seed)
+        neurons, spikes, prev_above = {}, {}, {}
+        for name, pop in self.net.populations.items():
+            neurons[name] = {
+                k: jnp.full((pop.n,), v, jnp.float32)
+                for k, v in pop.model.state.items()
+            }
+            spikes[name] = jnp.zeros((pop.n,), bool)
+            if pop.edge_spikes:
+                prev_above[name] = jnp.zeros((pop.n,), bool)
+        syn = {g.name: g.init_state() for g in self.net.synapses}
+        return SimState(neurons=neurons, spikes=spikes,
+                        prev_above=prev_above, syn=syn,
+                        t=jnp.zeros((), jnp.float32), key=key,
+                        finite=jnp.ones((), bool))
+
+    # ------------------------------------------------------------------
+    def step(
+        self, state: SimState,
+        gscales: Optional[Mapping[str, jax.Array]] = None,
+    ) -> Tuple[SimState, Dict[str, jax.Array]]:
+        """One dt step. gscales: synapse-group name -> scalar multiplier."""
+        net, dt = self.net, self.dt
+        gscales = gscales or {}
+        key, *subkeys = jax.random.split(state.key,
+                                         1 + 2 * len(net.populations))
+        subkeys = iter(subkeys)
+
+        # 1. synaptic propagation (last step's spikes) ------------------
+        isyn = {name: jnp.zeros((pop.n,), jnp.float32)
+                for name, pop in net.populations.items()}
+        new_syn = dict(state.syn)
+        for g in net.synapses:
+            gs = jnp.asarray(gscales.get(g.name, 1.0), jnp.float32)
+            v_post = state.neurons[g.post].get("V")
+            s_new, cur = g.step(state.syn[g.name], state.spikes[g.pre], gs,
+                                dt, v_post=v_post)
+            new_syn[g.name] = s_new
+            isyn[g.post] = isyn[g.post] + cur
+
+        # 2+3. neuron updates via generated code ------------------------
+        new_neurons, new_spikes, new_prev = {}, {}, dict(state.prev_above)
+        finite = state.finite
+        for name, pop in net.populations.items():
+            k_in, k_rand = next(subkeys), next(subkeys)
+            cur = isyn[name]
+            if pop.input_fn is not None:
+                cur = cur + pop.input_fn(k_in, state.t, pop.n)
+            ext = {"Isyn": cur, "dt": jnp.float32(dt), "t": state.t}
+            if pop.model.needs_rand:
+                ext["rand"] = jax.random.uniform(k_rand, (pop.n,))
+            ns, above = self._updates[name](state.neurons[name], pop.params,
+                                            ext)
+            if pop.edge_spikes:
+                spk = above & ~state.prev_above[name]
+                new_prev[name] = above
+            else:
+                spk = above
+            new_neurons[name] = ns
+            new_spikes[name] = spk
+            for arr in ns.values():
+                finite = finite & jnp.all(jnp.isfinite(arr))
+
+        new_state = SimState(
+            neurons=new_neurons, spikes=new_spikes, prev_above=new_prev,
+            syn=new_syn, t=state.t + dt, key=key, finite=finite)
+        return new_state, new_spikes
+
+    # ------------------------------------------------------------------
+    def run(
+        self, state: SimState, n_steps: int,
+        gscales: Optional[Mapping[str, jax.Array]] = None,
+        record_raster: bool = False,
+    ) -> RunResult:
+        """Scan n_steps; returns spike statistics (and optionally rasters)."""
+
+        def body(carry, _):
+            st, counts = carry
+            st2, spk = self.step(st, gscales)
+            counts = {k: counts[k] + spk[k] for k in counts}
+            out = spk if record_raster else None
+            return (st2, counts), out
+
+        counts0 = {name: jnp.zeros((pop.n,), jnp.int32)
+                   for name, pop in self.net.populations.items()}
+        (state2, counts), raster = jax.lax.scan(
+            body, (state, counts0), None, length=n_steps)
+
+        t_sec = n_steps * self.dt * 1e-3
+        rates = {k: jnp.mean(v) / t_sec for k, v in counts.items()}
+        return RunResult(state=state2, spike_counts=counts, rates_hz=rates,
+                         finite=state2.finite,
+                         raster=raster if record_raster else None)
+
+    # jit-compiled convenience wrapper (step count static) --------------
+    def run_jit(self, n_steps: int):
+        import functools
+
+        @functools.partial(jax.jit, static_argnames=())
+        def _run(state, gscales):
+            return self.run(state, n_steps, gscales)
+
+        return _run

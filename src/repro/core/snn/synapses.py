@@ -1,0 +1,148 @@
+"""Synapse groups: connectivity + representation + post-synaptic dynamics.
+
+A SynapseGroup connects a pre to a post population.  Representation is chosen
+per the paper's memory model (eqs. (1)/(2)) unless forced; dynamics are either
+instantaneous current pulses (the Izhikevich cortical net) or exponentially
+decaying conductances (the mushroom-body net), optionally with a fixed
+axonal delay implemented as a spike ring-buffer.
+
+`gscale` is the paper's synaptic-conductance scaling factor — the quantity
+the whole scalability study is about.  It multiplies the stored conductances
+at propagation time so a single network build can be swept over gscale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse import formats as F
+from repro.sparse import ops as sparse_ops
+from repro.kernels import ops as kops
+
+__all__ = ["SynapseGroup", "SynapseState"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SynapseState:
+    """Per-group dynamic state (pytree)."""
+
+    in_syn: Optional[jax.Array]        # decaying conductance input [n_post]
+    spike_buffer: Optional[jax.Array]  # delay ring [delay+1, n_pre]
+    cursor: Optional[jax.Array]        # ring cursor, int32 scalar
+
+    def tree_flatten(self):
+        return (self.in_syn, self.spike_buffer, self.cursor), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass
+class SynapseGroup:
+    name: str
+    pre: str
+    post: str
+    ell: F.ELLSynapses                      # canonical storage
+    dense: Optional[jax.Array] = None       # dense mirror when chosen/forced
+    representation: str = "auto"            # 'auto' | 'sparse' | 'dense'
+    dynamics: str = "pulse"                 # 'pulse' | 'exp_decay'
+    tau_ms: float = 5.0                     # for exp_decay
+    e_rev: Optional[float] = None           # reversal potential (cond-based)
+    delay_steps: int = 0
+    sign: float = 1.0                       # +1 excitatory / -1 inhibitory
+
+    def __post_init__(self) -> None:
+        if self.representation == "auto":
+            nnz = self.ell.n_pre * self.ell.max_conn
+            self.representation = F.choose_representation(
+                self.ell.n_pre, self.ell.n_post, nnz)
+        if self.representation == "dense" and self.dense is None:
+            self.dense = F.ell_to_dense(self.ell)
+
+    # -- state ------------------------------------------------------------
+    def init_state(self) -> SynapseState:
+        in_syn = (jnp.zeros((self.ell.n_post,), jnp.float32)
+                  if self.dynamics == "exp_decay" else None)
+        if self.delay_steps > 0:
+            buf = jnp.zeros((self.delay_steps + 1, self.ell.n_pre),
+                            jnp.float32)
+            cur = jnp.zeros((), jnp.int32)
+        else:
+            buf, cur = None, None
+        return SynapseState(in_syn=in_syn, spike_buffer=buf, cursor=cur)
+
+    # -- propagation -------------------------------------------------------
+    def _raw_current(self, spikes: jax.Array, gscale: jax.Array) -> jax.Array:
+        """sum_i spike_i * g_ij * gscale for this step's arriving spikes."""
+        spk = jnp.asarray(spikes, jnp.float32)
+        if self.representation == "dense":
+            out = sparse_ops.accumulate_dense(self.dense, spk)
+        else:
+            out = kops.ell_spmv(self.ell, spk)
+        return self.sign * gscale * out
+
+    def step(
+        self, state: SynapseState, spikes: jax.Array, gscale: jax.Array,
+        dt: float, v_post: Optional[jax.Array] = None,
+    ) -> tuple[SynapseState, jax.Array]:
+        """Advance one step; returns (new_state, current into post neurons)."""
+        if self.delay_steps > 0:
+            buf = state.spike_buffer.at[state.cursor].set(
+                jnp.asarray(spikes, jnp.float32))
+            read = (state.cursor + 1) % (self.delay_steps + 1)
+            arriving = buf[read]
+            new_buf, new_cur = buf, read
+        else:
+            arriving = spikes
+            new_buf, new_cur = state.spike_buffer, state.cursor
+
+        inj = self._raw_current(arriving, gscale)
+
+        if self.dynamics == "exp_decay":
+            decay = jnp.exp(-dt / self.tau_ms).astype(jnp.float32)
+            in_syn = state.in_syn * decay + inj
+            if self.e_rev is not None and v_post is not None:
+                current = in_syn * (self.e_rev - v_post)
+            else:
+                current = in_syn
+            new_state = SynapseState(in_syn=in_syn, spike_buffer=new_buf,
+                                     cursor=new_cur)
+            return new_state, current
+
+        new_state = SynapseState(in_syn=state.in_syn, spike_buffer=new_buf,
+                                 cursor=new_cur)
+        return new_state, inj
+
+    # -- memory accounting (paper eqs 1/2) ----------------------------------
+    def memory_report(self) -> dict:
+        nnz = self.ell.n_pre * self.ell.max_conn
+        return {
+            "name": self.name,
+            "representation": self.representation,
+            "sparse_elements": F.sparse_memory_elements(
+                nnz, self.ell.n_pre, self.ell.n_post),
+            "dense_elements": F.dense_memory_elements(
+                self.ell.n_pre, self.ell.n_post),
+        }
+
+
+def make_group(
+    rng: np.random.Generator, name: str, pre: str, post: str,
+    n_pre: int, n_post: int, n_conn: int, weight_fn=None,
+    representation: str = "auto", **kw,
+) -> SynapseGroup:
+    """Build a fixed-fanout group (the paper's construction)."""
+    post_ind, g = F.fixed_fanout_connectivity(
+        rng, n_pre, n_post, n_conn, weight_fn)
+    ell = F.ELLSynapses(
+        g=jnp.asarray(g), post_ind=jnp.asarray(post_ind),
+        valid=jnp.ones_like(jnp.asarray(post_ind), bool), n_post=n_post)
+    return SynapseGroup(name=name, pre=pre, post=post, ell=ell,
+                        representation=representation, **kw)

@@ -1,0 +1,17 @@
+"""Process-wide mode flags (set by the dry-run's roofline lowerings).
+
+ROOFLINE_NAIVE_ATTN: force the un-chunked attention reference so every
+attention flop/byte appears in XLA's cost_analysis (the chunked/flash paths
+hide work inside while-loops, which cost_analysis counts once).  The roofline
+builder then swaps the naive attention terms for analytic flash-kernel terms
+(benchmarks/roofline.py) — see DESIGN.md §3.
+"""
+
+ROOFLINE_NAIVE_ATTN = False
+
+# Replace the attention / SSD cores with identity passthroughs.  Used by the
+# perf analysis to ISOLATE each core's measured share of a cell's roofline
+# terms: core_cost = cell(naive) - cell(no_core); the Pallas kernel's
+# analytic cost is then substituted (EXPERIMENTS.md §Perf).
+ROOFLINE_NO_ATTN = False
+ROOFLINE_NO_SSD = False

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots GeNN optimizes.
+
+Each kernel module provides `<name>_pallas(...)` built from pl.pallas_call with
+explicit BlockSpec VMEM tiling. `ref.py` holds pure-jnp oracles, `ops.py` the
+jit'd dispatching wrappers (pallas on TPU / interpret for validation / jnp ref
+for dry-runs on CPU). `autotune.py` is the occupancy-based block-size model
+(the paper's Section 3 adapted to VMEM)."""

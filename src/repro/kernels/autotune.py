@@ -1,0 +1,161 @@
+"""Occupancy-based block-size determination, adapted from paper §3 to TPU.
+
+The paper picks CUDA block sizes by computing *occupancy* — resident warps per
+SM limited by four bottlenecks (threads, blocks/SM, shared memory, registers)
+— and choosing the smallest block size that still hides memory latency.
+
+TPU has no warps/SMs, but the same shape of reasoning applies to Pallas tiles:
+
+  bottleneck (CUDA)            ->  bottleneck (TPU / Pallas)
+  threads per block            ->  lane/sublane alignment (last dim % 128,
+                                   second-minor % 8 for f32, % 16 bf16)
+  shared memory per SM         ->  VMEM working set per grid step (incl. the
+                                   x2 for Mosaic's automatic double-buffering)
+  registers                    ->  VREGs; proxied by the per-block footprint
+  blocks per SM / grid width   ->  grid steps per TensorCore: enough grid
+                                   parallelism to hide HBM->VMEM latency
+
+`occupancy()` scores a candidate tile; `choose_block*` enumerate aligned
+candidates and pick the max-occupancy one (ties -> larger tile, fewer grid
+steps).  The same calculator drives every kernel in this package and is
+exported as a benchmark table (bench_occupancy_blocksize).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Sequence, Tuple
+
+__all__ = [
+    "TPULimits", "V5E", "occupancy", "choose_block_elementwise",
+    "choose_block_matmul", "occupancy_report",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPULimits:
+    """Per-core resource limits (v5e defaults)."""
+
+    vmem_bytes: int = 16 * 1024 * 1024     # usable VMEM per core
+    lane: int = 128                        # vector lane count
+    sublane_f32: int = 8                   # sublanes per vreg (f32)
+    mxu: int = 128                         # MXU systolic dim
+    min_grid_per_core: int = 2             # grid steps to overlap DMA/compute
+    double_buffer: int = 2                 # Mosaic pipelines in/out buffers
+
+
+V5E = TPULimits()
+
+
+def _align_penalty(shape: Tuple[int, ...], dtype_bytes: int,
+                   lim: TPULimits) -> float:
+    """1.0 when hardware-aligned, <1 when padding would waste lanes."""
+    if not shape:
+        return 1.0
+    last = shape[-1]
+    sub = shape[-2] if len(shape) >= 2 else 1
+    lane_eff = min(1.0, last / math.ceil(last / lim.lane) / lim.lane)
+    sublane_quota = lim.sublane_f32 * (4 // max(1, dtype_bytes))
+    sub_eff = min(1.0, sub / math.ceil(sub / sublane_quota) / sublane_quota)
+    return lane_eff * sub_eff
+
+
+def occupancy(
+    block_bytes: int, grid_steps: int, shapes: Sequence[Tuple[int, ...]],
+    dtype_bytes: int = 4, lim: TPULimits = V5E,
+) -> float:
+    """Occupancy in [0, 1]: how well this tiling hides memory latency.
+
+    block_bytes: total VMEM working set of ONE grid step (all operands+outputs)
+    grid_steps:  number of grid steps the kernel launches on this core
+    shapes:      per-operand block shapes (for alignment scoring)
+    """
+    need = block_bytes * lim.double_buffer
+    if need > lim.vmem_bytes:
+        return 0.0
+    # VMEM term: fraction of VMEM left as headroom counts *against* nothing,
+    # but being able to hold >=2 in-flight buffers is required (double_buffer)
+    # and >=2 grid steps are needed so DMA for step i+1 overlaps compute of i.
+    grid_term = min(1.0, grid_steps / lim.min_grid_per_core)
+    align_term = 1.0
+    for s in shapes:
+        align_term = min(align_term, _align_penalty(s, dtype_bytes, lim))
+    # Prefer tiles that use a healthy fraction of VMEM (big tiles amortize
+    # control overhead) without exceeding it — mirrors "enough resident
+    # warps" without "register spill".
+    util = need / lim.vmem_bytes
+    util_term = min(1.0, 0.25 + util)  # soft ramp; full credit at 75%+ usage
+    return grid_term * align_term * util_term
+
+
+def _pow2s(lo: int, hi: int):
+    v = lo
+    while v <= hi:
+        yield v
+        v *= 2
+
+
+def choose_block_elementwise(
+    n: int, arrays: int, dtype_bytes: int = 4, lim: TPULimits = V5E,
+) -> Tuple[int, int]:
+    """Tile a length-n elementwise op reshaped to (rows, 128).
+
+    Returns (block_rows, grid_steps). `arrays` counts ins+outs resident."""
+    rows = math.ceil(n / lim.lane)
+    best = (lim.sublane_f32, 1, -1.0)
+    for br in _pow2s(lim.sublane_f32, max(lim.sublane_f32, 1 << 14)):
+        if br > rows and br != lim.sublane_f32:
+            break
+        grid = math.ceil(rows / br)
+        bytes_ = br * lim.lane * dtype_bytes * arrays
+        occ = occupancy(bytes_, grid, [(br, lim.lane)], dtype_bytes, lim)
+        score = (occ, br)  # ties -> bigger block
+        if score > (best[2], best[0]):
+            best = (br, grid, occ)
+    return best[0], best[1]
+
+
+def choose_block_matmul(
+    m: int, n: int, k: int, dtype_bytes: int = 4, lim: TPULimits = V5E,
+    candidates: Sequence[int] = (128, 256, 512, 1024, 2048),
+) -> Dict[str, int]:
+    """Pick (bm, bn, bk) for a tiled matmul C[m,n] += A[m,k] B[k,n]."""
+    best = None
+    for bm in candidates:
+        if bm > max(m, lim.mxu):
+            continue
+        for bn in candidates:
+            if bn > max(n, lim.mxu):
+                continue
+            for bk in candidates:
+                if bk > max(k, lim.mxu):
+                    continue
+                blk = (bm * bk + bk * bn + bm * bn) * dtype_bytes
+                grid = (math.ceil(m / bm) * math.ceil(n / bn)
+                        * math.ceil(k / bk))
+                occ = occupancy(blk, grid, [(bm, bk), (bk, bn), (bm, bn)],
+                                dtype_bytes, lim)
+                # secondary objective: arithmetic intensity ~ 1/(1/bm+1/bn)
+                ai = 1.0 / (1.0 / bm + 1.0 / bn)
+                key = (occ, ai)
+                if best is None or key > best[0]:
+                    best = (key, {"bm": bm, "bn": bn, "bk": bk,
+                                  "occupancy": occ, "grid": grid})
+    assert best is not None
+    return best[1]
+
+
+def occupancy_report(lim: TPULimits = V5E) -> str:
+    """The paper-style block-size table (benchmarked in bench_occupancy)."""
+    lines = ["workload,block,grid,occupancy"]
+    for n in (1 << 12, 1 << 16, 1 << 20):
+        br, grid = choose_block_elementwise(n, arrays=6, lim=lim)
+        occ = occupancy(br * lim.lane * 4 * 6, grid, [(br, lim.lane)], 4, lim)
+        lines.append(f"elementwise_n={n},({br}x128),{grid},{occ:.3f}")
+    for m, n, k in ((512, 512, 512), (4096, 4096, 4096), (8192, 1024, 8192)):
+        cfg = choose_block_matmul(m, n, k, 2, lim)
+        lines.append(
+            f"matmul_{m}x{n}x{k},({cfg['bm']}x{cfg['bn']}x{cfg['bk']}),"
+            f"{cfg['grid']},{cfg['occupancy']:.3f}")
+    return "\n".join(lines)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: batched ELL sparse synaptic accumulation.
+
+This is the paper's GPU hot loop (sparse spike propagation) re-thought for
+TPU.  GeNN's CUDA kernel assigns one thread per (spike, synapse) and uses
+atomics into shared memory.  TPUs have neither per-lane scatter nor atomics;
+the idiomatic move is to turn the scatter into a *one-hot matmul* that runs on
+the MXU:
+
+    out[b, j] = sum_{i,k} spikes[b, i] * g[i, k] * [post_ind[i, k] == j]
+
+For a (pre-block x post-block) tile we build the one-hot matrix
+O[(i,k), j_local] in VMEM from the index tile and contract the spike tile
+against it.  The batch dimension B (the conductance-scaling sweep uses it for
+gScale candidates; the simulator for independent networks) makes the
+contraction a real matmul instead of a matvec.
+
+Grid layout: (post_blocks, pre_blocks) — pre is the minor (fastest) axis so
+each output tile stays resident in VMEM while all pre-blocks accumulate into
+it (revisiting pattern, init at pre_block==0).
+
+Block sizes come from repro.kernels.autotune (occupancy model, paper §3).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.autotune import V5E, TPULimits
+
+__all__ = ["ell_spmv_pallas", "default_blocks"]
+
+
+def _kernel(spk_ref, g_ref, idx_ref, out_ref, *, bn: int):
+    pb = pl.program_id(1)           # pre-block index (minor, accumulating)
+    jb = pl.program_id(0)           # post-block index
+
+    @pl.when(pb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    spk = spk_ref[...]              # [B, BP]
+    g = g_ref[...]                  # [BP, K]
+    idx = idx_ref[...]              # [BP, K] global post indices (int32)
+
+    bp, k = g.shape
+    m = bp * k
+    local = idx - jb * bn           # position inside this post tile
+    flat = local.reshape(m)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m, bn), 1)
+    onehot = (flat[:, None] == cols).astype(g.dtype) * g.reshape(m)[:, None]
+
+    # expand spikes along the K slots: S[b, (i,k)] = spk[b, i]
+    s = jnp.broadcast_to(spk[:, :, None], (spk.shape[0], bp, k)).reshape(
+        spk.shape[0], m)
+    out_ref[...] += jax.lax.dot_general(
+        s, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def default_blocks(n_pre: int, k: int, n_post: int, b: int,
+                   lim: TPULimits = V5E) -> tuple[int, int]:
+    """(pre_block, post_block) via the occupancy model: the one-hot tile
+    (BP*K x BN) f32 is the VMEM driver; keep 2x-buffered footprint under
+    budget and grid >= min_grid_per_core."""
+    bn = min(512, max(lim.lane, lim.lane * math.ceil(n_post / lim.lane)))
+    # shrink BN to fit; grow BP while the one-hot tile stays under ~4 MiB
+    bp = max(8, min(n_pre, 4 * 1024 * 1024 // max(1, k * bn * 4)))
+    bp = min(n_pre, 1 << (bp - 1).bit_length())  # round to pow2
+    while bp * k * bn * 4 > 6 * 1024 * 1024 and bp > 8:
+        bp //= 2
+    return bp, bn
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_post", "pre_block", "post_block", "interpret"))
+def ell_spmv_pallas(
+    g: jax.Array, post_ind: jax.Array, valid: jax.Array, spikes: jax.Array,
+    *, n_post: int, pre_block: int | None = None,
+    post_block: int | None = None, interpret: bool = False,
+) -> jax.Array:
+    """Batched ELL spmv on TPU.  g/post_ind/valid: [n_pre, K];
+    spikes: [B, n_pre] -> [B, n_post]."""
+    n_pre, k = g.shape
+    b = spikes.shape[0]
+    gm = jnp.where(valid, g, 0.0).astype(jnp.float32)
+
+    if pre_block is None or post_block is None:
+        dbp, dbn = default_blocks(n_pre, k, n_post, b)
+        pre_block = pre_block or dbp
+        post_block = post_block or dbn
+
+    # pad to block multiples (padded g rows are zero => no contribution;
+    # padded post columns are sliced off)
+    pp = math.ceil(n_pre / pre_block) * pre_block
+    pj = math.ceil(n_post / post_block) * post_block
+    if pp != n_pre:
+        pad = pp - n_pre
+        gm = jnp.pad(gm, ((0, pad), (0, 0)))
+        post_ind = jnp.pad(post_ind, ((0, pad), (0, 0)))
+        spikes = jnp.pad(spikes, ((0, 0), (0, pad)))
+
+    grid = (pj // post_block, pp // pre_block)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bn=post_block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, pre_block), lambda jb, pb: (0, pb)),
+            pl.BlockSpec((pre_block, k), lambda jb, pb: (pb, 0)),
+            pl.BlockSpec((pre_block, k), lambda jb, pb: (pb, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, post_block), lambda jb, pb: (0, jb)),
+        out_shape=jax.ShapeDtypeStruct((b, pj), jnp.float32),
+        interpret=interpret,
+    )(spikes.astype(jnp.float32), gm, post_ind.astype(jnp.int32))
+    return out[:, :n_post]

@@ -1,0 +1,198 @@
+"""Flash attention in plain XLA with a flash-style custom VJP.
+
+Forward: online-softmax over k-chunks (lax.scan) inside a lax.map over
+q-chunks — O(qc * kc) temporaries.  Backward: recomputes per-block
+probabilities from saved (q, k, v, o, lse) instead of storing scan residuals
+(plain autodiff through the chunked forward saves every block's probability
+tensor — tens of GB per layer at 4k+ context, defeating the point of
+chunking).  This mirrors exactly what the Pallas/TPU flash kernel does in its
+backward, so dry-run memory numbers are representative of the real kernel.
+
+Semantics identical to kernels.ref.flash_attention_ref (GQA, causal, window,
+softcap, prefix, q_offset).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_xla"]
+
+
+def _mask(qpos, kpos, causal, window, prefix):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        cm = kpos[None, :] <= qpos[:, None]
+        if prefix is not None:
+            cm |= (kpos[None, :] < prefix) & (qpos[:, None] < prefix)
+        m &= cm
+    if window is not None:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+def _chunks(t, pref, maximum):
+    c = min(pref, t, maximum)
+    while t % c:
+        c //= 2
+    return c
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+def flash_attention_xla(q, k, v, causal=True, window=None, scale=None,
+                        q_offset=0, softcap=None, prefix=None,
+                        q_chunk=512, k_chunk=1024):
+    out, _ = _fwd_impl(q, k, v, causal, window, scale, q_offset, softcap,
+                       prefix, q_chunk, k_chunk)
+    return out
+
+
+def _fwd_impl(q, k, v, causal, window, scale, q_offset, softcap, prefix,
+              q_chunk, k_chunk):
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    tk = k.shape[2]
+    s = scale if scale is not None else 1.0 / math.sqrt(d)
+    qc = _chunks(tq, q_chunk, tq)
+    kc = _chunks(tk, k_chunk, tk)
+    nq, nk = tq // qc, tk // kc
+
+    qg = jnp.moveaxis(q.reshape(b, hkv, rep, nq, qc, d), 3, 0)
+    kg = k.reshape(b, hkv, nk, kc, d)
+    vg = v.reshape(b, hkv, nk, kc, d)
+    kpos_all = jnp.arange(tk).reshape(nk, kc)
+
+    def do_q(args):
+        qi, qblk = args
+        qpos = qi * qc + jnp.arange(qc) + q_offset
+
+        def body(carry, inp):
+            m, l, acc = carry
+            kblk, vblk, kpos = inp
+            logits = jnp.einsum("bgrqd,bgkd->bgrqk", qblk, kblk,
+                                preferred_element_type=jnp.float32) * s
+            if softcap is not None:
+                logits = softcap * jnp.tanh(logits / softcap)
+            msk = _mask(qpos, kpos, causal, window, prefix)
+            logits = jnp.where(msk[None, None, None], logits, -jnp.inf)
+            m_new = jnp.maximum(m, logits.max(-1))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.where(msk[None, None, None],
+                          jnp.exp(logits - m_safe[..., None]), 0.0)
+            alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, rep, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, rep, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, rep, qc, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(kg, 2, 0), jnp.moveaxis(vg, 2, 0), kpos_all))
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        lse = jnp.where(jnp.isneginf(m), -jnp.inf,
+                        m + jnp.log(jnp.maximum(l, 1e-37)))
+        return out, lse
+
+    outs, lses = jax.lax.map(do_q, (jnp.arange(nq), qg))
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, hq, tq, d).astype(q.dtype)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, hq, tq)   # [b,hq,tq] f32
+    return out, lse
+
+
+def _fwd(q, k, v, causal, window, scale, q_offset, softcap, prefix,
+         q_chunk, k_chunk):
+    out, lse = _fwd_impl(q, k, v, causal, window, scale, q_offset, softcap,
+                         prefix, q_chunk, k_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, window, scale, q_offset, softcap, prefix, q_chunk, k_chunk,
+         res, g):
+    q, k, v, out, lse = res
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    tk = k.shape[2]
+    s = scale if scale is not None else 1.0 / math.sqrt(d)
+    qc = _chunks(tq, q_chunk, tq)
+    kc = _chunks(tk, k_chunk, tk)
+    nq, nk = tq // qc, tk // kc
+
+    gf = g.astype(jnp.float32)
+    # delta[b,h,q] = rowsum(dO * O)
+    delta = jnp.sum(gf * out.astype(jnp.float32), axis=-1)
+
+    qg = jnp.moveaxis(q.reshape(b, hkv, rep, nq, qc, d), 3, 0)
+    gg = jnp.moveaxis(gf.reshape(b, hkv, rep, nq, qc, d), 3, 0)
+    lseg = jnp.moveaxis(lse.reshape(b, hkv, rep, nq, qc), 3, 0)
+    dg = jnp.moveaxis(delta.reshape(b, hkv, rep, nq, qc), 3, 0)
+    kg = k.reshape(b, hkv, nk, kc, d)
+    vg = v.reshape(b, hkv, nk, kc, d)
+    kpos_all = jnp.arange(tk).reshape(nk, kc)
+
+    def do_q(carry, args):
+        dk_tot, dv_tot = carry
+        qi, qblk, gblk, lseblk, dblk = args
+        qpos = qi * qc + jnp.arange(qc) + q_offset
+
+        def body(dq_acc, inp):
+            kblk, vblk, kpos = inp
+            raw = jnp.einsum("bgrqd,bgkd->bgrqk", qblk, kblk,
+                             preferred_element_type=jnp.float32) * s
+            if softcap is not None:
+                capped = softcap * jnp.tanh(raw / softcap)
+            else:
+                capped = raw
+            msk = _mask(qpos, kpos, causal, window, prefix)
+            lse_safe = jnp.where(jnp.isneginf(lseblk), 0.0, lseblk)
+            p = jnp.where(msk[None, None, None],
+                          jnp.exp(capped - lse_safe[..., None]), 0.0)
+            dv_blk = jnp.einsum("bgrqk,bgrqd->bgkd", p, gblk,
+                                preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bgrqd,bgkd->bgrqk", gblk, vblk,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dblk[..., None])
+            if softcap is not None:
+                # d(capped)/d(raw) = sech^2 = 1 - tanh^2
+                th = jnp.tanh(raw / softcap)
+                ds = ds * (1.0 - th * th)
+            ds = ds * s
+            dq_blk = jnp.einsum("bgrqk,bgkd->bgrqd", ds, kblk,
+                                preferred_element_type=jnp.float32)
+            dk_blk = jnp.einsum("bgrqk,bgrqd->bgkd", ds, qblk,
+                                preferred_element_type=jnp.float32)
+            return dq_acc + dq_blk, (dk_blk, dv_blk)
+
+        dq0 = jnp.zeros((b, hkv, rep, qc, d), jnp.float32)
+        dq_blk, (dk_blks, dv_blks) = jax.lax.scan(
+            body, dq0,
+            (jnp.moveaxis(kg, 2, 0), jnp.moveaxis(vg, 2, 0), kpos_all))
+        # [nk, b, g, kc, d] -> [b, g, tk, d], accumulated across q-chunks
+        dk_tot = dk_tot + jnp.moveaxis(dk_blks, 0, 2).reshape(
+            b, hkv, tk, d)
+        dv_tot = dv_tot + jnp.moveaxis(dv_blks, 0, 2).reshape(
+            b, hkv, tk, d)
+        return (dk_tot, dv_tot), dq_blk
+
+    dk0 = jnp.zeros((b, hkv, tk, d), jnp.float32)
+    dv0 = jnp.zeros((b, hkv, tk, d), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(
+        do_q, (dk0, dv0), (jnp.arange(nq), qg, gg, lseg, dg))
+    # dq: [nq, b, g, r, qc, d] -> [b, hq, tq, d]
+    dq = jnp.moveaxis(dqs, 0, 3).reshape(b, hq, tq, d).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_xla.defvjp(_fwd, _bwd)

@@ -1,0 +1,136 @@
+"""Jit'd dispatching wrappers around the Pallas kernels.
+
+Dispatch policy (see DESIGN.md §3):
+  REPRO_USE_PALLAS=1          -> compiled Pallas kernels (real TPU)
+  REPRO_USE_PALLAS=interpret  -> Pallas interpret mode (CPU validation)
+  unset/0                     -> pure-jnp reference (CPU dry-runs, rooflines)
+
+The public functions keep one signature regardless of backend so the rest of
+the system never branches.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+__all__ = [
+    "backend", "use_pallas", "ell_spmv", "ell_spmv_batched",
+    "izhikevich_step", "hh_step", "flash_attention", "ssd_scan",
+]
+
+
+def backend() -> str:
+    v = os.environ.get("REPRO_USE_PALLAS", "0").lower()
+    if v in ("1", "true", "tpu"):
+        return "pallas"
+    if v == "interpret":
+        return "interpret"
+    return "ref"
+
+
+def use_pallas() -> bool:
+    return backend() != "ref"
+
+
+# -- sparse synaptic accumulation -------------------------------------------
+
+def ell_spmv_batched(ell, spikes: jax.Array) -> jax.Array:
+    """spikes [B, n_pre] -> currents [B, n_post]."""
+    be = backend()
+    if be == "ref":
+        return _ref.ell_spmv_ref(ell.g, ell.post_ind, ell.valid, spikes,
+                                 ell.n_post)
+    from repro.kernels.ell_spmv import ell_spmv_pallas
+    return ell_spmv_pallas(ell.g, ell.post_ind, ell.valid, spikes,
+                           n_post=ell.n_post,
+                           interpret=(be == "interpret"))
+
+
+def ell_spmv(ell, spikes: jax.Array) -> jax.Array:
+    """spikes [n_pre] -> currents [n_post]."""
+    return ell_spmv_batched(ell, spikes[None, :])[0]
+
+
+# -- fused neuron updates -----------------------------------------------------
+
+def izhikevich_step(v, u, isyn, a, b, c, d, dt: float):
+    be = backend()
+    if be == "ref":
+        return _ref.izhikevich_step_ref(v, u, isyn, a, b, c, d, dt)
+    from repro.kernels.izhikevich_step import izhikevich_step_pallas
+    n = v.shape[0]
+    bcast = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n,))
+    return izhikevich_step_pallas(
+        v, u, isyn, bcast(a), bcast(b), bcast(c), bcast(d), dt=dt,
+        interpret=(be == "interpret"))
+
+
+def hh_step(v, m, h, n, isyn, dt: float, **params):
+    be = backend()
+    if be == "ref":
+        return _ref.hh_step_ref(v, m, h, n, isyn, dt, **params)
+    from repro.kernels.hh_step import hh_step_pallas
+    return hh_step_pallas(v, m, h, n, isyn, dt=dt,
+                          interpret=(be == "interpret"), **params)
+
+
+# -- LM kernels ---------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None, q_offset: int = 0,
+                    softcap: Optional[float] = None,
+                    prefix: Optional[int] = None):
+    from repro import flags
+    be = backend()
+    if flags.ROOFLINE_NO_ATTN:
+        # identity-shaped stand-in: costs of projections remain, core gone
+        rep = q.shape[1] // k.shape[1]
+        return q * (scale or 1.0) + jnp.repeat(v, rep, axis=1).mean(
+            axis=2, keepdims=True)
+    if flags.ROOFLINE_NAIVE_ATTN:
+        return _ref.flash_attention_ref(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, softcap=softcap, prefix=prefix)
+    if isinstance(window, jax.core.Tracer):
+        # traced window (not produced by the built-in archs): masked XLA path
+        return _ref.flash_attention_xla(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, softcap=softcap, prefix=prefix)
+    if be == "ref":
+        if q.shape[2] * k.shape[2] <= 1024 * 1024:
+            return _ref.flash_attention_ref(
+                q, k, v, causal=causal, window=window, scale=scale,
+                q_offset=q_offset, softcap=softcap, prefix=prefix)
+        from repro.kernels.flash_xla import flash_attention_xla
+        return flash_attention_xla(q, k, v, causal, window, scale,
+                                   q_offset, softcap, prefix)
+    if prefix is not None:
+        # prefix-LM masking not in the Pallas kernel (VLM prefill only)
+        return _ref.flash_attention_xla(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, softcap=softcap, prefix=prefix)
+    from repro.kernels.flash_attention import flash_attention_pallas
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, softcap=softcap,
+        interpret=(be == "interpret"))
+
+
+def ssd_scan(x, dt, A, B, C, D=None):
+    from repro import flags
+    if flags.ROOFLINE_NO_SSD:
+        return x * dt[..., None] + C.mean(axis=(2, 3))[..., None, None]
+    be = backend()
+    if be == "ref":
+        from repro.models.ssm import ssd_chunked  # chunked jnp (production)
+        return ssd_chunked(x, dt, A, B, C, D)
+    from repro.kernels.ssd_scan import ssd_scan_pallas
+    return ssd_scan_pallas(x, dt, A, B, C, D,
+                           interpret=(be == "interpret"))

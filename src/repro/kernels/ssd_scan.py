@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+Same algorithm as models.ssm.ssd_chunked, tiled for VMEM: grid
+(batch, head_blocks, chunks) with the chunk axis minor so the inter-chunk
+SSM state [hb, ds, dh] persists in VMEM scratch across the sequential chunk
+sweep (the recurrence), while the intra-chunk work is the quadratic "dual
+form" — two MXU matmuls per chunk — exactly the paper-style reformulation of
+a sparse/sequential computation into dense blocked compute.
+
+Supports n_groups == 1 (all built-in SSM archs); head blocks must divide
+n_heads.  Validated in interpret mode against kernels.ref.ssd_scan_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_pallas"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_scr,
+            *, q: int, hb: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # [q, hb, dh]
+    dt = dt_ref[0].astype(jnp.float32)      # [q, hb]
+    A = a_ref[...].astype(jnp.float32)      # [hb]
+    Bm = b_ref[0, :, 0].astype(jnp.float32)  # [q, ds]
+    Cm = c_ref[0, :, 0].astype(jnp.float32)  # [q, ds]
+    D = d_ref[...].astype(jnp.float32)      # [hb]
+
+    la = dt * A[None, :]                    # [q, hb] (negative)
+    cum = jnp.cumsum(la, axis=0)            # [q, hb]
+
+    # intra-chunk dual form
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [q, q]
+    diff = cum[:, None, :] - cum[None, :, :]            # [q(i), q(j), hb]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tril = (jj <= ii)[:, :, None]
+    att = jnp.where(tril, cb[:, :, None] * jnp.exp(diff), 0.0)
+    att = att * dt[None, :, :]                          # weight by dt_j
+    y_intra = jnp.einsum("ijh,jhd->ihd", att, x,
+                         preferred_element_type=jnp.float32)
+
+    # inter-chunk from carried state
+    state = state_scr[...]                              # [hb, ds, dh]
+    y_inter = jnp.einsum("is,hsd->ihd", Cm, state,
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)[:, :, None]
+
+    y = y_intra + y_inter + x * D[None, :, None]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update
+    total = cum[-1]                                     # [hb]
+    w = jnp.exp(total[None, :] - cum) * dt              # [q, hb]
+    s_c = jnp.einsum("js,jhd,jh->hsd", Bm, x, w,
+                     preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(total)[:, None, None] + s_c
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block",
+                                             "interpret"))
+def ssd_scan_pallas(x, dt, A, B, C, D=None, *, chunk: int = 256,
+                    head_block: int | None = None,
+                    interpret: bool = False):
+    """Shapes as ssd_scan_ref: x [b,t,h,dh], dt [b,t,h], A [h],
+    B/C [b,t,1,ds] -> y [b,t,h,dh].  n_groups must be 1."""
+    b, t, h, dh = x.shape
+    g, ds = B.shape[2], B.shape[3]
+    if g != 1:
+        raise NotImplementedError("ssd_scan_pallas supports n_groups == 1")
+    q = min(chunk, t)
+    while t % q:
+        q //= 2
+    nc = t // q
+    hb = head_block or min(8, h)
+    while h % hb:
+        hb //= 2
+    nh = h // hb
+
+    if D is None:
+        D = jnp.zeros((h,), jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, q=q, hb=hb),
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, hb, dh), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, hb), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((hb,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, q, 1, ds), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, q, 1, ds), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((hb,), lambda bi, hi, ci: (hi,)),
+        ],
+        out_specs=pl.BlockSpec((1, q, hb, dh),
+                               lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, dh), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hb, ds, dh), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32), jnp.asarray(A, jnp.float32),
+      B.astype(jnp.float32), C.astype(jnp.float32),
+      jnp.asarray(D, jnp.float32))
+    return out

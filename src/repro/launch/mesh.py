@@ -1,0 +1,59 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — "pod" is an
+outer data/FSDP axis crossing the inter-pod (DCN/ICI) links.
+
+Functions, not module constants: importing this module must never touch JAX
+device state (device count is locked at first backend init; the dry-run sets
+XLA_FLAGS before importing anything).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "batch_axes",
+           "MeshPlan"]
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / CPU runs)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Axes the global batch (and FSDP shards) ride on."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+class MeshPlan:
+    """Mesh + axis bookkeeping passed through launch entry points."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self.batch = batch_axes(mesh)
+        self.model = "model" if "model" in mesh.axis_names else None
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.devices.size
+
+    def __repr__(self) -> str:
+        axes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return f"MeshPlan({axes})"

@@ -1,0 +1,204 @@
+"""Sharding rules: param/optimizer/batch/cache PartitionSpecs per mesh.
+
+Strategy (DESIGN.md §3): tensor parallelism over "model", FSDP (ZeRO-3-style
+parameter + optimizer sharding) over the batch axes ("data" or
+("pod","data")).  Rules are *candidate* axes per trailing dim of each leaf;
+allocation is greedy with divisibility + no-axis-reuse checks, so one rule
+set serves every architecture (e.g. granite's 32 experts take the model axis,
+mixtral's 8 leave it to the per-expert ffn dim automatically).
+
+`activate(mesh)` binds the logical-axis env used by in-model
+with_sharding_constraint calls (repro.models.layers.shard).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+from repro.models.layers import clear_axis_env, set_axis_env
+
+__all__ = ["activate", "param_specs", "param_shardings", "batch_specs",
+           "cache_shardings", "spec_tree_to_shardings"]
+
+
+@contextlib.contextmanager
+def activate(mesh):
+    """Bind logical axes for in-model sharding constraints."""
+    ba = batch_axes(mesh)
+    bs = math.prod(mesh.shape[a] for a in ba) if ba else 1
+    ms = mesh.shape.get("model", 1)
+    set_axis_env(ba, "model", bs, ms)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        clear_axis_env()
+
+
+# --------------------------------------------------------------------------
+# rule table: path-regex -> candidate axes for the trailing dims.
+# "fsdp" = the batch axes tuple; "model" = the model axis; None = replicated.
+# Leading (stack) dims not covered by a rule are never sharded.
+# --------------------------------------------------------------------------
+_RULES: List[Tuple[str, List[Optional[str]]]] = [
+    # order matters: first match wins; rules align to TRAILING dims so layer
+    # stacks ([R, n, ...]) never shard their stack dims.
+    (r"moe/(w_gate|w_up)$",       ["model", "fsdp", "model"]),  # [E, d, f]
+    (r"moe/w_out$",               ["model", "model", "fsdp"]),  # [E, f, d]
+    (r"moe/router$",              ["fsdp", None]),              # [d, E]
+    (r"embed$",                   ["model", "fsdp"]),     # [V, d]
+    (r"lm_head$",                 ["fsdp", "model"]),     # [d, V]
+    (r"img_proj$",                [None, "fsdp"]),        # [1152, d]
+    (r"pos_embed$",               [None, "fsdp"]),        # [Ta, d]
+    (r"(wq|wk|wv)$",              ["fsdp", "model"]),     # [d, H*hd]
+    (r"wo$",                      ["model", "fsdp"]),     # [H*hd, d]
+    (r"(bq|bk|bv)$",              ["model"]),             # [H*hd]
+    (r"ssm/w_in$",                ["fsdp", "model"]),
+    (r"ssm/w_out$",               ["model", "fsdp"]),
+    (r"(w_gate|w_up|w_in)$",      ["fsdp", "model"]),     # dense MLP [d, f]
+    (r"w_out$",                   ["model", "fsdp"]),     # dense MLP [f, d]
+    (r"conv_w$",                  [None, "model"]),       # [4, conv_dim]
+    (r"conv_b$",                  ["model"]),
+    (r"(dt_bias|A_log|D)$",       ["model"]),
+    (r"norm_scale$",              ["model"]),             # [d_inner]
+    (r"(scale|bias)$",            [None]),                # norms
+]
+
+
+def _leaf_path(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _alloc(shape: Tuple[int, ...], cands: List[Optional[str]],
+           mesh) -> P:
+    """Greedy allocation of candidate axes to the trailing dims of shape."""
+    ba = batch_axes(mesh)
+    bsz = math.prod(mesh.shape[a] for a in ba) if ba else 1
+    msz = mesh.shape.get("model", 1)
+    ndim = len(shape)
+    k = len(cands)
+    cands = list(cands)
+    if k > ndim:
+        cands = cands[k - ndim:]
+        k = ndim
+    spec: List[Any] = [None] * ndim
+    used = set()
+    for j, cand in enumerate(cands):
+        dim = ndim - k + j
+        size = shape[dim]
+        if cand == "fsdp":
+            if ba and "fsdp" not in used and size % bsz == 0:
+                spec[dim] = ba if len(ba) > 1 else ba[0]
+                used.add("fsdp")
+        elif cand == "model":
+            if "model" in mesh.axis_names and "model" not in used \
+                    and size % msz == 0:
+                spec[dim] = "model"
+                used.add("model")
+    return P(*spec)
+
+
+def param_specs(params, mesh):
+    """PartitionSpec pytree for a parameter tree."""
+
+    def spec_of(path, leaf):
+        p = _leaf_path(path)
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        for pat, cands in _RULES:
+            if re.search(pat, p):
+                return _alloc(leaf.shape, cands, mesh)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def spec_tree_to_shardings(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(params, mesh):
+    return spec_tree_to_shardings(param_specs(params, mesh), mesh)
+
+
+def batch_specs(batch, mesh):
+    """Shard the leading (batch) dim of every batch leaf on the batch axes."""
+    ba = batch_axes(mesh)
+    bsz = math.prod(mesh.shape[a] for a in ba) if ba else 1
+
+    def spec_of(leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % bsz == 0:
+            return P(ba if len(ba) > 1 else ba[0],
+                     *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec_of, batch)
+
+
+def cache_shardings(caches, mesh):
+    """KV caches: batch dim on batch axes when divisible, else shard the
+    sequence dim (long-context batch=1 decode); kv feature dims on model
+    when divisible.  SSM states: batch then heads."""
+    ba = batch_axes(mesh)
+    bsz = math.prod(mesh.shape[a] for a in ba) if ba else 1
+    msz = mesh.shape.get("model", 1)
+    ba_spec = ba if len(ba) > 1 else (ba[0] if ba else None)
+
+    def spec_of(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        p = _leaf_path(path)
+        shape = leaf.shape
+        name = p.rsplit("/", 1)[-1]
+        nd = leaf.ndim
+        spec: List[Any] = [None] * nd
+        if name in ("k", "v") and nd >= 4:
+            # [..., B, S, kv, hd] with possible leading stack dims
+            b_dim, s_dim, kv_dim = nd - 4, nd - 3, nd - 2
+            if shape[b_dim] % bsz == 0 and ba:
+                spec[b_dim] = ba_spec
+            elif shape[s_dim] % bsz == 0 and ba:
+                spec[s_dim] = ba_spec
+            if shape[kv_dim] % msz == 0:
+                spec[kv_dim] = "model"
+            elif spec[s_dim] is None and shape[s_dim] % msz == 0:
+                # kv heads don't divide the model axis (most GQA archs):
+                # shard the sequence dim instead — attention against the
+                # cache becomes a partial-softmax contraction + reduce
+                # (flash-decoding), which GSPMD emits automatically, and
+                # the cache memory actually scales with the mesh.
+                spec[s_dim] = "model"
+        elif name == "ssd" and nd >= 4:
+            b_dim, h_dim = nd - 4, nd - 3
+            if shape[b_dim] % bsz == 0 and ba:
+                spec[b_dim] = ba_spec
+            if shape[h_dim] % msz == 0:
+                spec[h_dim] = "model"
+        elif name == "conv" and nd >= 3:
+            b_dim, c_dim = nd - 3, nd - 1
+            if shape[b_dim] % bsz == 0 and ba:
+                spec[b_dim] = ba_spec
+            if shape[c_dim] % msz == 0:
+                spec[c_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(spec_of, caches)

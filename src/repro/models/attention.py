@@ -1,0 +1,240 @@
+"""Attention: GQA/MQA/MHA with RoPE, qk-norm, bias, sliding windows, caches.
+
+The sliding-window path is the GeNN tie-in (DESIGN.md §4): the position ->
+position attention pattern is a *synapse connectivity matrix*; a window makes
+it banded-sparse, and we pick the representation (windowed kernel + ring
+buffer cache vs dense cache) with the paper's eq(1)/(2) memory model
+(`window_cache_elements` vs `dense_cache_elements`).
+
+Two entry points:
+  attention_forward : full-sequence (training / prefill), uses
+                      kernels.ops.flash_attention (Pallas on TPU, ref on CPU)
+  attention_decode  : one-token step against a KV cache (dense or ring)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import (apply_rope, dense_init, norm_apply,
+                                 norm_init, rmsnorm, shard)
+
+__all__ = [
+    "AttnConfig", "attn_init", "attention_forward", "attention_decode",
+    "init_cache", "window_cache_elements", "dense_cache_elements",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    window: Optional[int] = None         # sliding window (None = full)
+    causal: bool = True
+    softcap: Optional[float] = None      # logit soft-capping (gemma-style)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv * self.head_dim
+
+
+def attn_init(key: jax.Array, cfg: AttnConfig, dtype=jnp.float32,
+              std: Optional[float] = None):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], d, cfg.q_dim, std, dtype),
+        "wk": dense_init(ks[1], d, cfg.kv_dim, std, dtype),
+        "wv": dense_init(ks[2], d, cfg.kv_dim, std, dtype),
+        "wo": dense_init(ks[3], cfg.q_dim, d, std, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init("rmsnorm", cfg.head_dim, dtype)
+        p["k_norm"] = norm_init("rmsnorm", cfg.head_dim, dtype)
+    return p
+
+
+def _project_qkv(p, cfg: AttnConfig, x: jax.Array, positions: jax.Array):
+    b, t, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, t, cfg.n_kv, cfg.head_dim)
+    v = v.reshape(b, t, cfg.n_kv, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"]["scale"])
+        k = rmsnorm(k, p["k_norm"]["scale"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_forward(
+    p, cfg: AttnConfig, x: jax.Array,
+    positions: Optional[jax.Array] = None,
+    window: Optional[jax.Array] = None,     # overrides cfg.window (traced ok)
+    kv: Optional[tuple] = None,             # cross-attention source (k, v)
+    return_kv: bool = False,
+    prefix: Optional[int] = None,           # prefix-LM bidirectional span
+):
+    """x: [B, T, d] -> [B, T, d].  Full-sequence attention."""
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t)
+    if kv is None:
+        q, k, v = _project_qkv(p, cfg, x, positions)
+    else:
+        q = (x @ p["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        if cfg.qkv_bias:
+            q = q + p["bq"].reshape(cfg.n_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = rmsnorm(q, p["q_norm"]["scale"])
+        k, v = kv
+
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+
+    eff_window = window if window is not None else cfg.window
+    out = kops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=cfg.causal, window=eff_window,
+        scale=1.0 / math.sqrt(cfg.head_dim), softcap=cfg.softcap,
+        prefix=prefix)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
+    out = shard(out, "batch", None, "heads")
+    y = out @ p["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# KV caches.  Dense cache: [B, S, n_kv, D].  Ring cache (window layers):
+# [B, W, n_kv, D] plus a position buffer [B?, W] (positions identical across
+# batch; stored [W]).  Representation choice follows the paper's memory model.
+# ---------------------------------------------------------------------------
+
+def dense_cache_elements(seq: int, n_kv: int, head_dim: int) -> int:
+    return 2 * seq * n_kv * head_dim
+
+
+def window_cache_elements(window: int, n_kv: int, head_dim: int) -> int:
+    return 2 * window * n_kv * head_dim + window  # + position ring
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    """Choose ring vs dense per the paper's memory model."""
+    use_ring = (cfg.window is not None and window_cache_elements(
+        cfg.window, cfg.n_kv, cfg.head_dim) < dense_cache_elements(
+        max_seq, cfg.n_kv, cfg.head_dim))
+    s = cfg.window if use_ring else max_seq
+    return {
+        "k": jnp.zeros((batch, s, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, s, cfg.n_kv, cfg.head_dim), dtype),
+        "pos": jnp.full((s,), -1, jnp.int32),   # absolute positions
+        "ring": jnp.asarray(use_ring),
+    }
+
+
+def fill_cache(cache, k: jax.Array, v: jax.Array, start: int = 0):
+    """Prefill: write [B, T, kv, D] into the cache at [start, start+T)."""
+    t = k.shape[1]
+    s = cache["k"].shape[1]
+    if t >= s:  # ring smaller than prefill: keep the last s positions
+        ks, vs = k[:, -s:], v[:, -s:]
+        pos = jnp.arange(t - s, t, dtype=jnp.int32) + start
+        return {**cache, "k": ks.astype(cache["k"].dtype),
+                "v": vs.astype(cache["v"].dtype), "pos": pos}
+    kc = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
+    vc = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
+    pos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.arange(t, dtype=jnp.int32) + start, (start,))
+    return {**cache, "k": kc, "v": vc, "pos": pos}
+
+
+def attention_decode(
+    p, cfg: AttnConfig, x: jax.Array, cache, index: jax.Array,
+    cross: bool = False,
+):
+    """One-token step.  x: [B, 1, d]; index: absolute position (scalar).
+    Returns (y [B,1,d], new_cache)."""
+    b = x.shape[0]
+    pos1 = jnp.full((b, 1), index, jnp.int32)
+
+    q = (x @ p["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"]["scale"])
+
+    if cross:
+        # cross-attention: cache holds encoder KV; no insert, no rope.
+        k, v, kpos = cache["k"], cache["v"], cache["pos"]
+        new_cache = cache
+    else:
+        q = apply_rope(q, pos1, cfg.rope_theta)
+        k1 = (x @ p["wk"]).reshape(b, 1, cfg.n_kv, cfg.head_dim)
+        v1 = (x @ p["wv"]).reshape(b, 1, cfg.n_kv, cfg.head_dim)
+        if cfg.qkv_bias:
+            k1 = k1 + p["bk"].reshape(cfg.n_kv, cfg.head_dim)
+            v1 = v1 + p["bv"].reshape(cfg.n_kv, cfg.head_dim)
+        if cfg.qk_norm:
+            k1 = rmsnorm(k1, p["k_norm"]["scale"])
+        k1 = apply_rope(k1, pos1, cfg.rope_theta)
+        s = cache["k"].shape[1]
+        slot = jnp.where(cache["ring"], index % s, jnp.minimum(index, s - 1))
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k1.astype(cache["k"].dtype), (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v1.astype(cache["v"].dtype), (0, slot, 0, 0))
+        kpos = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.full((1,), index, jnp.int32), (slot,))
+        new_cache = {**cache, "k": kc, "v": vc, "pos": kpos}
+        k, v = kc, vc
+
+    # masked attention of 1 query vs cache — grouped einsum, never
+    # materializing the GQA-repeated cache (that repeat is O(S*H*D) HBM).
+    rep = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(b, cfg.n_kv, rep, cfg.head_dim)
+    logits = jnp.einsum("bgrd,bsgd->bgrs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(cfg.head_dim)
+    if cfg.softcap is not None:
+        logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+    valid = kpos >= 0
+    if not cross:
+        valid = valid & (kpos <= index)
+        if cfg.window is not None:
+            valid = valid & (kpos > index - cfg.window)
+    logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    y = out.reshape(b, 1, cfg.q_dim).astype(x.dtype) @ p["wo"]
+    return y, new_cache

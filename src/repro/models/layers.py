@@ -1,0 +1,199 @@
+"""Shared building blocks for the LM family (pure-functional, no flax).
+
+Params are nested dicts of jnp arrays.  Activation sharding hints go through
+`shard()`, which resolves logical axes ("batch", "seq", "model_d", "heads",
+"ffn", "vocab", "experts") against the active mesh axes set by
+repro.launch.sharding.activate() — identity when no mesh is active, so the
+same model code runs in unit tests, dry-runs and real launches.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# logical-axis resolution (set by repro.launch.sharding.activate()).
+# Divisibility-aware: a logical axis is silently dropped for a tensor dim the
+# mesh axis does not divide (e.g. 8 mixtral experts on a 16-way model axis,
+# batch=1 long-context decode) — the same graceful degradation GSPMD applies,
+# but decided here so constraints never force padded shardings.
+# ---------------------------------------------------------------------------
+_AXIS_ENV: dict = {
+    "active": False, "batch": None, "model": None,
+    "batch_size": 1, "model_size": 1,
+}
+
+
+def set_axis_env(batch_axes, model_axis, batch_size: int = 1,
+                 model_size: int = 1) -> None:
+    _AXIS_ENV.update(active=True, batch=batch_axes, model=model_axis,
+                     batch_size=batch_size, model_size=model_size)
+
+
+def clear_axis_env() -> None:
+    _AXIS_ENV.update(active=False, batch=None, model=None,
+                     batch_size=1, model_size=1)
+
+
+_LOGICAL = {
+    "batch": "batch", "heads": "model", "ffn": "model", "vocab": "model",
+    "experts": "model", "kv_heads": "model", "model_d": None, "seq": None,
+}
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axis names (None = replicated)."""
+    if not _AXIS_ENV["active"]:
+        return x
+    spec = []
+    for i, name in enumerate(logical):
+        dim = x.shape[i] if i < x.ndim else 0
+        if name is None:
+            spec.append(None)
+        elif name == "batch":
+            if _AXIS_ENV["batch"] and dim % max(1, _AXIS_ENV["batch_size"]) == 0:
+                spec.append(_AXIS_ENV["batch"])
+            else:
+                spec.append(None)
+        elif _LOGICAL.get(name) == "model" and _AXIS_ENV["model"] \
+                and dim % max(1, _AXIS_ENV["model_size"]) == 0:
+            spec.append(_AXIS_ENV["model"])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# initializers (fan-in scaling policy from the paper — core/scaling.py)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, fan_in: int, fan_out: int, std: Optional[float] = None,
+               dtype=jnp.float32) -> jax.Array:
+    std = std if std is not None else 1.0 / math.sqrt(fan_in)
+    return (std * jax.random.normal(key, (fan_in, fan_out))).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(kind: str, x, p):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: [B, T, H, D]; positions: [B, T] or [T]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, T, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, gated: bool, dtype=jnp.float32,
+             std_in: Optional[float] = None, std_out: Optional[float] = None):
+    ks = jax.random.split(key, 3)
+    p = {"w_out": dense_init(ks[2], f, d, std_out, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[0], d, f, std_in, dtype)
+        p["w_up"] = dense_init(ks[1], d, f, std_in, dtype)
+    else:
+        p["w_in"] = dense_init(ks[0], d, f, std_in, dtype)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, activation: str = "silu") -> jax.Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+           "gelu_tanh": lambda v: jax.nn.gelu(v, approximate=True),
+           "relu": jax.nn.relu}[activation]
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = act(x @ p["w_in"])
+    h = shard(h, "batch", None, "ffn")
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1,
+                  true_vocab: Optional[int] = None) -> jax.Array:
+    """Mean CE over non-ignored tokens; logits [.., V], labels [..].
+
+    Partition-friendly: no take_along_axis (GSPMD implements gathers from a
+    vocab-sharded operand with a full all-gather — an unsharded f32 logits
+    copy per device).  The label term is an iota-mask reduce instead, and
+    padded vocab entries (vocab rounded up for even model-axis sharding) are
+    masked to -inf.  Every reduction partitions over the sharded vocab dim.
+    """
+    v = logits.shape[-1]
+    x = logits.astype(jnp.float32)
+    vidx = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    if true_vocab is not None and true_vocab < v:
+        x = jnp.where(vidx < true_vocab, x, -jnp.inf)
+    lmax = jax.lax.stop_gradient(jnp.max(x, axis=-1, keepdims=True))
+    shifted = x - lmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + lmax[..., 0]
+    label_hit = vidx == labels[..., None].clip(0)
+    ll = jnp.sum(jnp.where(label_hit, x, 0.0), axis=-1)
+    mask = (labels != ignore_id).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,98 @@
+"""Model facade: bind an ArchConfig to pure step functions + input specs.
+
+`input_specs(cfg, shape)` returns jax.ShapeDtypeStruct stand-ins for every
+input of the step the shape cell lowers (train_step / prefill_step /
+serve_step), so the multi-pod dry-run can `.lower().compile()` without
+allocating anything.  Modality frontends are stubs per the brief: audio
+enters as precomputed frame embeddings, images as patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+
+__all__ = ["Model", "build", "input_specs", "cache_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    def init(self, key: jax.Array):
+        return T.init_params(self.cfg, key)
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        return T.loss_fn(params, self.cfg, batch)
+
+    def forward(self, params, tokens, extra=None):
+        return T.forward(params, self.cfg, tokens, extra)
+
+    def prefill(self, params, tokens, extra=None, max_seq=None):
+        return T.prefill(params, self.cfg, tokens, extra, max_seq=max_seq)
+
+    def decode_step(self, params, caches, token):
+        return T.decode_step(params, self.cfg, caches, token)
+
+    def init_caches(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        return T.init_caches(self.cfg, batch, max_seq, dtype)
+
+    def count_params(self, params) -> int:
+        return T.count_params(params)
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the batch of the step this cell lowers."""
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {"tokens": _sds((b, t + 1), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["audio"] = _sds((b, cfg.enc_seq, cfg.d_model),
+                                  jnp.float32)
+        if cfg.family == "vlm":
+            # image tokens take img_tokens of the sequence budget
+            batch["tokens"] = _sds((b, t - cfg.img_tokens + 1), jnp.int32)
+            batch["img"] = _sds((b, cfg.img_tokens, cfg.img_embed_dim),
+                                jnp.float32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out: Dict[str, Any] = {"tokens": _sds((b, t), jnp.int32)}
+        if cfg.family == "encdec":
+            out["audio"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            out["tokens"] = _sds((b, t - cfg.img_tokens), jnp.int32)
+            out["img"] = _sds((b, cfg.img_tokens, cfg.img_embed_dim),
+                              jnp.float32)
+        return out
+    # decode / long: one new token against a seq_len cache
+    return {
+        "token": _sds((b,), jnp.int32),
+        "caches": cache_specs(cfg, b, t),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree mirroring init_caches (no allocation)."""
+    caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, batch, max_seq, dtype))
+    return caches
+
+
+def param_specs(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))

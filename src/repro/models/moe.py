@@ -1,0 +1,162 @@
+"""Mixture-of-Experts FFN with top-k routing (group-wise capacity dispatch).
+
+GeNN tie-in (DESIGN.md §4): the token->expert assignment is a sparse
+connectivity matrix.  As with SNN spike propagation, TPUs want that sparse
+scatter expressed as dense one-hot matmuls with a *bounded fan-out*; the
+bound here is the expert capacity — the MoE analogue of ELL's fixed row
+width.  Tokens over capacity are dropped (capacity-factor semantics) and the
+auxiliary load-balancing loss keeps drops rare, playing the role of the
+paper's "prescribed spiking range".
+
+Dispatch is computed within fixed-size token groups (Mesh-TF/Switch style) so
+the one-hot tensors are [G, group, E, cap] — G rides the data axis, keeping
+per-device temporaries bounded regardless of global batch.  Expert weights
+are sharded either over the expert axis (`expert_sharding="expert"`, e.g.
+granite 32e on a 16-way model axis -> 2 experts/device) or tensor-parallel
+inside each expert (`"ffn"`, e.g. mixtral 8e) — chosen per config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, shard
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden size
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    aux_loss_weight: float = 0.01
+    group_size: int = 1024
+    expert_sharding: str = "expert"   # 'expert' | 'ffn'
+    dispatch: str = "onehot"          # 'onehot' | 'gather'
+    # 'onehot': Switch-style dispatch/combine einsums — O(n*e*cap*d) MXU
+    #   flops, fully dense (the ELL lesson applied naively).
+    # 'gather': invert the (token,slot)->(expert,pos) map once, then pure
+    #   gathers — O(n*k*d) bytes, ~zero flops.  Beyond-paper optimization;
+    #   see EXPERIMENTS.md §Perf (mixtral hillclimb).
+
+
+def moe_init(key: jax.Array, cfg: MoEConfig, dtype=jnp.float32,
+             std: Optional[float] = None):
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    std_in = std if std is not None else 1.0 / math.sqrt(d)
+    std_out = std if std is not None else 1.0 / math.sqrt(f)
+    return {
+        "router": dense_init(ks[0], d, e, None, jnp.float32),
+        "w_gate": (std_in * jax.random.normal(ks[1], (e, d, f))).astype(dtype),
+        "w_up": (std_in * jax.random.normal(ks[2], (e, d, f))).astype(dtype),
+        "w_out": (std_out * jax.random.normal(ks[3], (e, f, d))).astype(dtype),
+    }
+
+
+def _expert_shard(cfg: MoEConfig, x, *dims):
+    """Apply expert/ffn sharding on an [.., e, .., f?] tensor by name."""
+    names = []
+    for dtag in dims:
+        if dtag == "e":
+            names.append("experts" if cfg.expert_sharding == "expert"
+                         else None)
+        elif dtag == "f":
+            names.append("ffn" if cfg.expert_sharding == "ffn" else None)
+        elif dtag == "b":
+            names.append("batch")
+        else:
+            names.append(None)
+    return shard(x, *names)
+
+
+def moe_apply(p, cfg: MoEConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, T, d] -> (y [B, T, d], aux_loss scalar)."""
+    b, t, d = x.shape
+    n = b * t
+    e, k = cfg.n_experts, cfg.top_k
+    gs = min(cfg.group_size, n)
+    while n % gs:
+        gs //= 2
+    g = n // gs
+    cap = max(k, int(cfg.capacity_factor * gs * k / e))
+    cap = min(cap, gs)
+
+    xg = x.reshape(g, gs, d)
+    xg = shard(xg, "batch", None, None)
+    logits = xg.astype(jnp.float32) @ p["router"]            # [g, gs, e]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # [g, gs, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style): e * sum_e f_e * P_e
+    onehot_k = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # [g,gs,k,e]
+    f_e = onehot_k.sum(axis=(0, 1, 2)) / (n * k)
+    p_e = probs.mean(axis=(0, 1))
+    aux = cfg.aux_loss_weight * e * jnp.sum(f_e * p_e)
+
+    # position of each (token, slot) in its expert queue within the group;
+    # slots of earlier tokens win (cumsum order: token-major, slot-minor)
+    flat_choice = onehot_k.reshape(g, gs * k, e)
+    pos_in_e = jnp.cumsum(flat_choice, axis=1) - flat_choice
+    pos = (pos_in_e * flat_choice).sum(-1).reshape(g, gs, k)
+    pos = pos.astype(jnp.int32)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    if cfg.dispatch == "gather":
+        # invert (token,slot) -> (expert,pos): slot_token[g, e*cap] holds
+        # the source token row (gs = padding -> zero row)
+        flat_slot = jnp.where(keep, expert_idx * cap + pos, e * cap)
+        slot_token = jnp.full((g, e * cap + 1), gs, jnp.int32)
+        tok_ids = jnp.broadcast_to(jnp.arange(gs, dtype=jnp.int32)[None, :,
+                                                                   None],
+                                   (g, gs, k))
+        slot_token = jax.vmap(
+            lambda st, fs, ti: st.at[fs.reshape(-1)].set(ti.reshape(-1)))(
+            slot_token, flat_slot, tok_ids)[:, : e * cap]
+        xg_pad = jnp.concatenate(
+            [xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+        xe = jnp.take_along_axis(
+            xg_pad, slot_token[:, :, None], axis=1)          # [g,e*cap,d]
+        xe = xe.reshape(g, e, cap, d)
+    else:
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                                dtype=xg.dtype)[..., :cap]   # [g,gs,k,cap]
+        oh = onehot_k.astype(xg.dtype)
+        disp = jnp.einsum("gnke,gnkc->gnec", oh, pos_oh)
+        comb = jnp.einsum("gnke,gnkc,gnk->gnec", oh, pos_oh,
+                          gate_vals.astype(xg.dtype))
+        xe = jnp.einsum("gnec,gnd->gecd", disp, xg)          # [g,e,cap,d]
+
+    xe = _expert_shard(cfg, xe, "b", "e", None, None)
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.activation]
+    h = act(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    h = _expert_shard(cfg, h, "b", "e", None, "f")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_out"])         # [g,e,cap,d]
+    ye = _expert_shard(cfg, ye, "b", "e", None, None)
+
+    if cfg.dispatch == "gather":
+        # combine: gather each (token, slot)'s expert output, weight, sum
+        ye_flat = ye.reshape(g, e * cap, d)
+        picked = jnp.take_along_axis(
+            ye_flat, jnp.where(keep, expert_idx * cap + pos,
+                               0).reshape(g, gs * k)[:, :, None], axis=1)
+        picked = picked.reshape(g, gs, k, d)
+        y = jnp.sum(picked * (gate_vals * keep)[..., None].astype(
+            picked.dtype), axis=2)
+    else:
+        y = jnp.einsum("gnec,gecd->gnd", comb, ye)
+    return y.reshape(b, t, d), aux

@@ -1,0 +1,246 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+`ssd_chunked` is the production O(T) algorithm: split the sequence into
+chunks; inside a chunk the recurrence is computed in its "dual" quadratic
+attention-like form (MXU-friendly matmuls), states are passed between chunks
+by a tiny scan.  `repro.kernels.ref.ssd_scan_ref` (naive recurrence) is the
+oracle; the Pallas kernel (kernels/ssd_scan.py) tiles the same chunked
+algorithm for VMEM.
+
+Block layout follows Mamba2: one input projection producing
+[z | x | B | C | dt], causal depthwise conv on (x, B, C), SSD core, gated
+RMSNorm, output projection.  Decode keeps (conv_state, ssd_state) — O(1)
+per token, which is why the SSM/hybrid archs run the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, shard
+
+__all__ = ["SSMConfig", "ssm_init", "ssm_apply", "ssm_decode_step",
+           "ssm_init_cache", "ssd_chunked"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128          # N: SSM state size per head
+    d_head: int = 64            # P: channels per head
+    expand: int = 2
+    n_groups: int = 1           # B/C groups (like KV heads)
+    d_conv: int = 4
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.d_head
+
+
+def ssm_init(key: jax.Array, cfg: SSMConfig, dtype=jnp.float32,
+             std: Optional[float] = None):
+    ks = jax.random.split(key, 5)
+    d, di, g, n, hh = (cfg.d_model, cfg.d_inner, cfg.n_groups, cfg.d_state,
+                       cfg.n_heads)
+    d_in_proj = 2 * di + 2 * g * n + hh
+    conv_dim = di + 2 * g * n
+    # dt bias: softplus^-1 of U(dt_min, dt_max) samples
+    u = jax.random.uniform(ks[2], (hh,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(cfg.dt_max) - math.log(cfg.dt_min))
+                  + math.log(cfg.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    a0 = jax.random.uniform(ks[3], (hh,), jnp.float32, 1.0, 16.0)
+    return {
+        "w_in": dense_init(ks[0], d, d_in_proj, std, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_dim))
+                   * (1.0 / math.sqrt(cfg.d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a0).astype(jnp.float32),
+        "D": jnp.ones((hh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks[4], di, d, std, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, D=None, chunk: int = 256,
+                initial_state=None, return_final_state: bool = False):
+    """O(T) chunked SSD.  Shapes as ssd_scan_ref:
+    x [b,t,h,dh], dt [b,t,h], A [h], B/C [b,t,g,ds] -> y [b,t,h,dh].
+    """
+    b, t, h, dh = x.shape
+    g, ds = B.shape[2], B.shape[3]
+    rep = h // g
+    q = min(chunk, t)
+    while t % q:
+        q //= 2
+    nc = t // q
+
+    Bh = jnp.repeat(B, rep, axis=2)          # [b,t,h,ds]
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    # per-step log decay  a_t = dt_t * A  (A < 0 via -exp(A_log) upstream)
+    la = dt * A[None, None, :]               # [b,t,h] (negative)
+    xc = x.reshape(b, nc, q, h, dh)
+    dtc = dt.reshape(b, nc, q, h)
+    lac = la.reshape(b, nc, q, h)
+    Bc = Bh.reshape(b, nc, q, h, ds)
+    Cc = Ch.reshape(b, nc, q, h, ds)
+
+    cum = jnp.cumsum(lac, axis=2)            # within-chunk cumulative logs
+    total = cum[:, :, -1]                    # [b,nc,h]
+
+    # --- intra-chunk (dual/attention form): for i >= j
+    #   att[i,j] = C_i . B_j * exp(cum_i - cum_j) * dt_j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [b,nc,q,q,h]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    dec = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcihs,bcjhs->bcijh", Cc, Bc)
+    att = cb * dec * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", att, xc)
+
+    # --- chunk states: S_c = sum_j exp(total - cum_j) * dt_j * B_j x_j^T
+    w = jnp.exp(total[:, :, None, :] - cum) * dtc            # [b,nc,q,h]
+    S = jnp.einsum("bcjh,bcjhs,bcjhd->bchsd", w, Bc, xc)     # [b,nc,h,ds,dh]
+
+    # --- inter-chunk: scan states across chunks
+    def scan_fn(s_prev, inp):
+        s_c, tot_c = inp                      # [b,h,ds,dh], [b,h]
+        s_new = s_prev * jnp.exp(tot_c)[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((b, h, ds, dh), x.dtype))
+    s_last, s_prevs = jax.lax.scan(
+        scan_fn, s0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(total, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)     # state entering each chunk
+
+    # y_inter[i] = C_i . (exp(cum_i) * S_prev)
+    y_inter = jnp.einsum("bcihs,bchsd->bcihd",
+                         Cc * jnp.exp(cum)[..., None], s_prevs)
+
+    y = (y_intra + y_inter).reshape(b, t, h, dh)
+    if D is not None:
+        y = y + x * D[None, None, :, None]
+    if return_final_state:
+        return y, s_last
+    return y
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: SSMConfig, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def ssm_apply(p, cfg: SSMConfig, u: jax.Array,
+              conv_state=None, ssd_state=None,
+              return_state: bool = False):
+    """u: [B, T, d_model] -> [B, T, d_model] (full-sequence)."""
+    b, t, _ = u.shape
+    di, g, n, h, dh = (cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads,
+                       cfg.d_head)
+    zxbcdt = u @ p["w_in"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    # causal depthwise conv over time (window d_conv)
+    w = p["conv_w"]                            # [d_conv, conv_dim]
+    pad = cfg.d_conv - 1
+    xbc_pad = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    if conv_state is not None:
+        xbc_pad = jax.lax.dynamic_update_slice(
+            xbc_pad, conv_state.astype(xbc_pad.dtype), (0, 0, 0))
+    xbc_conv = sum(
+        xbc_pad[:, i: i + t] * w[i][None, None, :]
+        for i in range(cfg.d_conv)) + p["conv_b"]
+    xbc_conv = jax.nn.silu(xbc_conv)
+    new_conv_state = xbc_pad[:, t: t + pad] if pad else None
+
+    xs = xbc_conv[..., :di].reshape(b, t, h, dh)
+    Bmat = xbc_conv[..., di: di + g * n].reshape(b, t, g, n)
+    Cmat = xbc_conv[..., di + g * n:].reshape(b, t, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xs = shard(xs, "batch", None, "heads", None)
+    from repro.kernels import ops as kops
+    y = kops.ssd_scan(xs.astype(jnp.float32), dt, A,
+                      Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+                      p["D"]) if not return_state else None
+    if return_state:
+        y, s_last = ssd_chunked(
+            xs.astype(jnp.float32), dt, A, Bmat.astype(jnp.float32),
+            Cmat.astype(jnp.float32), p["D"], initial_state=ssd_state,
+            return_final_state=True)
+    y = y.reshape(b, t, di).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ p["w_out"]
+    if return_state:
+        return out, (new_conv_state, s_last)
+    return out
+
+
+def ssm_init_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    conv_dim = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.d_head),
+                         jnp.float32),
+    }
+
+
+def ssm_decode_step(p, cfg: SSMConfig, u: jax.Array, cache):
+    """u: [B, 1, d_model]; O(1) recurrent step."""
+    b = u.shape[0]
+    di, g, n, h, dh = (cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads,
+                       cfg.d_head)
+    zxbcdt = u[:, 0] @ p["w_in"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    hist = jnp.concatenate(
+        [cache["conv"], xbc[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"]
+    xbc_conv = jnp.einsum("btc,tc->bc", hist.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"]
+    xbc_conv = jax.nn.silu(xbc_conv)
+    new_conv = hist[:, 1:]
+
+    xs = xbc_conv[..., :di].reshape(b, h, dh)
+    Bm = xbc_conv[..., di: di + g * n].reshape(b, g, n)
+    Cm = xbc_conv[..., di + g * n:].reshape(b, g, n)
+    rep = h // g
+    Bm = jnp.repeat(Bm, rep, axis=1)          # [b,h,n]
+    Cm = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [b,h]
+    A = -jnp.exp(p["A_log"])
+
+    s = cache["ssd"]
+    decay = jnp.exp(dt * A[None, :])[:, :, None, None]
+    s_new = s * decay + (dt[:, :, None] * xs)[:, :, None, :] \
+        * Bm[:, :, :, None]                    # [b,h,n,dh]
+    y = jnp.einsum("bhsd,bhs->bhd", s_new, Cm) + xs * p["D"][None, :, None]
+    y = y.reshape(b, di).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    out = (y @ p["w_out"])[:, None, :]
+    return out, {"conv": new_conv, "ssd": s_new}

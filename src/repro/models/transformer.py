@@ -1,0 +1,645 @@
+"""Unified model assembly for every assigned architecture family.
+
+The layer stack follows the arch's `LayerProgram` (configs/base.py): an outer
+scan over `repeats` groups, inner scans over each segment's stacked layers,
+plus an optional tail.  This keeps HLO size O(#segment kinds) regardless of
+depth, lets heterogeneous patterns (gemma3 5:1 local:global, zamba2 shared
+attention) scan cleanly, and gives each segment its own cache pytree
+(ring caches for windowed layers, dense for global — the paper's sparse-vs-
+dense representation choice applied to the KV "synapse matrix").
+
+Entry points (all pure):
+  init_params(cfg, key)
+  forward(params, cfg, tokens, extra)      -> logits           (train)
+  loss_fn(params, cfg, batch)              -> (loss, metrics)
+  prefill(params, cfg, tokens, extra)      -> (last_logits, caches)
+  decode_step(params, cfg, caches, token, index) -> (logits, caches)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerProgram, Segment
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import (cross_entropy, dense_init, embed_init,
+                                 mlp_apply, mlp_init, norm_apply, norm_init,
+                                 shard)
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step",
+           "init_caches", "count_params", "model_flops_per_token"]
+
+BIG_WINDOW = 1 << 30   # "global" encoded as a huge window (scan-uniform)
+
+_DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+           "float16": jnp.float16}
+
+
+def resolve_dtype(name: str):
+    return _DTYPES[name]
+
+
+def padded_vocab(v: int, multiple: int = 256) -> int:
+    """Vocab rounded up so the model axis always divides it (Megatron-style
+    padding); CE and sampling mask the pad entries to -inf."""
+    return (v + multiple - 1) // multiple * multiple
+
+
+# When True, layer scans are python-unrolled.  Used by the dry-run's
+# depth-1/2 extrapolation lowerings: XLA's cost_analysis counts a while-loop
+# body ONCE regardless of trip count, so roofline flops/bytes/collectives are
+# measured on small unrolled depths and extrapolated linearly (see
+# launch/dryrun.py).  Normal runs keep scan (compact HLO, fast compiles).
+UNROLL_LAYERS = False
+
+
+def maybe_scan(body, init, xs, out_axis0: bool = True):
+    """lax.scan, or a python unroll of it when UNROLL_LAYERS is set."""
+    if not UNROLL_LAYERS:
+        return jax.lax.scan(body, init, xs)
+    length = jax.tree.leaves(xs)[0].shape[0] if jax.tree.leaves(xs) else 0
+    carry = init
+    outs = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        outs.append(y)
+    if outs and jax.tree.leaves(outs[0]):
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# per-kind layer definitions
+# ---------------------------------------------------------------------------
+
+def _attn_cfg(cfg: ArchConfig, kind: str) -> A.AttnConfig:
+    window = cfg.window
+    if kind == "attn_local":
+        window = cfg.local_window
+    elif kind == "attn_global":
+        window = None
+    return A.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm, qkv_bias=cfg.qkv_bias, window=window,
+        causal=True)
+
+
+def _ssm_cfg(cfg: ArchConfig) -> S.SSMConfig:
+    return S.SSMConfig(
+        d_model=cfg.d_model, d_state=cfg.ssm_state, d_head=cfg.ssm_head,
+        expand=cfg.ssm_expand, n_groups=cfg.ssm_groups)
+
+
+def _moe_cfg(cfg: ArchConfig) -> M.MoEConfig:
+    return M.MoEConfig(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
+        top_k=cfg.top_k, activation=cfg.activation,
+        capacity_factor=getattr(cfg, "moe_capacity_factor", 1.25),
+        dispatch=getattr(cfg, "moe_dispatch", "onehot"),
+        group_size=cfg.moe_group_size, expert_sharding=cfg.expert_sharding)
+
+
+def _layer_init(cfg: ArchConfig, kind: str, key, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind == "mamba":
+        return {"norm": norm_init(cfg.norm, d, dtype),
+                "ssm": S.ssm_init(ks[0], _ssm_cfg(cfg), dtype)}
+    p = {"ln1": norm_init(cfg.norm, d, dtype),
+         "attn": A.attn_init(ks[0], _attn_cfg(cfg, kind), dtype),
+         "ln2": norm_init(cfg.norm, d, dtype)}
+    if kind == "moe":
+        p["moe"] = M.moe_init(ks[1], _moe_cfg(cfg), dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.gated_mlp, dtype)
+    if cfg.family == "encdec" and kind == "attn" and not _is_enc(cfg, kind):
+        p["ln_x"] = norm_init(cfg.norm, d, dtype)
+        p["xattn"] = A.attn_init(ks[2], _attn_cfg(cfg, "attn"), dtype)
+    return p
+
+
+def _is_enc(cfg, kind):   # encoder segments are initialized separately
+    return False
+
+
+def _layer_apply(cfg: ArchConfig, kind: str, p, x, ctx) -> Tuple[Any, Any]:
+    """Full-sequence layer.  Returns (x, (aux, kv_for_cache))."""
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    if kind == "mamba":
+        if ctx.get("want_cache"):
+            y, st = S.ssm_apply(p["ssm"], _ssm_cfg(cfg),
+                                norm_apply(cfg.norm, x, p["norm"]),
+                                return_state=True)
+            kv = st
+        else:
+            y = S.ssm_apply(p["ssm"], _ssm_cfg(cfg),
+                            norm_apply(cfg.norm, x, p["norm"]))
+        return x + y, (aux, kv)
+
+    acfg = _attn_cfg(cfg, kind)
+    h = norm_apply(cfg.norm, x, p["ln1"])
+    window = ctx.get("window_override")
+    y, akv = A.attention_forward(
+        p["attn"], acfg, h, positions=ctx.get("positions"),
+        window=window, prefix=ctx.get("prefix"), return_kv=True)
+    if ctx.get("want_cache"):
+        kv = akv
+    x = x + y
+    if "xattn" in p:
+        h = norm_apply(cfg.norm, x, p["ln_x"])
+        y = A.attention_forward(
+            p["xattn"], dataclasses.replace(acfg, causal=False), h,
+            kv=ctx["enc_kv"])
+        x = x + y
+    h = norm_apply(cfg.norm, x, p["ln2"])
+    if kind == "moe":
+        y, aux = M.moe_apply(p["moe"], _moe_cfg(cfg), h)
+    else:
+        y = mlp_apply(p["mlp"], h, cfg.activation)
+    return x + y, (aux, kv)
+
+
+def _layer_decode(cfg: ArchConfig, kind: str, p, x, cache, ctx):
+    """One-token layer step.  Returns (x, new_cache)."""
+    if kind == "mamba":
+        h = norm_apply(cfg.norm, x, p["norm"])
+        y, new_cache = S.ssm_decode_step(p["ssm"], _ssm_cfg(cfg), h, cache)
+        return x + y, new_cache
+
+    acfg = _attn_cfg(cfg, kind)
+    h = norm_apply(cfg.norm, x, p["ln1"])
+    if "xattn" in p:
+        self_cache, cross_cache = cache["self"], cache["cross"]
+    else:
+        self_cache = cache
+    y, self_cache = A.attention_decode(p["attn"], acfg, h, self_cache,
+                                       ctx["index"])
+    x = x + y
+    if "xattn" in p:
+        h = norm_apply(cfg.norm, x, p["ln_x"])
+        y, _ = A.attention_decode(p["xattn"], acfg, h, cross_cache,
+                                  ctx["index"], cross=True)
+        x = x + y
+        new_cache = {"self": self_cache, "cross": cross_cache}
+    else:
+        new_cache = self_cache
+    h = norm_apply(cfg.norm, x, p["ln2"])
+    if kind == "moe":
+        y, _ = M.moe_apply(p["moe"], _moe_cfg(cfg), h)
+    else:
+        y = mlp_apply(p["mlp"], h, cfg.activation)
+    return x + y, new_cache
+
+
+def _layer_cache_init(cfg: ArchConfig, kind: str, batch: int, max_seq: int,
+                      dtype):
+    if kind == "mamba":
+        return S.ssm_init_cache(_ssm_cfg(cfg), batch)
+    acfg = _attn_cfg(cfg, kind)
+    c = A.init_cache(acfg, batch, max_seq, dtype)
+    if cfg.family == "encdec":
+        xc = A.init_cache(dataclasses.replace(acfg, window=None), batch,
+                          cfg.enc_seq, dtype)
+        return {"self": c, "cross": xc}
+    return c
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(lambda k: fn(k))(jax.random.split(key, n))
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    dtype = resolve_dtype(cfg.dtype)
+    prog = cfg.program()
+    keys = jax.random.split(key, 16)
+
+    pv = padded_vocab(cfg.vocab)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], pv, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, pv,
+                                       None, dtype)
+
+    def seg_init(seg: Segment, k):
+        if seg.kind == "shared_attn":
+            return _layer_init(cfg, "attn", k, dtype)   # single, unstacked
+        return _stack_init(lambda kk: _layer_init(cfg, seg.kind, kk, dtype),
+                           k, seg.n)
+
+    segs = []
+    for i, seg in enumerate(prog.segments):
+        k = jax.random.fold_in(keys[2], i)
+        if prog.repeats > 1 and seg.kind != "shared_attn":
+            segs.append(_stack_init(lambda kk, s=seg: seg_init(s, kk), k,
+                                    prog.repeats))
+        else:
+            segs.append(seg_init(seg, k))
+    params["segments"] = segs
+    params["tail"] = [seg_init(seg, jax.random.fold_in(keys[3], i))
+                      for i, seg in enumerate(prog.tail)]
+
+    if cfg.family == "encdec":
+        enc_attn = dataclasses.replace(cfg, window=None)
+
+        def enc_layer(k):
+            ks = jax.random.split(k, 2)
+            return {"ln1": norm_init(cfg.norm, cfg.d_model, dtype),
+                    "attn": A.attn_init(ks[0], _attn_cfg(enc_attn, "attn"),
+                                        dtype),
+                    "ln2": norm_init(cfg.norm, cfg.d_model, dtype),
+                    "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                    cfg.gated_mlp, dtype)}
+
+        params["enc"] = {
+            "layers": _stack_init(enc_layer, keys[4], cfg.n_enc_layers),
+            "norm": norm_init(cfg.norm, cfg.d_model, dtype),
+            "pos_embed": (0.02 * jax.random.normal(
+                keys[5], (cfg.enc_seq, cfg.d_model))).astype(dtype),
+        }
+    if cfg.family == "vlm":
+        params["img_proj"] = dense_init(keys[6], cfg.img_embed_dim,
+                                        cfg.d_model, None, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stack execution
+# ---------------------------------------------------------------------------
+
+def _remat(cfg, body):
+    """Apply the configured activation-checkpoint policy (§Perf lever)."""
+    if not cfg.remat or getattr(cfg, "remat_policy", "full") == "none":
+        return body
+    if getattr(cfg, "remat_policy", "full") == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def _run_segment(cfg, seg: Segment, seg_params, x, ctx, shared_params=None):
+    """Scan a stacked segment over the sequence activations."""
+    if seg.kind == "shared_attn":
+        x, (aux, kv) = _layer_apply(cfg, "attn", shared_params, x, ctx)
+        return x, aux, kv
+
+    def body(h, p_l):
+        h2, (aux, kv) = _layer_apply(cfg, seg.kind, p_l, h, ctx)
+        return h2, (aux, kv)
+
+    body = _remat(cfg, body)
+    x, (auxs, kvs) = maybe_scan(body, x, seg_params)
+    return x, jnp.sum(auxs), kvs
+
+
+def _apply_stack(params, cfg: ArchConfig, x, ctx):
+    """Returns (x, aux_total, caches_struct or None)."""
+    prog = cfg.program()
+    want = ctx.get("want_cache", False)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {"segments": [], "tail": []} if want else None
+
+    if prog.repeats == 1:
+        for seg, sp in zip(prog.segments, params["segments"]):
+            shared = sp if seg.kind == "shared_attn" else None
+            x, aux, kv = _run_segment(cfg, seg, sp, x, ctx, shared)
+            aux_total += aux
+            if want:
+                caches["segments"].append(kv)
+    else:
+        shared_idx = {i for i, s in enumerate(prog.segments)
+                      if s.kind == "shared_attn"}
+
+        def group_body(h, rep_params):
+            aux_g = jnp.zeros((), jnp.float32)
+            kvs = []
+            for i, seg in enumerate(prog.segments):
+                sp = (params["segments"][i] if i in shared_idx
+                      else rep_params[i])
+                shared = sp if i in shared_idx else None
+                h, aux, kv = _run_segment(cfg, seg, sp, h, ctx, shared)
+                aux_g += aux
+                kvs.append(kv)
+            return h, (aux_g, kvs)
+
+        rep_stack = [None if i in shared_idx else params["segments"][i]
+                     for i in range(len(prog.segments))]
+        x, (auxs, kvs) = maybe_scan(group_body, x, rep_stack)
+        aux_total += jnp.sum(auxs)
+        if want:
+            caches["segments"] = kvs
+
+    for seg, sp in zip(prog.tail, params["tail"]):
+        x, aux, kv = _run_segment(cfg, seg, sp, x, ctx,
+                                  sp if seg.kind == "shared_attn" else None)
+        aux_total += aux
+        if want:
+            caches["tail"].append(kv)
+    return x, aux_total, caches
+
+
+# ---------------------------------------------------------------------------
+# embeddings / heads
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ArchConfig, tokens, extra):
+    x = params["embed"][tokens]
+    if getattr(cfg, "embed_scale", False) or cfg.family == "vlm":
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.family == "vlm":
+        img = extra["img"].astype(x.dtype) @ params["img_proj"]
+        x = jnp.concatenate([img, x], axis=1)
+    return shard(x, "batch", None, None)
+
+
+def _logits(params, cfg: ArchConfig, x, mask_pad: bool = False):
+    x = norm_apply(cfg.norm, x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = x @ head
+    if getattr(cfg, "logits_dtype", "float32") == "bfloat16":
+        logits = logits.astype(jnp.bfloat16)
+    logits = shard(logits, "batch", None, "vocab")
+    if mask_pad and logits.shape[-1] != cfg.vocab:
+        vidx = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(vidx < cfg.vocab, logits, -jnp.inf)
+    return logits
+
+
+def _encode(params, cfg: ArchConfig, audio):
+    """Whisper encoder over stub frame embeddings [B, Ta, d]."""
+    x = audio.astype(jnp.dtype(cfg.dtype)) + params["enc"]["pos_embed"]
+    acfg = dataclasses.replace(_attn_cfg(cfg, "attn"), causal=False,
+                               window=None)
+
+    def body(h, p_l):
+        a = A.attention_forward(p_l["attn"], acfg,
+                                norm_apply(cfg.norm, h, p_l["ln1"]))
+        h = h + a
+        m = mlp_apply(p_l["mlp"], norm_apply(cfg.norm, h, p_l["ln2"]),
+                      cfg.activation)
+        return h + m, None
+
+    body = _remat(cfg, body)
+    x, _ = maybe_scan(body, x, params["enc"]["layers"])
+    return norm_apply(cfg.norm, x, params["enc"]["norm"])
+
+
+def _enc_kv(cfg, dec_params_xattn, enc_out):
+    """Project encoder output to (k, v) for one decoder layer."""
+    b, t, _ = enc_out.shape
+    k = (enc_out @ dec_params_xattn["wk"]).reshape(b, t, cfg.n_kv,
+                                                   cfg.head_dim)
+    v = (enc_out @ dec_params_xattn["wv"]).reshape(b, t, cfg.n_kv,
+                                                   cfg.head_dim)
+    if cfg.qkv_bias:
+        k = k + dec_params_xattn["bk"].reshape(cfg.n_kv, cfg.head_dim)
+        v = v + dec_params_xattn["bv"].reshape(cfg.n_kv, cfg.head_dim)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ArchConfig, tokens, extra=None):
+    """Training/prefill logits over a full sequence."""
+    extra = extra or {}
+    x = _embed(params, cfg, tokens, extra)
+    ctx = {"positions": jnp.arange(x.shape[1])}
+    if cfg.family == "vlm":
+        ctx["prefix"] = cfg.img_tokens
+    if cfg.family == "encdec":
+        ctx["enc_kv"] = None  # per-layer, see below
+
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, extra["audio"])
+        # cross-attn kv differs per layer; fold enc_out through ctx and let
+        # each layer project it (cheap: Ta x d @ d x kv_dim inside scan).
+        ctx["enc_out"] = enc_out
+        x, aux, _ = _apply_stack_encdec(params, cfg, x, ctx)
+    else:
+        x, aux, _ = _apply_stack(params, cfg, x, ctx)
+    return _logits(params, cfg, x), aux
+
+
+def _apply_stack_encdec(params, cfg, x, ctx):
+    enc_out = ctx["enc_out"]
+    want = ctx.get("want_cache", False)
+
+    def body(h, p_l):
+        ctx_l = dict(ctx)
+        enc_kv = _enc_kv(cfg, p_l["xattn"], enc_out)
+        ctx_l["enc_kv"] = enc_kv
+        h2, (aux, kv) = _layer_apply(cfg, "attn", p_l, h, ctx_l)
+        out_kv = (kv, enc_kv) if want else None
+        return h2, (aux, out_kv)
+
+    body = _remat(cfg, body)
+    x, (auxs, kvs) = maybe_scan(body, x, params["segments"][0])
+    caches = {"segments": [kvs], "tail": []} if want else None
+    return x, jnp.sum(auxs), caches
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    """batch: {'tokens': [B, T+1] int32, optional 'audio'/'img'}."""
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    extra = {k: batch[k] for k in ("audio", "img") if k in batch}
+    logits, aux = forward(params, cfg, inp, extra)
+    if cfg.family == "vlm":   # image prefix positions produce no loss
+        logits = logits[:, cfg.img_tokens:]
+    ce = cross_entropy(logits, labels, true_vocab=cfg.vocab)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# -- serving ------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16):
+    """Cache pytree matching the layer program structure."""
+    prog = cfg.program()
+
+    def seg_cache(seg: Segment, stacked_reps: bool):
+        # build [n, ...] stacks (and [R, n, ...] when grouped); the shared
+        # attention block still gets one cache per application ([R, ...]).
+        base = _layer_cache_init(cfg, seg.kind, batch, max_seq, dtype)
+        c = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (seg.n,) + a.shape).copy()
+            if seg.kind != "shared_attn" else a, base)
+        if stacked_reps:
+            c = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (prog.repeats,) + a.shape).copy(), c)
+        return c
+
+    grouped = prog.repeats > 1
+    return {
+        "segments": [seg_cache(s, grouped) for s in prog.segments],
+        "tail": [seg_cache(s, False) for s in prog.tail],
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ArchConfig, tokens, extra=None,
+            cache_dtype=jnp.bfloat16, max_seq: Optional[int] = None):
+    """Run the full prompt, returning (last_token_logits, caches)."""
+    extra = extra or {}
+    b, t = tokens.shape
+    total_t = t + (cfg.img_tokens if cfg.family == "vlm" else 0)
+    max_seq = max(max_seq or total_t, total_t)
+    x = _embed(params, cfg, tokens, extra)
+    ctx = {"positions": jnp.arange(total_t), "want_cache": True}
+    if cfg.family == "vlm":
+        ctx["prefix"] = cfg.img_tokens
+    if cfg.family == "encdec":
+        ctx["enc_out"] = _encode(params, cfg, extra["audio"])
+        x, _, kv_raw = _apply_stack_encdec(params, cfg, x, ctx)
+    else:
+        x, _, kv_raw = _apply_stack(params, cfg, x, ctx)
+
+    caches = init_caches(cfg, b, max_seq, cache_dtype)
+    caches = _write_prefill_caches(cfg, caches, kv_raw, total_t)
+    caches["index"] = jnp.asarray(total_t, jnp.int32)
+    logits = _logits(params, cfg, x[:, -1:, :], mask_pad=True)
+    return logits[:, 0], caches
+
+
+def _write_prefill_caches(cfg, caches, kv_raw, t):
+    """Map per-layer (k, v) / ssm states from the forward scan into cache
+    structures (ring truncation handled by fill_cache)."""
+    prog = cfg.program()
+
+    def write_one(cache_leaf_struct, kv, kind):
+        if kind == "mamba":
+            conv, ssd = kv
+            return {"conv": conv.astype(cache_leaf_struct["conv"].dtype),
+                    "ssd": ssd}
+        if cfg.family == "encdec":
+            (k, v), (kx, vx) = kv
+            filled = A.fill_cache(cache_leaf_struct["self"], k, v, 0)
+            cross = A.fill_cache(cache_leaf_struct["cross"], kx, vx, 0)
+            return {"self": filled, "cross": cross}
+        k, v = kv
+        return A.fill_cache(cache_leaf_struct, k, v, 0)
+
+    out_segments = []
+    for i, seg in enumerate(prog.segments):
+        kv = kv_raw["segments"][i]
+        cache_seg = caches["segments"][i]
+        if kv is None:
+            out_segments.append(cache_seg)
+            continue
+        fn = functools.partial(write_one, kind=seg.kind)
+        if seg.kind == "shared_attn":
+            # unstacked params; caches stack only over repeats (if grouped)
+            out_segments.append(jax.vmap(fn)(cache_seg, kv)
+                                if prog.repeats > 1 else fn(cache_seg, kv))
+        elif prog.repeats > 1:
+            out_segments.append(jax.vmap(jax.vmap(fn))(cache_seg, kv))
+        else:
+            out_segments.append(jax.vmap(fn)(cache_seg, kv))
+    out_tail = []
+    for i, seg in enumerate(prog.tail):
+        kv = kv_raw["tail"][i]
+        fn = functools.partial(write_one, kind=seg.kind)
+        out_tail.append(jax.vmap(fn)(caches["tail"][i], kv))
+    return {"segments": out_segments, "tail": out_tail,
+            "index": caches["index"]}
+
+
+def decode_step(params, cfg: ArchConfig, caches, token, index=None):
+    """token: [B] int32 -> (logits [B, V], new caches)."""
+    index = caches["index"] if index is None else index
+    prog = cfg.program()
+    x = params["embed"][token][:, None, :]
+    if getattr(cfg, "embed_scale", False) or cfg.family == "vlm":
+        x = x * math.sqrt(cfg.d_model)
+    x = shard(x, "batch", None, None)
+    ctx = {"index": index}
+
+    new_segments = []
+
+    def run_seg_decode(seg, sp, cache_seg, h):
+        def body(hh, inp):
+            p_l, c_l = inp
+            h2, c2 = _layer_decode(cfg, seg.kind, p_l, hh, c_l, ctx)
+            return h2, c2
+        h, new_c = maybe_scan(body, h, (sp, cache_seg))
+        return h, new_c
+
+    if prog.repeats == 1:
+        for seg, sp, cs in zip(prog.segments, params["segments"],
+                               caches["segments"]):
+            if seg.kind == "shared_attn":
+                x, new_c = _layer_decode(cfg, "attn", sp, x, cs, ctx)
+            else:
+                x, new_c = run_seg_decode(seg, sp, cs, x)
+            new_segments.append(new_c)
+    else:
+        shared_idx = {i for i, s in enumerate(prog.segments)
+                      if s.kind == "shared_attn"}
+
+        def group_body(h, inp):
+            rep_params, rep_caches = inp
+            new_cs = []
+            for i, seg in enumerate(prog.segments):
+                if i in shared_idx:
+                    h, c2 = _layer_decode(cfg, "attn",
+                                          params["segments"][i], h,
+                                          rep_caches[i], ctx)
+                else:
+                    h, c2 = run_seg_decode(seg, rep_params[i],
+                                           rep_caches[i], h)
+                new_cs.append(c2)
+            return h, new_cs
+
+        rep_stack = [None if i in shared_idx else params["segments"][i]
+                     for i in range(len(prog.segments))]
+        x, new_segments = maybe_scan(group_body, x,
+                                     (rep_stack, caches["segments"]))
+
+    new_tail = []
+    for seg, sp, cs in zip(prog.tail, params["tail"], caches["tail"]):
+        x, new_c = run_seg_decode(seg, sp, cs, x)
+        new_tail.append(new_c)
+
+    logits = _logits(params, cfg, x, mask_pad=True)[:, 0]
+    new_caches = {"segments": new_segments, "tail": new_tail,
+                  "index": index + 1}
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params)
+               if hasattr(x, "size"))
+
+
+def model_flops_per_token(cfg: ArchConfig, n_params: int,
+                          n_active: Optional[int] = None) -> float:
+    """6*N*D convention (N = active params for MoE)."""
+    n = n_active if n_active is not None else n_params
+    return 6.0 * n

@@ -1,0 +1,78 @@
+"""Error-feedback int8 gradient compression for the data-parallel axis.
+
+At multi-pod scale the DP all-reduce crosses the slow inter-pod links; 4x
+compression (f32 grads -> int8 + per-block f32 scales) cuts that traffic
+4x at the cost of quantization noise, which error feedback (carrying the
+quantization residual into the next step) provably repairs for SGD-family
+optimizers.
+
+Usage (shard_map runs):  g8, scales = compress(g, err); g_sum =
+psum(g8 as f32 * scales ... ) — here exposed as pure quantize/dequantize
+with residual so it also slots under plain pjit (quantize -> psum ->
+dequantize is what XLA sees; the collective then moves int8).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_leaf", "decompress_leaf", "init_error", "ef_compress",
+           "ef_decompress_apply"]
+
+_BLOCK = 2048
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_leaf(g: jax.Array, err: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (q int8 [n], scales f32 [blocks], new_err f32)."""
+    g = g.astype(jnp.float32) + err
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(g.shape)
+    new_err = g - deq
+    return q, scale[:, 0], new_err
+
+
+def decompress_leaf(q: jax.Array, scales: jax.Array, shape) -> jax.Array:
+    deq = q.astype(jnp.float32) * scales[:, None]
+    n = 1
+    for s in shape:
+        n *= s
+    return deq.reshape(-1)[:n].reshape(shape)
+
+
+def ef_compress(grads, errors):
+    """Tree version. -> (quantized tree {q, scales}, new error tree)."""
+    qs, ss, es = {}, {}, {}
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    out_q, out_s, out_e = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress_leaf(g, e)
+        out_q.append(q)
+        out_s.append(s)
+        out_e.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, out_q),
+            jax.tree_util.tree_unflatten(treedef, out_s),
+            jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+def ef_decompress_apply(qtree, stree, like):
+    flat_q = jax.tree.leaves(qtree)
+    flat_s = jax.tree.leaves(stree)
+    flat_l, treedef = jax.tree_util.tree_flatten(like)
+    out = [decompress_leaf(q, s, l.shape)
+           for q, s, l in zip(flat_q, flat_s, flat_l)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,32 @@
+"""LR schedules (warmup + cosine / linear / rsqrt)."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "warmup_rsqrt", "constant"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(1, warmup)
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def warmup_rsqrt(peak: float, warmup: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(1, warmup)
+        decay = peak * jnp.sqrt(warmup / jnp.maximum(step, warmup))
+        return jnp.where(step < warmup, warm, decay)
+    return fn

@@ -1,0 +1,196 @@
+"""Sparse synapse representations (paper Section 3).
+
+The paper's Compressed Row Storage (CRS) is kept verbatim as a container and
+as the memory model used to *choose* a representation (eqs. (1)/(2)).  For TPU
+compute we add an ELLPACK layout (fixed number of slots per row): the paper's
+benchmark networks have a constant nConn per pre-synaptic neuron, so ELL is
+exact there, and its rectangular shape is what VMEM tiling and the MXU
+one-hot-matmul scatter want.  CSR row-gather (one CUDA thread per row/spike)
+has no efficient TPU analogue — see DESIGN.md §2.
+
+All containers are registered pytrees so they flow through jit/scan/vmap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CSRSynapses", "ELLSynapses",
+    "sparse_memory_elements", "dense_memory_elements", "memory_bytes",
+    "choose_representation",
+    "dense_to_csr", "dense_to_ell", "csr_to_dense", "ell_to_dense",
+    "fixed_fanout_connectivity",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSRSynapses:
+    """Compressed Row Storage exactly as described in the paper §3.
+
+    g:        non-zero conductances, traversed along pre-neuron rows  [nNZ]
+    post_ind: post-synaptic neuron index per non-zero                 [nNZ]
+    row_start:index into post_ind where each pre-neuron's row begins  [nPre+1]
+    row_of_nz:pre-neuron index per non-zero (derived, static; lets the
+              TPU path avoid a serial row walk)                       [nNZ]
+    """
+
+    g: jax.Array
+    post_ind: jax.Array
+    row_start: jax.Array
+    row_of_nz: jax.Array
+    n_post: int
+
+    @property
+    def n_pre(self) -> int:
+        return self.row_start.shape[0] - 1
+
+    @property
+    def nnz(self) -> int:
+        return self.g.shape[0]
+
+    def tree_flatten(self):
+        return (self.g, self.post_ind, self.row_start, self.row_of_nz), (
+            self.n_post,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_post=aux[0])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ELLSynapses:
+    """ELLPACK: fixed max_conn slots per pre-neuron row.
+
+    g:        conductances                      [nPre, max_conn]
+    post_ind: post indices (invalid slots -> 0) [nPre, max_conn]
+    valid:    slot mask                         [nPre, max_conn]
+    """
+
+    g: jax.Array
+    post_ind: jax.Array
+    valid: jax.Array
+    n_post: int
+
+    @property
+    def n_pre(self) -> int:
+        return self.g.shape[0]
+
+    @property
+    def max_conn(self) -> int:
+        return self.g.shape[1]
+
+    def tree_flatten(self):
+        return (self.g, self.post_ind, self.valid), (self.n_post,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_post=aux[0])
+
+
+# ---------------------------------------------------------------------------
+# Memory model — paper eqs. (1) and (2), in array *elements*.
+# CRS stores two nNZ-sized arrays (g, post_ind) plus the row-start array of
+# pre-population size (+1 sentinel, which the paper drops; we keep their
+# expression and note the off-by-one is immaterial at scale).
+# ---------------------------------------------------------------------------
+
+def sparse_memory_elements(n_nz: int, n_pre: int, n_post: int) -> int:
+    """Paper eq. (1): 2*nNZ + row-start array (pre-population sized)."""
+    del n_post
+    return 2 * n_nz + (n_pre + 1)
+
+
+def dense_memory_elements(n_pre: int, n_post: int) -> int:
+    """Paper eq. (2): nPreSynN * nPostSynN."""
+    return n_pre * n_post
+
+
+def memory_bytes(elements: int, dtype=jnp.float32) -> int:
+    return int(elements) * jnp.dtype(dtype).itemsize
+
+
+def choose_representation(n_pre: int, n_post: int, n_nz: int) -> str:
+    """Pick 'sparse' or 'dense' from the paper's memory model."""
+    sparse_cost = sparse_memory_elements(n_nz, n_pre, n_post)
+    dense_cost = dense_memory_elements(n_pre, n_post)
+    return "sparse" if sparse_cost < dense_cost else "dense"
+
+
+# ---------------------------------------------------------------------------
+# Builders / converters (host-side numpy; called at model-build time, the
+# resulting containers are device arrays).
+# ---------------------------------------------------------------------------
+
+def dense_to_csr(w: np.ndarray) -> CSRSynapses:
+    w = np.asarray(w)
+    n_pre, n_post = w.shape
+    rows, cols = np.nonzero(w)
+    order = np.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    g = w[rows, cols].astype(np.float32)
+    row_start = np.zeros(n_pre + 1, np.int32)
+    np.add.at(row_start, rows + 1, 1)
+    row_start = np.cumsum(row_start).astype(np.int32)
+    return CSRSynapses(
+        g=jnp.asarray(g), post_ind=jnp.asarray(cols.astype(np.int32)),
+        row_start=jnp.asarray(row_start),
+        row_of_nz=jnp.asarray(rows.astype(np.int32)), n_post=n_post)
+
+
+def dense_to_ell(w: np.ndarray, max_conn: int | None = None) -> ELLSynapses:
+    w = np.asarray(w)
+    n_pre, n_post = w.shape
+    counts = (w != 0).sum(axis=1)
+    k = int(counts.max()) if max_conn is None else int(max_conn)
+    k = max(k, 1)
+    g = np.zeros((n_pre, k), np.float32)
+    idx = np.zeros((n_pre, k), np.int32)
+    valid = np.zeros((n_pre, k), bool)
+    for i in range(n_pre):
+        cols = np.nonzero(w[i])[0][:k]
+        g[i, : len(cols)] = w[i, cols]
+        idx[i, : len(cols)] = cols
+        valid[i, : len(cols)] = True
+    return ELLSynapses(g=jnp.asarray(g), post_ind=jnp.asarray(idx),
+                       valid=jnp.asarray(valid), n_post=n_post)
+
+
+def csr_to_dense(s: CSRSynapses) -> jax.Array:
+    w = jnp.zeros((s.n_pre, s.n_post), s.g.dtype)
+    return w.at[s.row_of_nz, s.post_ind].add(s.g)
+
+
+def ell_to_dense(s: ELLSynapses) -> jax.Array:
+    w = jnp.zeros((s.n_pre, s.n_post), s.g.dtype)
+    rows = jnp.arange(s.n_pre)[:, None] * jnp.ones_like(s.post_ind)
+    vals = jnp.where(s.valid, s.g, 0.0)
+    return w.at[rows.reshape(-1), s.post_ind.reshape(-1)].add(
+        vals.reshape(-1))
+
+
+def fixed_fanout_connectivity(
+    rng: np.random.Generator, n_pre: int, n_post: int, n_conn: int,
+    weight_fn=None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Random connectivity with exactly n_conn targets per pre neuron
+    (sampled without replacement) — the paper's construction for both
+    benchmark networks.  Returns (post_ind[n_pre, n_conn], g[n_pre, n_conn]).
+    """
+    if n_conn > n_post:
+        raise ValueError(f"n_conn={n_conn} > n_post={n_post}")
+    post = np.empty((n_pre, n_conn), np.int32)
+    for i in range(n_pre):
+        post[i] = rng.choice(n_post, size=n_conn, replace=False)
+    if weight_fn is None:
+        g = np.ones((n_pre, n_conn), np.float32)
+    else:
+        g = weight_fn(rng, (n_pre, n_conn)).astype(np.float32)
+    return post, g

@@ -1,0 +1,32 @@
+"""Dry-run artifact sanity (skipped when the sweep hasn't been run)."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+ART = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+@pytest.mark.parametrize("tag", ["pod16x16", "pod2x16x16"])
+def test_dryrun_artifacts_complete_and_clean(tag):
+    d = ART / tag
+    if not d.exists():
+        pytest.skip("dry-run sweep not present")
+    cells = [json.loads(f.read_text()) for f in sorted(d.glob("*.json"))
+             if not f.name.endswith(".isolate.json")]
+    if len(cells) < 40:
+        pytest.skip(f"sweep incomplete ({len(cells)}/40)")
+    by_status = {}
+    for c in cells:
+        by_status.setdefault(c["status"], []).append(
+            (c["arch"], c["shape"]))
+    assert not by_status.get("FAIL"), by_status.get("FAIL")
+    assert len(by_status.get("OK", [])) == 34
+    assert len(by_status.get("SKIP", [])) == 6
+    for c in cells:
+        if c["status"] != "OK":
+            continue
+        assert c["cost_analysis"].get("flops", 0) > 0, (c["arch"],
+                                                        c["shape"])
+        assert "collectives" in c

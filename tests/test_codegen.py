@@ -1,0 +1,103 @@
+"""Codegen DSL: validation, rewriting, generated update semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codegen
+from repro.core.codegen import CodegenError, NeuronModel, compile_sim
+
+
+def _simple(sim="V = V + dt*Isyn", thr="V >= 1.0", reset="V = 0.0"):
+    return NeuronModel(name="m", state={"V": 0.0}, params={},
+                       sim_code=sim, threshold_code=thr, reset_code=reset)
+
+
+def test_basic_update_and_reset():
+    upd = compile_sim(_simple())
+    state = {"V": jnp.array([0.5, 0.95])}
+    ext = {"Isyn": jnp.array([0.1, 0.1]), "dt": jnp.float32(1.0),
+           "t": jnp.float32(0.0)}
+    new, spiked = upd(state, {}, ext)
+    np.testing.assert_allclose(np.asarray(spiked), [False, True])
+    np.testing.assert_allclose(np.asarray(new["V"]), [0.6, 0.0], atol=1e-6)
+
+
+def test_reset_only_applies_where_spiked():
+    m = NeuronModel(name="m", state={"V": 0.0, "U": 0.0}, params={"d": 2.0},
+                    sim_code="V = V + Isyn", threshold_code="V > 1.0",
+                    reset_code="U = U + d")
+    upd = compile_sim(m)
+    new, spiked = upd({"V": jnp.array([0.5, 2.0]), "U": jnp.zeros(2)},
+                      {"d": 2.0},
+                      {"Isyn": jnp.zeros(2), "dt": jnp.float32(1.0),
+                       "t": jnp.float32(0.0)})
+    np.testing.assert_allclose(np.asarray(new["U"]), [0.0, 2.0])
+
+
+def test_temporaries_allowed():
+    m = NeuronModel(name="m", state={"V": 0.0}, params={},
+                    sim_code="tmp = Isyn * 2.0\nV = V + tmp",
+                    threshold_code="V > 1.0")
+    upd = compile_sim(m)
+    new, _ = upd({"V": jnp.zeros(3)}, {},
+                 {"Isyn": jnp.ones(3), "dt": jnp.float32(1.0),
+                  "t": jnp.float32(0.0)})
+    np.testing.assert_allclose(np.asarray(new["V"]), 2.0)
+
+
+def test_bool_ops_rewritten():
+    m = NeuronModel(name="m", state={"V": 0.0}, params={},
+                    sim_code="V = V + Isyn",
+                    threshold_code="(V > 1.0) and (V < 3.0)")
+    upd = compile_sim(m)
+    _, spk = upd({"V": jnp.array([0.0, 1.5, 4.0])}, {},
+                 {"Isyn": jnp.zeros(3), "dt": jnp.float32(1.0),
+                  "t": jnp.float32(0.0)})
+    np.testing.assert_array_equal(np.asarray(spk), [False, True, False])
+
+
+@pytest.mark.parametrize("bad", [
+    "import os",
+    "__import__('os')",
+    "open('/etc/passwd')",
+    "V.__class__",
+    "[x for x in V]",
+    "exec('1')",
+    "V[0] = 1.0",
+])
+def test_rejects_malicious_code(bad):
+    with pytest.raises((CodegenError, SyntaxError)):
+        compile_sim(_simple(sim=bad))
+
+
+def test_rejects_unknown_names():
+    with pytest.raises(CodegenError):
+        compile_sim(_simple(sim="V = V + mystery"))
+
+
+def test_needs_rand_detection():
+    m = NeuronModel(name="m", state={"x": 0.0}, params={},
+                    sim_code="x = rand", threshold_code="x < 0.5")
+    assert m.needs_rand
+    assert not _simple().needs_rand
+
+
+def test_generated_source_readable():
+    src = codegen.generated_source(_simple())
+    assert "def update_m" in src and "V" in src
+
+
+def test_jit_and_vmap_compatible():
+    upd = compile_sim(_simple())
+
+    @jax.jit
+    def step(v, isyn):
+        new, spk = upd({"V": v}, {}, {"Isyn": isyn,
+                                      "dt": jnp.float32(1.0),
+                                      "t": jnp.float32(0.0)})
+        return new["V"], spk
+
+    v, s = step(jnp.zeros(4), jnp.ones(4) * 2.0)
+    assert bool(jnp.all(s))

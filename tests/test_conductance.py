@@ -1,0 +1,85 @@
+"""Conductance scaling: guarded search + hyperbola regression (paper §2/§5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.conductance import (fit_hyperbola, hyperbola, mape,
+                                    search_bisect, search_sweep)
+
+
+def test_fit_recovers_paper_table1_constants():
+    """Synthetic data from the paper's Izhikevich fit constants."""
+    n = np.arange(100, 1001, 50, dtype=float)
+    g = hyperbola(n, 1.318e3, 1.099e2, -2.80e-1)
+    k1, k2, k3, err = fit_hyperbola(n, g)
+    assert err < 0.5
+    np.testing.assert_allclose([k1, k2, k3], [1.318e3, 1.099e2, -0.28],
+                               rtol=0.05)
+
+
+def test_fit_robust_to_noise():
+    r = np.random.default_rng(0)
+    n = np.arange(100, 1001, 50, dtype=float)
+    g = hyperbola(n, 1.318e3, 1.099e2, -0.28) \
+        * (1 + 0.04 * r.standard_normal(n.shape))
+    k1, k2, k3, err = fit_hyperbola(n, g)
+    assert err < 5.0
+    pred = hyperbola(n, k1, k2, k3)
+    assert mape(pred, g) < 5.0
+
+
+def test_fit_handles_negative_k2():
+    """Paper Table 2 PN-LHI has k2 = -6.338 (pole left of data)."""
+    n = np.arange(20, 201, 20, dtype=float)
+    g = hyperbola(n, 1.354e3, -6.338, 1.672e-3)
+    k1, k2, k3, err = fit_hyperbola(n, g)
+    assert err < 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(k1=st.floats(1.0, 1e4), k2=st.floats(1.0, 500.0),
+       k3=st.floats(-1.0, 1.0))
+def test_property_fit_recovers_exact_hyperbolas(k1, k2, k3):
+    n = np.arange(50, 1001, 50, dtype=float)
+    g = hyperbola(n, k1, k2, k3)
+    if np.any(np.abs(g) < 1e-9):   # mape undefined at zeros
+        return
+    _, _, _, err = fit_hyperbola(n, g)
+    assert err < 1.0
+
+
+def test_bisect_respects_nan_guard():
+    """Fig-1 logic: non-finite runs are treated as scale-too-high."""
+    calls = []
+
+    def run_fn(gs):
+        gs = float(gs)
+        calls.append(gs)
+        if gs > 4.0:                       # overflow region
+            return jnp.float32(np.nan), jnp.array(False)
+        return jnp.float32(10.0 * gs), jnp.array(True)   # rate = 10*g
+
+    res = search_bisect(run_fn, 0.0, 16.0, target_band=(18.0, 22.0))
+    assert res.finite
+    assert 18.0 <= res.rate_hz <= 22.0
+    assert res.gscale < 4.0
+
+
+def test_bisect_converges_monotone():
+    run_fn = lambda g: (jnp.float32(5.0 * float(g)), jnp.array(True))
+    res = search_bisect(run_fn, 0.0, 8.0, target_band=(9.5, 10.5))
+    assert abs(res.gscale - 2.0) < 0.2
+
+
+def test_sweep_picks_best_finite():
+    def batched(gs):
+        rates = 10.0 * gs
+        finite = gs < 3.0
+        return rates, finite
+
+    res = search_sweep(batched, jnp.linspace(0.1, 5.0, 50), target_rate=20.0)
+    assert res.finite
+    assert abs(res.rate_hz - 20.0) < 1.0

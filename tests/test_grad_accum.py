@@ -1,0 +1,32 @@
+"""Gradient accumulation (microbatches) must preserve the training step."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.launch.dryrun import make_train_step
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def test_microbatched_step_matches_full_batch():
+    cfg1 = dataclasses.replace(reduced(ARCHS["qwen2-0.5b"]), microbatches=1)
+    cfg4 = dataclasses.replace(cfg1, microbatches=4)
+    params = T.init_params(cfg1, jax.random.PRNGKey(0))
+    ocfg = adamw.AdamWConfig(lr=1e-3)
+    opt = adamw.init(ocfg, params)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg1.vocab, (8, 33)),
+                                   jnp.int32)}
+
+    p1, _, m1 = jax.jit(make_train_step(cfg1))(params, opt, batch)
+    p4, _, m4 = jax.jit(make_train_step(cfg4))(params, opt, batch)
+
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)

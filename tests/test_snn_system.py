@@ -1,0 +1,102 @@
+"""SNN system behaviour: simulator, paper networks, NaN containment."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.models import izhikevich_net, mushroom_body
+from repro.core.snn import neurons as N
+from repro.core.snn.network import Network
+from repro.core.snn.simulator import Simulator
+from repro.core.snn.synapses import make_group
+
+
+def test_izhikevich_net_runs_and_spikes():
+    cfg = izhikevich_net.IzhikevichNetConfig(n_total=200, n_conn=100,
+                                             seed=3)
+    net, sim = izhikevich_net.build(cfg)
+    st = sim.init_state()
+    res = jax.jit(lambda s: sim.run(s, 300))(st)
+    assert bool(res.finite)
+    # thalamic noise alone must produce some spiking (Izhikevich 2003)
+    assert float(res.rates_hz["exc"]) > 0.5
+
+
+def test_izhikevich_rate_increases_with_gscale():
+    cfg = izhikevich_net.IzhikevichNetConfig(n_total=300, n_conn=150, seed=5)
+    net, sim = izhikevich_net.build(cfg)
+    st = sim.init_state()
+    names = [g.name for g in net.synapses]
+    run = jax.jit(lambda s, g: sim.run(
+        s, 400, {n: g for n in names}).rates_hz["exc"])
+    r_lo = float(run(st, jnp.float32(0.5)))
+    r_hi = float(run(st, jnp.float32(6.0)))
+    assert r_hi > r_lo
+
+
+def test_gscale_overflow_sets_finite_flag():
+    """The paper's NaN phenomenon: large gScale must trip the guard, and
+    the flag must survive (poison is contained, not silently dropped)."""
+    cfg = mushroom_body.MushroomBodyConfig(n_pn=20, n_lhi=5, n_kc=100,
+                                           n_dn=10)
+    net, sim = mushroom_body.build(cfg)
+    st = sim.init_state()
+    res = jax.jit(lambda s: sim.run(s, 1500, {"PN_KC": jnp.float32(50.0)})
+                  )(st)
+    assert not bool(res.finite)
+
+
+def test_mushroom_body_baseline_healthy():
+    cfg = mushroom_body.MushroomBodyConfig(n_pn=20, n_lhi=5, n_kc=100,
+                                           n_dn=10)
+    net, sim = mushroom_body.build(cfg)
+    st = sim.init_state()
+    res = jax.jit(lambda s: sim.run(s, 2000))(st)
+    assert bool(res.finite)
+    # Poisson PNs fire near their configured rate
+    assert abs(float(res.rates_hz["PN"]) - cfg.pn_rate_hz) < 15.0
+
+
+def test_delay_ring_buffer():
+    net = Network()
+    net.add_population("a", N.LIF, 4, {"Vthresh": -100.0})  # always spikes
+    net.add_population("b", N.LIF, 4)
+    rng = np.random.default_rng(0)
+    g = make_group(rng, "ab", "a", "b", 4, 4, 2, delay_steps=3,
+                   weight_fn=lambda r, s: np.ones(s, np.float32))
+    net.add_synapse(g)
+    sim = Simulator(net, dt=1.0)
+    st = sim.init_state()
+    # record input current indirectly via V movement of population b
+    v0 = st.neurons["b"]["V"].copy()
+    for i in range(3):
+        st, spk = jax.jit(sim.step)(st)
+    # delayed spikes have not arrived before delay elapses
+    # (b's V only moved by leak towards rest = stays at rest)
+    np.testing.assert_allclose(np.asarray(st.neurons["b"]["V"]), -70.0,
+                               atol=1e-3)
+
+
+def test_sparse_vs_dense_simulation_agree():
+    """Paper Fig 2: representation must not change the dynamics."""
+    cfgs = [izhikevich_net.IzhikevichNetConfig(
+        n_total=150, n_conn=60, seed=11, representation=rep)
+        for rep in ("sparse", "dense")]
+    rates = []
+    for cfg in cfgs:
+        net, sim = izhikevich_net.build(cfg)
+        st = sim.init_state()
+        res = jax.jit(lambda s, sim=sim: sim.run(s, 200))(st)
+        rates.append(float(res.rates_hz["exc"]))
+    # identical seeds -> identical connectivity -> identical dynamics
+    assert abs(rates[0] - rates[1]) < 1e-3
+
+
+def test_memory_report_representation_choice():
+    cfg = izhikevich_net.IzhikevichNetConfig(n_total=400, n_conn=40)
+    net, _ = izhikevich_net.build(cfg)
+    rep = net.memory_report()
+    for r in rep:
+        if r["sparse_elements"] < r["dense_elements"]:
+            assert r["representation"] == "sparse"

@@ -1,0 +1,100 @@
+"""Sparse formats: CSR/ELL equivalence, memory model, hypothesis properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import formats as F
+from repro.sparse import ops as O
+
+
+def _random_sparse(rng, n_pre, n_post, density):
+    w = (rng.random((n_pre, n_post)) < density) * rng.standard_normal(
+        (n_pre, n_post))
+    return w.astype(np.float32)
+
+
+def test_csr_dense_roundtrip(rng):
+    w = _random_sparse(rng, 37, 53, 0.2)
+    csr = F.dense_to_csr(w)
+    np.testing.assert_allclose(np.asarray(F.csr_to_dense(csr)), w)
+
+
+def test_ell_dense_roundtrip(rng):
+    w = _random_sparse(rng, 23, 41, 0.3)
+    ell = F.dense_to_ell(w)
+    np.testing.assert_allclose(np.asarray(F.ell_to_dense(ell)), w)
+
+
+def test_spmv_representations_agree(rng):
+    w = _random_sparse(rng, 64, 80, 0.15)
+    spikes = (rng.random(64) < 0.3).astype(np.float32)
+    dense = O.accumulate_dense(jnp.asarray(w), jnp.asarray(spikes))
+    csr = O.accumulate_csr(F.dense_to_csr(w), jnp.asarray(spikes))
+    ell = O.accumulate_ell(F.dense_to_ell(w), jnp.asarray(spikes))
+    np.testing.assert_allclose(np.asarray(csr), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ell), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_compaction_exact_when_bounded(rng):
+    w = _random_sparse(rng, 64, 32, 0.5)
+    spikes = np.zeros(64, np.float32)
+    spikes[rng.choice(64, 5, replace=False)] = 1.0
+    ell = F.dense_to_ell(w)
+    full = O.accumulate_ell(ell, jnp.asarray(spikes))
+    comp = O.accumulate_ell_compacted(ell, jnp.asarray(spikes), max_active=8)
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_memory_model_eq12():
+    # paper eq (1) vs (2): sparse wins iff 2*nNZ + nPre+1 < nPre*nPost
+    assert F.choose_representation(1000, 1000, 10_000) == "sparse"
+    assert F.choose_representation(10, 10, 90) == "dense"
+    # paper's own example: 1000 neurons, 100..1000 fanout -> always sparse
+    for n_conn in range(100, 1001, 50):
+        assert F.choose_representation(1000, 1000, 1000 * n_conn) \
+            == ("sparse" if 2 * 1000 * n_conn + 1001 < 1_000_000
+                else "dense")
+
+
+def test_fixed_fanout_exact(rng):
+    post, g = F.fixed_fanout_connectivity(rng, 50, 200, 20)
+    assert post.shape == (50, 20)
+    for row in post:
+        assert len(set(row.tolist())) == 20  # without replacement
+    assert post.max() < 200
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_pre=st.integers(2, 40), n_post=st.integers(2, 40),
+    density=st.floats(0.05, 0.9), seed=st.integers(0, 2**31 - 1),
+)
+def test_property_spmv_equivalence(n_pre, n_post, density, seed):
+    """ELL/CSR/dense accumulate identically for any connectivity."""
+    r = np.random.default_rng(seed)
+    w = _random_sparse(r, n_pre, n_post, density)
+    spikes = (r.random(n_pre) < 0.5).astype(np.float32)
+    dense = np.asarray(O.accumulate_dense(jnp.asarray(w),
+                                          jnp.asarray(spikes)))
+    ell = np.asarray(O.accumulate_ell(F.dense_to_ell(w),
+                                      jnp.asarray(spikes)))
+    csr = np.asarray(O.accumulate_csr(F.dense_to_csr(w),
+                                      jnp.asarray(spikes)))
+    np.testing.assert_allclose(ell, dense, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(csr, dense, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_pre=st.integers(1, 100), n_post=st.integers(1, 100),
+       density=st.floats(0.0, 1.0))
+def test_property_memory_model_consistent(n_pre, n_post, density):
+    nnz = int(n_pre * n_post * density)
+    rep = F.choose_representation(n_pre, n_post, nnz)
+    sparse_cost = F.sparse_memory_elements(nnz, n_pre, n_post)
+    dense_cost = F.dense_memory_elements(n_pre, n_post)
+    assert (rep == "sparse") == (sparse_cost < dense_cost)
