@@ -12,7 +12,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -22,11 +21,17 @@ from repro.core.models import izhikevich_net, mushroom_body
 __all__ = ["izhikevich_gscale_sweep", "mushroom_gscale_sweep"]
 
 
-def _rate_fn(sim, names, n_steps, pop):
-    def run(state, g):
-        res = sim.run(state, n_steps, {n: g for n in names})
-        return res.rates_hz[pop], res.finite
-    return jax.jit(jax.vmap(run, in_axes=(None, 0)))
+def _rate_fn(model, names, n_steps, pop, state=None):
+    """Candidate-vmapped (rates, finite) via CompiledModel.sweep_gscale —
+    the first-class sweep replaces the hand-rolled jit(vmap(run))."""
+    if state is None:
+        state = model.init_state()
+
+    def fn(grid):
+        sw = model.sweep_gscale(names, grid, n_steps, state=state)
+        return sw.rates_hz[pop], sw.finite
+
+    return fn
 
 
 def izhikevich_gscale_sweep(
@@ -40,27 +45,24 @@ def izhikevich_gscale_sweep(
     ref_cfg = izhikevich_net.IzhikevichNetConfig(
         n_total=n_total, n_conn=n_conns[-1], seed=seed,
         representation=representation)
-    net, sim = izhikevich_net.build(ref_cfg)
-    names = [g.name for g in net.synapses]
-    st = sim.init_state()
-    rate_fn = _rate_fn(sim, names, n_steps, "exc")
-    r, f = rate_fn(st, jnp.ones((1,), jnp.float32))
+    model = izhikevich_net.compile_model(ref_cfg)
+    names = model.group_names
+    rate_fn = _rate_fn(model, names, n_steps, "exc")
+    r, f = rate_fn(jnp.ones((1,), jnp.float32))
     target = float(r[0])
 
     gscales, rates = [], []
     for n_conn in n_conns:
         cfg = dataclasses.replace(ref_cfg, n_conn=n_conn)
-        net_i, sim_i = izhikevich_net.build(cfg)
-        st_i = sim_i.init_state()
-        fn = _rate_fn(sim_i, [g.name for g in net_i.synapses], n_steps,
-                      "exc")
+        model_i = izhikevich_net.compile_model(cfg)
+        fn = _rate_fn(model_i, model_i.group_names, n_steps, "exc")
         # coarse log-grid sweep (one vmapped launch), then local refine
         grid = jnp.logspace(-1.0, 1.8, candidates)
-        res = C.search_sweep(lambda g: fn(st_i, g), grid, target)
+        res = C.search_sweep(fn, grid, target)
         lo = max(res.gscale / 1.8, float(grid[0]))
         hi = min(res.gscale * 1.8, float(grid[-1]))
         fine = jnp.linspace(lo, hi, candidates)
-        res = C.search_sweep(lambda g: fn(st_i, g), fine, target)
+        res = C.search_sweep(fn, fine, target)
         gscales.append(res.gscale)
         rates.append(res.rate_hz)
 
@@ -81,36 +83,34 @@ def mushroom_gscale_sweep(
     """gScale(nPN) for the mushroom-body PN->KC synapse (reduced)."""
     ref = mushroom_body.MushroomBodyConfig(
         n_pn=n_pns[-1], n_lhi=n_lhi, n_kc=n_kc, n_dn=n_dn, seed=seed)
-    net, sim = mushroom_body.build(ref)
-    st = sim.init_state()
-    fn = _rate_fn(sim, ["PN_KC"], n_steps, "KC")
-    r, _ = fn(st, jnp.ones((1,), jnp.float32))
+    model = mushroom_body.compile_model(ref)
+    fn = _rate_fn(model, ["PN_KC"], n_steps, "KC")
+    r, _ = fn(jnp.ones((1,), jnp.float32))
     target = float(r[0])
-    fn_lhi = _rate_fn(sim, ["PN_LHI"], n_steps, "LHI")
-    r_lhi, _ = fn_lhi(st, jnp.ones((1,), jnp.float32))
+    fn_lhi = _rate_fn(model, ["PN_LHI"], n_steps, "LHI")
+    r_lhi, _ = fn_lhi(jnp.ones((1,), jnp.float32))
     target_lhi = float(r_lhi[0])
 
     gscales, rates = [], []
     gscales_lhi = []
     for n_pn in n_pns:
         cfg = dataclasses.replace(ref, n_pn=n_pn)
-        net_i, sim_i = mushroom_body.build(cfg)
-        st_i = sim_i.init_state()
-        fn_i = _rate_fn(sim_i, ["PN_KC"], n_steps, "KC")
+        model_i = mushroom_body.compile_model(cfg)
+        fn_i = _rate_fn(model_i, ["PN_KC"], n_steps, "KC")
         grid = jnp.logspace(-0.7, 1.6, candidates)
-        res = C.search_sweep(lambda g: fn_i(st_i, g), grid, target)
+        res = C.search_sweep(fn_i, grid, target)
         fine = jnp.linspace(max(res.gscale / 2, 1e-2), res.gscale * 2,
                             candidates)
-        res = C.search_sweep(lambda g: fn_i(st_i, g), fine, target)
+        res = C.search_sweep(fn_i, fine, target)
         gscales.append(res.gscale)
         rates.append(res.rate_hz)
         # PN->LHI (the paper's second fitted synapse; its Table-2 fit is
         # the poor one, MAPE 71.4%)
-        fn_l = _rate_fn(sim_i, ["PN_LHI"], n_steps, "LHI")
-        res_l = C.search_sweep(lambda g: fn_l(st_i, g), grid, target_lhi)
+        fn_l = _rate_fn(model_i, ["PN_LHI"], n_steps, "LHI")
+        res_l = C.search_sweep(fn_l, grid, target_lhi)
         fine_l = jnp.linspace(max(res_l.gscale / 2, 1e-2),
                               res_l.gscale * 2, candidates)
-        res_l = C.search_sweep(lambda g: fn_l(st_i, g), fine_l, target_lhi)
+        res_l = C.search_sweep(fn_l, fine_l, target_lhi)
         gscales_lhi.append(res_l.gscale)
 
     k1, k2, k3, err = C.fit_hyperbola(np.asarray(n_pns, float),

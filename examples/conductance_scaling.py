@@ -2,6 +2,9 @@
 Izhikevich network's firing rate constant, under the NaN guard, and fit the
 paper's hyperbola  gScale = k1/(k2 + nConn) + k3   (Table 1 / Fig 2).
 
+Each candidate grid is evaluated through CompiledModel.sweep_gscale — the
+ModelSpec front-end's first-class vmapped sweep (one compile per network).
+
   PYTHONPATH=src python examples/conductance_scaling.py
 """
 

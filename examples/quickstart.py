@@ -1,18 +1,18 @@
-"""Quickstart: define a spiking network in the GeNN-style equation DSL,
-let the framework generate its simulator, run it, and inspect the paper's
-machinery (sparse representation choice + conductance scaling guard).
+"""Quickstart: declare a spiking network — neuron models, synapse models AND
+connectivity — as data + code snippets in the GeNN-style ModelSpec, build it
+(validation, seeded connectivity, representation choice), run it, and sweep
+the paper's conductance scaling factor in one vmapped compile.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codegen import NeuronModel, generated_source
-from repro.core.snn.network import Network
-from repro.core.snn.simulator import Simulator
-from repro.core.snn.synapses import make_group
+from repro.core.snn.spec import ModelSpec
+from repro.core.snn.synapses import ExpDecay
+from repro.sparse.formats import FixedFanout, FixedProbability
 
 # 1. Declare a neuron model AS CODE (this is GeNN's defining workflow) -----
 izhi = NeuronModel(
@@ -31,32 +31,39 @@ V = minimum(V, 30.0)
 print("=== generated update function ===")
 print(generated_source(izhi))
 
-# 2. Build a 2-population network ------------------------------------------
-rng = np.random.default_rng(0)
-net = Network(name="quickstart")
-net.add_population("exc", izhi, 160,
-                   input_fn=lambda k, t, n: 5.0 * jax.random.normal(k, (n,)))
-net.add_population("inh", izhi, 40,
-                   params={"a": 0.1, "d": 2.0},
-                   input_fn=lambda k, t, n: 2.0 * jax.random.normal(k, (n,)))
+# 2. Declare the network: populations + synapse populations ----------------
+#    Connectivity is data (FixedFanout / FixedProbability initializers,
+#    resolved at build time from the build seed); synapse dynamics are
+#    generated code (ExpDecay here; default is an instantaneous Pulse).
+spec = ModelSpec("quickstart")
+spec.add_neuron_population(
+    "exc", 160, izhi,
+    input_fn=lambda k, t, n: 5.0 * jax.random.normal(k, (n,)))
+spec.add_neuron_population(
+    "inh", 40, izhi, params={"a": 0.1, "d": 2.0},
+    input_fn=lambda k, t, n: 2.0 * jax.random.normal(k, (n,)))
 
-net.add_synapse(make_group(rng, "ee", "exc", "exc", 160, 160, 40,
-                           weight_fn=lambda r, s: 0.5 * r.random(s)))
-net.add_synapse(make_group(rng, "ei", "exc", "inh", 160, 40, 10,
-                           weight_fn=lambda r, s: 0.5 * r.random(s)))
-net.add_synapse(make_group(rng, "ie", "inh", "exc", 40, 160, 40,
-                           weight_fn=lambda r, s: -r.random(s)))
+spec.add_synapse_population("ee", "exc", "exc", connect=FixedFanout(40),
+                            weight=lambda r, s: 0.5 * r.random(s))
+spec.add_synapse_population("ei", "exc", "inh", connect=FixedProbability(0.25),
+                            weight=lambda r, s: 0.5 * r.random(s))
+spec.add_synapse_population("ie", "inh", "exc", connect=FixedFanout(40),
+                            weight=lambda r, s: -r.random(s),
+                            psm=ExpDecay(tau_ms=3.0))
+
+# 3. Build: eager validation, seeded connectivity, representation choice ---
+model = spec.build(dt=1.0, seed=0)
+print("\n=== compiled model ===")
+print(model)
 
 print("\n=== representation choice (paper eq 1/2) ===")
-for rep in net.memory_report():
+for rep in model.memory_report():
     print(f"  {rep['name']}: {rep['representation']} "
           f"(sparse {rep['sparse_elements']} vs dense "
           f"{rep['dense_elements']} elements)")
 
-# 3. Simulate (the step function is generated + jitted) ---------------------
-sim = Simulator(net, dt=1.0, seed=0)
-state = sim.init_state()
-res = jax.jit(lambda s: sim.run(s, 400, record_raster=True))(state)
+# 4. Run (the step function is generated + jitted) --------------------------
+res = model.run(400, record_raster=True)
 
 print("\n=== results (400 ms) ===")
 for pop, rate in res.rates_hz.items():
@@ -66,3 +73,12 @@ print("\n=== exc raster (first 40 neurons x 80 ms) ===")
 raster = np.asarray(res.raster["exc"])[:80, :40]
 for t in range(0, 80, 2):
     print("  " + "".join("|" if raster[t, i] else "." for i in range(40)))
+
+# 5. Sweep gscale for one synapse group: ONE vmapped compile ----------------
+grid = np.logspace(-0.5, 0.8, 8)
+sweep = model.sweep_gscale("ee", grid, n_steps=400)
+print("\n=== gscale sweep over 'ee' (single vmapped compile) ===")
+print(" gscale | exc Hz | finite")
+for g, r, f in zip(np.asarray(sweep.values), np.asarray(sweep.rates_hz["exc"]),
+                   np.asarray(sweep.finite)):
+    print(f" {g:6.2f} | {r:6.1f} | {bool(f)}")

@@ -25,15 +25,19 @@ from __future__ import annotations
 
 import ast
 import dataclasses
-from typing import Any, Callable, Dict, Mapping, Tuple
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
     "NeuronModel",
+    "PostsynapticModel",
+    "WeightUpdateModel",
     "CodegenError",
     "compile_sim",
+    "compile_postsynaptic",
+    "compile_weight_update",
     "compile_expr",
     "generated_source",
 ]
@@ -96,6 +100,10 @@ class NeuronModel:
     threshold_code: str = ""
     reset_code: str = ""
 
+    def __post_init__(self) -> None:
+        _check_reserved(self.name, _EXTERNALS,
+                        state=self.state, params=self.params)
+
     @property
     def needs_rand(self) -> bool:
         return any(
@@ -103,6 +111,24 @@ class NeuronModel:
             for code in (self.sim_code, self.threshold_code, self.reset_code)
             if code
         )
+
+
+def _check_reserved(model_name: str, reserved, **groups) -> None:
+    """Eager name validation: a state/param var shadowing a reserved
+    external (or another var group) would silently replace the real value
+    in the generated environment instead of erroring."""
+    seen: Dict[str, str] = {}
+    for gname, keys in groups.items():
+        for k in keys:
+            if k in reserved:
+                raise CodegenError(
+                    f"{model_name}: {gname} name {k!r} collides with the "
+                    f"reserved names {sorted(reserved)}")
+            if k in seen:
+                raise CodegenError(
+                    f"{model_name}: name {k!r} declared in both "
+                    f"{seen[k]} and {gname}")
+            seen[k] = gname
 
 
 def _names(code: str) -> set:
@@ -242,9 +268,7 @@ def compile_sim(model: NeuronModel) -> Callable[..., Tuple[Dict[str, jax.Array],
         for v in state.values():
             n = v.shape
             break
-        env: Dict[str, Any] = {"__builtins__": {}}
-        env.update(_FUNC_WHITELIST)
-        env.update(_REWRITE_FUNCS)
+        env = _env_base()
         env.update({k: params[k] for k in param_keys})
         env.update({k: externals[k] for k in _EXTERNALS if k in externals})
         env.update({k: state[k] for k in state_keys})
@@ -268,6 +292,225 @@ def compile_sim(model: NeuronModel) -> Callable[..., Tuple[Dict[str, jax.Array],
 
     update.__name__ = f"update_{model.name}"
     return update
+
+
+# ---------------------------------------------------------------------------
+# Synapse-side models.  GeNN splits synapse behaviour into a *weight update*
+# model (what a spike event does, plus optional learning) and a *postsynaptic*
+# model (how arriving input decays and is applied to the neuron).  Both are
+# declared as code snippets and compiled through the same AST-whitelist
+# pipeline as NeuronModel.
+# ---------------------------------------------------------------------------
+
+
+def _env_base() -> Dict[str, Any]:
+    env: Dict[str, Any] = {"__builtins__": {}}
+    env.update(_FUNC_WHITELIST)
+    env.update(_REWRITE_FUNCS)
+    return env
+
+
+@dataclasses.dataclass(frozen=True)
+class PostsynapticModel:
+    """A GeNN-style postsynaptic model: per-post-neuron input dynamics.
+
+    state:      per-post-neuron state var -> initial value
+    params:     parameter name -> default value
+    decay_code: statements advancing the state by one step.  May reference
+                state vars, params, ``dt``, ``t`` and ``inj`` (this step's
+                arriving spikes weighted by the synapse matrix, summed per
+                post neuron, already scaled by sign*gscale).
+    apply_code: expression for the current injected into the post neuron.
+                May reference state vars, params, ``inj``, ``dt``, ``t`` and
+                ``V`` (the post population's membrane potential) — the
+                reversal-potential hook for conductance-based synapses.
+    """
+
+    name: str
+    state: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    params: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    decay_code: str = ""
+    apply_code: str = "inj"
+
+    def __post_init__(self) -> None:
+        _check_reserved(self.name, _PSM_EXTERNALS,
+                        state=self.state, params=self.params)
+
+    @property
+    def needs_v(self) -> bool:
+        return "V" in _names(self.apply_code) | _names(self.decay_code)
+
+
+_PSM_EXTERNALS = ("inj", "dt", "t", "V")
+
+
+def compile_postsynaptic(model: PostsynapticModel) -> Callable[..., Tuple[Dict[str, jax.Array], jax.Array]]:
+    """Generate the per-step input-dynamics function for a synapse group.
+
+    Returns ``step(state, params, externals) -> (new_state, current)`` where
+    externals provides any of ``inj``/``dt``/``t``/``V``.  Pure/trace-safe.
+    """
+    state_keys = tuple(model.state)
+    param_keys = tuple(model.params)
+    allowed = set(state_keys) | set(param_keys) | set(_PSM_EXTERNALS)
+    allowed |= _assigned_names(model.decay_code)
+
+    decay = (_compile_block(model.decay_code, allowed, f"{model.name}.decay")
+             if model.decay_code else None)
+    apply_ = compile_expr(model.apply_code, allowed, f"{model.name}.apply")
+
+    def step(state: Dict[str, jax.Array], params: Mapping[str, Any],
+             externals: Mapping[str, Any]) -> Tuple[Dict[str, jax.Array], jax.Array]:
+        env = _env_base()
+        env.update({k: params[k] for k in param_keys})
+        env.update({k: externals[k] for k in _PSM_EXTERNALS
+                    if k in externals})
+        env.update({k: state[k] for k in state_keys})
+        if decay is not None:
+            exec(decay, env)  # noqa: S102 - validated, builtins-stripped
+        current = jnp.asarray(eval(apply_, env))  # noqa: S307
+        return {k: jnp.asarray(env[k]) for k in state_keys}, current
+
+    step.__name__ = f"psm_{model.name}"
+    return step
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightUpdateModel:
+    """A GeNN-style weight-update model: spike events + optional learning.
+
+    spike_code: per-synapse *expression* for the contribution a presynaptic
+                spike adds to the post neuron's input (GeNN's addToInSyn).
+                May reference ``g``, syn_state vars and params.
+    syn_state:  extra per-synapse variables (same shape as ``g``).
+    pre_state / post_state:
+                per-pre- / per-post-neuron trace variables -> initial value.
+    pre_code / post_code:
+                statements advancing the traces each step.  May reference the
+                trace vars, params, ``dt``, ``t`` and ``pre_spike`` /
+                ``post_spike`` (0/1 float arrays over the population).
+    learn_code: statements updating per-synapse variables (``g`` and
+                syn_state) each step.  Pre-side names (pre traces,
+                ``pre_spike``) broadcast as [n_pre, 1]; post-side names are
+                gathered to synapse shape [n_pre, max_conn].
+    """
+
+    name: str
+    params: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    syn_state: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    pre_state: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    post_state: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    spike_code: str = "g"
+    pre_code: str = ""
+    post_code: str = ""
+    learn_code: str = ""
+
+    def __post_init__(self) -> None:
+        _check_reserved(self.name,
+                        {"g", "pre_spike", "post_spike"} | set(_WU_EXTERNALS),
+                        params=self.params, syn_state=self.syn_state,
+                        pre_state=self.pre_state, post_state=self.post_state)
+
+    @property
+    def has_learning(self) -> bool:
+        return bool(self.learn_code or self.pre_code or self.post_code)
+
+    @property
+    def is_static_pulse(self) -> bool:
+        """True when propagation can use the stored matrix unmodified."""
+        return (self.spike_code.strip() == "g" and not self.has_learning
+                and not self.syn_state)
+
+
+_WU_EXTERNALS = ("dt", "t")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledWeightUpdate:
+    """Executable pieces of a WeightUpdateModel (see compile_weight_update)."""
+
+    effective_weight: Callable[..., jax.Array]
+    pre_step: Optional[Callable[..., Dict[str, jax.Array]]] = None
+    post_step: Optional[Callable[..., Dict[str, jax.Array]]] = None
+    learn: Optional[Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]] = None
+
+
+def compile_weight_update(model: WeightUpdateModel) -> "CompiledWeightUpdate":
+    """Generate the executable pieces of a weight-update model.
+
+    - effective_weight(g, syn_state, params): eval of spike_code, per-synapse
+    - pre_step(pre_state, params, externals{pre_spike,dt,t}) -> new state
+    - post_step(post_state, params, externals{post_spike,dt,t}) -> new state
+    - learn(g, syn_state, traces, params, externals) -> (new_g, new_syn_state)
+      where ``traces`` maps every pre/post trace var (and pre_spike /
+      post_spike) to an array already broadcast/gathered to synapse shape.
+    """
+    param_keys = tuple(model.params)
+    syn_keys = tuple(model.syn_state)
+    pre_keys = tuple(model.pre_state)
+    post_keys = tuple(model.post_state)
+
+    w_allowed = {"g"} | set(syn_keys) | set(param_keys) | set(_WU_EXTERNALS)
+    w_code = compile_expr(model.spike_code, w_allowed,
+                          f"{model.name}.spike")
+
+    def effective_weight(g, syn_state, params, externals=None):
+        env = _env_base()
+        env.update({k: params[k] for k in param_keys})
+        env.update({k: (externals or {})[k] for k in _WU_EXTERNALS
+                    if k in (externals or {})})
+        env["g"] = g
+        env.update({k: syn_state[k] for k in syn_keys})
+        return jnp.asarray(eval(w_code, env))  # noqa: S307
+
+    def _trace_step(code_str, keys, spike_name, what):
+        allowed = (set(keys) | set(param_keys) | {spike_name}
+                   | set(_WU_EXTERNALS))
+        allowed |= _assigned_names(code_str)
+        code = _compile_block(code_str, allowed, what)
+
+        def step(state, params, externals):
+            env = _env_base()
+            env.update({k: params[k] for k in param_keys})
+            env.update({k: externals[k] for k in (spike_name,) + _WU_EXTERNALS
+                        if k in externals})
+            env.update({k: state[k] for k in keys})
+            exec(code, env)  # noqa: S102
+            return {k: jnp.asarray(env[k]) for k in keys}
+
+        return step
+
+    pre_step = (_trace_step(model.pre_code, pre_keys, "pre_spike",
+                            f"{model.name}.pre")
+                if model.pre_code else None)
+    post_step = (_trace_step(model.post_code, post_keys, "post_spike",
+                             f"{model.name}.post")
+                 if model.post_code else None)
+
+    learn = None
+    if model.learn_code:
+        allowed = ({"g", "pre_spike", "post_spike"} | set(syn_keys)
+                   | set(pre_keys) | set(post_keys) | set(param_keys)
+                   | set(_WU_EXTERNALS))
+        allowed |= _assigned_names(model.learn_code)
+        l_code = _compile_block(model.learn_code, allowed,
+                                f"{model.name}.learn")
+
+        def learn(g, syn_state, traces, params, externals):
+            env = _env_base()
+            env.update({k: params[k] for k in param_keys})
+            env.update({k: externals[k] for k in _WU_EXTERNALS
+                        if k in externals})
+            env.update(traces)
+            env["g"] = g
+            env.update({k: syn_state[k] for k in syn_keys})
+            exec(l_code, env)  # noqa: S102
+            return (jnp.asarray(env["g"]),
+                    {k: jnp.asarray(env[k]) for k in syn_keys})
+
+    return CompiledWeightUpdate(effective_weight=effective_weight,
+                                pre_step=pre_step, post_step=post_step,
+                                learn=learn)
 
 
 def generated_source(model: NeuronModel) -> str:

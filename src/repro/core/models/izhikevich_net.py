@@ -9,6 +9,11 @@ default for this model).
 
 The reference configuration (n_conn = n_total, gscale = 1) defines the target
 spiking rate the conductance-scaling study maintains.
+
+Expressed through the declarative ModelSpec front-end: each presynaptic
+group draws `n_conn` targets over the *whole* population (a multi-post
+synapse population split per post group at build time), exactly the seed
+construction, so the same seed reproduces the same graph bit-for-bit.
 """
 
 from __future__ import annotations
@@ -16,15 +21,14 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.snn import neurons as N
 from repro.core.snn.network import Network
 from repro.core.snn.simulator import Simulator
-from repro.core.snn.synapses import make_group
+from repro.core.snn.spec import CompiledModel, ModelSpec
+from repro.sparse.formats import FixedFanout
 
-__all__ = ["IzhikevichNetConfig", "build"]
+__all__ = ["IzhikevichNetConfig", "spec", "compile_model", "build"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,13 +42,11 @@ class IzhikevichNetConfig:
     input_scale: float = 1.0
 
 
-def build(cfg: IzhikevichNetConfig) -> tuple[Network, Simulator]:
+def spec(cfg: IzhikevichNetConfig) -> ModelSpec:
+    """Declarative description of the cortical net."""
     n_exc = int(round(cfg.n_total * cfg.exc_frac))
     n_inh = cfg.n_total - n_exc
-    rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
-
-    net = Network(name=f"izhikevich_{cfg.n_total}_{cfg.n_conn}")
 
     pkey, _ = jax.random.split(key)
     params = N.izhikevich_population_params(pkey, n_exc, n_inh)
@@ -59,47 +61,33 @@ def build(cfg: IzhikevichNetConfig) -> tuple[Network, Simulator]:
     def thalamic_inh(k, t, n):
         return 2.0 * s_in * jax.random.normal(k, (n,))
 
-    net.add_population("exc", N.IZHIKEVICH, n_exc, exc_params, thalamic_exc)
-    net.add_population("inh", N.IZHIKEVICH, n_inh, inh_params, thalamic_inh)
+    ms = ModelSpec(name=f"izhikevich_{cfg.n_total}_{cfg.n_conn}")
+    ms.add_neuron_population("exc", n_exc, N.IZHIKEVICH, exc_params,
+                             thalamic_exc)
+    ms.add_neuron_population("inh", n_inh, N.IZHIKEVICH, inh_params,
+                             thalamic_inh)
 
-    # fixed-fanout random connectivity, n_conn targets per pre neuron,
-    # targets drawn over the WHOLE population then split by post group
-    def split_targets(weight_fn, sign):
-        """Build exc->exc/inh or inh->exc/inh groups from one draw."""
-        groups = []
-        for pre, n_pre in (("exc", n_exc), ("inh", n_inh)):
-            if sign > 0 and pre != "exc":
-                continue
-            if sign < 0 and pre != "inh":
-                continue
-            from repro.sparse.formats import (ELLSynapses,
-                                              fixed_fanout_connectivity)
-            post_all, g_all = fixed_fanout_connectivity(
-                rng, n_pre, cfg.n_total, cfg.n_conn, weight_fn)
-            for post, lo, hi in (("exc", 0, n_exc),
-                                 ("inh", n_exc, cfg.n_total)):
-                mask = (post_all >= lo) & (post_all < hi)
-                idx = np.where(mask, post_all - lo, 0).astype(np.int32)
-                gg = np.where(mask, g_all, 0.0).astype(np.float32)
-                ell = ELLSynapses(
-                    g=jnp.asarray(gg), post_ind=jnp.asarray(idx),
-                    valid=jnp.asarray(mask), n_post=hi - lo)
-                from repro.core.snn.synapses import SynapseGroup
-                groups.append(SynapseGroup(
-                    name=f"{pre}_{post}", pre=pre, post=post, ell=ell,
-                    representation=cfg.representation, dynamics="pulse",
-                    sign=1.0))
-        return groups
+    # fixed-fanout random connectivity, n_conn targets per pre neuron over
+    # the WHOLE population (multi-post: split into exc/inh groups at build)
+    ms.add_synapse_population(
+        "exc", "exc", ["exc", "inh"], connect=FixedFanout(cfg.n_conn),
+        weight=lambda r, shape: 0.5 * r.random(shape),
+        representation=cfg.representation)
+    ms.add_synapse_population(
+        "inh", "inh", ["exc", "inh"], connect=FixedFanout(cfg.n_conn),
+        weight=lambda r, shape: -1.0 * r.random(shape),
+        representation=cfg.representation)
+    return ms
 
-    exc_w = lambda r, shape: 0.5 * r.random(shape)
-    inh_w = lambda r, shape: -1.0 * r.random(shape)
-    for grp in split_targets(exc_w, +1):
-        net.add_synapse(grp)
-    for grp in split_targets(inh_w, -1):
-        net.add_synapse(grp)
 
-    sim = Simulator(net, dt=cfg.dt, seed=cfg.seed)
-    return net, sim
+def compile_model(cfg: IzhikevichNetConfig) -> CompiledModel:
+    return spec(cfg).build(dt=cfg.dt, seed=cfg.seed)
+
+
+def build(cfg: IzhikevichNetConfig) -> tuple[Network, Simulator]:
+    """Legacy entry point: (Network, Simulator) from the compiled spec."""
+    model = compile_model(cfg)
+    return model.network, model.simulator
 
 
 def gscale_keys(net: Network) -> list[str]:

@@ -1,8 +1,10 @@
 """Network description: populations of neurons + synapse groups.
 
-This mirrors GeNN's ModelSpec: `add_population` / `add_synapse` build a
-declarative graph; the Simulator then *generates* the specialized step
-function for exactly this network (repro.core.snn.simulator).
+This is the built IR consumed by the Simulator.  The user-facing
+declarative front-end is ModelSpec (repro.core.snn.spec), which validates a
+spec, resolves connectivity initializers and produces a Network + Simulator;
+`add_population` / `add_synapse` remain as the legacy/low-level path
+(docs/API.md has the migration table).
 """
 
 from __future__ import annotations
@@ -58,6 +60,10 @@ class Network:
         return pop
 
     def add_synapse(self, group: SynapseGroup) -> SynapseGroup:
+        # the Simulator keys per-group state by name; a collision would make
+        # two groups silently share (and clobber) one state slot
+        if any(g.name == group.name for g in self.synapses):
+            raise ValueError(f"duplicate synapse group name {group.name!r}")
         if group.pre not in self.populations:
             raise ValueError(f"unknown pre population {group.pre!r}")
         if group.post not in self.populations:

@@ -84,6 +84,19 @@ class Simulator:
             name: [g for g in net.synapses if g.post == name]
             for name in net.populations
         }
+        self._group_names = {g.name for g in net.synapses}
+
+    def _validate_gscales(
+            self, gscales: Optional[Mapping[str, jax.Array]]) -> None:
+        """Reject gscale keys that match no synapse group (silent-typo
+        hazard: a misspelled key used to be ignored via .get(name, 1.0))."""
+        if not gscales:
+            return
+        unknown = set(gscales) - self._group_names
+        if unknown:
+            raise ValueError(
+                f"unknown gscale key(s) {sorted(unknown)}; valid synapse "
+                f"group names: {sorted(self._group_names)}")
 
     # ------------------------------------------------------------------
     def init_state(self, key: Optional[jax.Array] = None) -> SimState:
@@ -111,6 +124,7 @@ class Simulator:
     ) -> Tuple[SimState, Dict[str, jax.Array]]:
         """One dt step. gscales: synapse-group name -> scalar multiplier."""
         net, dt = self.net, self.dt
+        self._validate_gscales(gscales)
         gscales = gscales or {}
         key, *subkeys = jax.random.split(state.key,
                                          1 + 2 * len(net.populations))
@@ -124,7 +138,8 @@ class Simulator:
             gs = jnp.asarray(gscales.get(g.name, 1.0), jnp.float32)
             v_post = state.neurons[g.post].get("V")
             s_new, cur = g.step(state.syn[g.name], state.spikes[g.pre], gs,
-                                dt, v_post=v_post)
+                                dt, v_post=v_post,
+                                post_spikes=state.spikes[g.post], t=state.t)
             new_syn[g.name] = s_new
             isyn[g.post] = isyn[g.post] + cur
 
@@ -163,6 +178,7 @@ class Simulator:
         record_raster: bool = False,
     ) -> RunResult:
         """Scan n_steps; returns spike statistics (and optionally rasters)."""
+        self._validate_gscales(gscales)
 
         def body(carry, _):
             st, counts = carry

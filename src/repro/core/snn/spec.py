@@ -1,0 +1,400 @@
+"""ModelSpec: the declarative front-end for spiking networks.
+
+This mirrors GeNN's ModelSpec workflow (addNeuronPopulation /
+addSynapsePopulation -> generate -> run): the whole network — neuron models,
+synapse models, connectivity — is declared as *data and code snippets*, then
+`build` validates the spec eagerly, resolves seeded connectivity
+initializers, runs the paper's representation choice (eqs. (1)/(2)) and
+generates the specialized simulator.
+
+    spec = ModelSpec("demo")
+    spec.add_neuron_population("exc", 160, "izhikevich",
+                               input_fn=thalamic)
+    spec.add_synapse_population("ee", "exc", "exc",
+                                connect=FixedFanout(40),
+                                weight=lambda r, s: 0.5 * r.random(s),
+                                psm=ExpDecay(5.0))
+    model = spec.build(dt=1.0, seed=0)
+    res = model.run(400)
+    sweep = model.sweep_gscale("ee", jnp.logspace(-1, 1, 16), n_steps=400)
+
+`post` may be a list of population names: one connectivity draw is made over
+the concatenated target space and split per post population (a presynaptic
+axon targeting the union — the paper's cortical-net construction).
+
+Errors are raised at declaration/build time with the offending names spelled
+out (SpecError), not at first jit trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codegen import (NeuronModel, PostsynapticModel,
+                                WeightUpdateModel)
+from repro.core.snn.network import InputFn, Network
+from repro.core.snn.simulator import RunResult, SimState, Simulator
+from repro.core.snn.synapses import Pulse, SynapseGroup
+from repro.sparse import formats as F
+
+__all__ = ["ModelSpec", "CompiledModel", "SweepResult", "SpecError"]
+
+# weight initialization: scalar, or (rng, shape) -> array
+WeightInit = Union[None, float, int, Callable[..., np.ndarray]]
+
+_REPRESENTATIONS = ("auto", "sparse", "dense")
+
+
+class SpecError(ValueError):
+    """A ModelSpec declaration or build-time validation failure."""
+
+
+@dataclasses.dataclass
+class NeuronPopSpec:
+    name: str
+    n: int
+    model: NeuronModel
+    params: Dict[str, object]
+    input_fn: Optional[InputFn]
+    edge_spikes: Optional[bool]
+
+
+@dataclasses.dataclass
+class SynapsePopSpec:
+    name: str
+    pre: str
+    post: Tuple[str, ...]
+    connect: F.ConnectivityInit
+    weight: WeightInit
+    wum: Optional[WeightUpdateModel]
+    psm: PostsynapticModel
+    delay_steps: int
+    sign: float
+    representation: str
+
+    def group_names(self) -> List[str]:
+        if len(self.post) == 1:
+            return [self.name]
+        return [f"{self.name}_{p}" for p in self.post]
+
+
+def _as_weight_fn(weight: WeightInit):
+    """Normalize the weight initializer to the (rng, shape) protocol.
+    Scalars consume no rng draws (matching the historical const() helpers)."""
+    if weight is None or callable(weight):
+        return weight
+    w = float(weight)
+    return lambda rng, shape: np.full(shape, w, np.float32)
+
+
+class ModelSpec:
+    """Declarative network description; `build` compiles it."""
+
+    def __init__(self, name: str = "model"):
+        self.name = name
+        self.populations: Dict[str, NeuronPopSpec] = {}
+        self.synapses: List[SynapsePopSpec] = []
+
+    # -- declaration ------------------------------------------------------
+    def add_neuron_population(
+        self, name: str, n: int, model: Union[NeuronModel, str],
+        params: Optional[Mapping[str, object]] = None,
+        input_fn: Optional[InputFn] = None,
+        edge_spikes: Optional[bool] = None,
+    ) -> NeuronPopSpec:
+        if not name or not isinstance(name, str):
+            raise SpecError(f"population name must be a non-empty string, "
+                            f"got {name!r}")
+        if name in self.populations:
+            raise SpecError(f"duplicate population name {name!r}")
+        if not isinstance(n, int) or n <= 0:
+            raise SpecError(f"population {name!r}: n must be a positive "
+                            f"int, got {n!r}")
+        if isinstance(model, str):
+            from repro.core.snn import neurons as _neurons
+            try:
+                model = _neurons.get_model(model)
+            except KeyError as e:
+                raise SpecError(f"population {name!r}: {e.args[0]}") from None
+        if not isinstance(model, NeuronModel):
+            raise SpecError(f"population {name!r}: model must be a "
+                            f"NeuronModel or registry name, got "
+                            f"{type(model).__name__}")
+        merged = dict(model.params)
+        for k, v in (params or {}).items():
+            if k not in model.params:
+                raise SpecError(
+                    f"population {name!r}: unknown parameter {k!r} for "
+                    f"neuron model {model.name!r}; valid parameters: "
+                    f"{sorted(model.params)}")
+            shape = np.shape(v)
+            if shape and shape[0] != n:
+                raise SpecError(
+                    f"population {name!r}: per-neuron parameter {k!r} has "
+                    f"leading dimension {shape[0]} != population size {n}")
+            merged[k] = v
+        pop = NeuronPopSpec(name=name, n=n, model=model, params=merged,
+                            input_fn=input_fn, edge_spikes=edge_spikes)
+        self.populations[name] = pop
+        return pop
+
+    def add_synapse_population(
+        self, name: str, pre: str, post: Union[str, Sequence[str]],
+        connect: F.ConnectivityInit,
+        weight: WeightInit = None,
+        wum: Optional[WeightUpdateModel] = None,
+        psm: Optional[PostsynapticModel] = None,
+        delay_steps: int = 0, sign: float = 1.0,
+        representation: str = "auto",
+    ) -> SynapsePopSpec:
+        if not name or not isinstance(name, str):
+            raise SpecError(f"synapse population name must be a non-empty "
+                            f"string, got {name!r}")
+        post_t = (post,) if isinstance(post, str) else tuple(post)
+        if not post_t:
+            raise SpecError(f"synapse population {name!r}: empty post list")
+        if len(set(post_t)) != len(post_t):
+            raise SpecError(
+                f"synapse population {name!r}: duplicate post population "
+                f"in {list(post_t)}")
+        # declared names and expanded group names share one namespace:
+        # gscales/sweep address either, so a collision in either direction
+        # would make scaling silently partial
+        taken = {s.name for s in self.synapses}
+        taken |= {n for s in self.synapses for n in s.group_names()}
+        spec = SynapsePopSpec(
+            name=name, pre=pre, post=post_t, connect=connect, weight=weight,
+            wum=wum, psm=psm if psm is not None else Pulse(),
+            delay_steps=delay_steps, sign=sign,
+            representation=representation)
+        new_names = spec.group_names()
+        for gname in [name] + new_names:
+            if gname in taken or new_names.count(gname) > 1:
+                raise SpecError(f"duplicate synapse group name {gname!r}")
+        for popname, what in [(pre, "pre")] + [(p, "post") for p in post_t]:
+            if popname not in self.populations:
+                raise SpecError(
+                    f"synapse population {name!r}: unknown {what} "
+                    f"population {popname!r}; declared populations: "
+                    f"{sorted(self.populations)}")
+        if not isinstance(spec.connect, F.ConnectivityInit):
+            raise SpecError(
+                f"synapse population {name!r}: connect must be a "
+                f"ConnectivityInit (FixedFanout / FixedProbability / "
+                f"OneToOne / DenseInit), got {type(connect).__name__}")
+        if not isinstance(spec.psm, PostsynapticModel):
+            raise SpecError(
+                f"synapse population {name!r}: psm must be a "
+                f"PostsynapticModel, got {type(spec.psm).__name__}")
+        if wum is not None and not isinstance(wum, WeightUpdateModel):
+            raise SpecError(
+                f"synapse population {name!r}: wum must be a "
+                f"WeightUpdateModel, got {type(wum).__name__}")
+        if representation not in _REPRESENTATIONS:
+            raise SpecError(
+                f"synapse population {name!r}: representation "
+                f"{representation!r} not in {_REPRESENTATIONS}")
+        if (representation == "dense" and wum is not None
+                and not wum.is_static_pulse):
+            raise SpecError(
+                f"synapse population {name!r}: representation='dense' is "
+                f"incompatible with weight-update model {wum.name!r} "
+                "(dynamic weights propagate via the ELL path); use "
+                "'sparse' or 'auto'")
+        if not isinstance(delay_steps, int) or delay_steps < 0:
+            raise SpecError(
+                f"synapse population {name!r}: delay_steps must be a "
+                f"non-negative int, got {delay_steps!r}")
+        if spec.psm.needs_v:
+            for p in post_t:
+                if "V" not in self.populations[p].model.state:
+                    raise SpecError(
+                        f"synapse population {name!r}: postsynaptic model "
+                        f"{spec.psm.name!r} references V but post "
+                        f"population {p!r} (model "
+                        f"{self.populations[p].model.name!r}) has no "
+                        "membrane state 'V'")
+        self.synapses.append(spec)
+        return spec
+
+    # -- build ------------------------------------------------------------
+    def build(self, dt: float = 0.5, seed: int = 0) -> "CompiledModel":
+        """Validate, resolve connectivity (seeded), choose representations
+        and generate the simulator.  Initializers are resolved in
+        declaration order from a single np rng seeded with `seed`, so the
+        same spec + seed reproduces the same graph."""
+        if not self.populations:
+            raise SpecError(f"model {self.name!r} declares no populations")
+        rng = np.random.default_rng(seed)
+        net = Network(name=self.name)
+        for pop in self.populations.values():
+            net.add_population(pop.name, pop.model, pop.n,
+                               params=pop.params, input_fn=pop.input_fn,
+                               edge_spikes=pop.edge_spikes)
+
+        for sp in self.synapses:
+            n_pre = self.populations[sp.pre].n
+            sizes = [self.populations[p].n for p in sp.post]
+            n_post_total = int(sum(sizes))
+            weight_fn = _as_weight_fn(sp.weight)
+            try:
+                post_ind, g, valid = sp.connect.resolve(
+                    rng, n_pre, n_post_total, weight_fn)
+            except ValueError as e:
+                raise SpecError(
+                    f"synapse population {sp.name!r} "
+                    f"({sp.pre} -> {'+'.join(sp.post)}): {e}") from None
+
+            lo = 0
+            for pname, n_p, gname in zip(sp.post, sizes, sp.group_names()):
+                hi = lo + n_p
+                if len(sp.post) == 1:
+                    idx, gg, vv = post_ind, g, valid
+                else:
+                    mask = (post_ind >= lo) & (post_ind < hi) & valid
+                    idx = np.where(mask, post_ind - lo, 0).astype(np.int32)
+                    gg = np.where(mask, g, 0.0).astype(np.float32)
+                    vv = mask
+                group = SynapseGroup(
+                    name=gname, pre=sp.pre, post=pname,
+                    ell=F.triple_to_ell(idx, gg, vv, n_p),
+                    representation=sp.representation,
+                    wum=sp.wum, psm=sp.psm,
+                    delay_steps=sp.delay_steps, sign=sp.sign)
+                net.add_synapse(group)
+                lo = hi
+
+        return CompiledModel(spec=self, network=net,
+                             simulator=Simulator(net, dt=dt, seed=seed))
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """One vmapped gscale sweep: per-candidate statistics."""
+
+    values: jax.Array                      # [n_candidates]
+    rates_hz: Dict[str, jax.Array]         # pop -> [n_candidates]
+    finite: jax.Array                      # [n_candidates] bool
+    spike_counts: Dict[str, jax.Array]     # pop -> [n_candidates, n]
+
+
+class CompiledModel:
+    """A built network: validated spec + generated simulator.
+
+    Wraps the lower-level Simulator with a cached-jit `run`, a `step`, and
+    the first-class `sweep_gscale` (one compile, vmapped over candidates)
+    that the conductance-scaling study drives.
+    """
+
+    def __init__(self, spec: ModelSpec, network: Network,
+                 simulator: Simulator):
+        self.spec = spec
+        self.network = network
+        self.simulator = simulator
+        self._run_cache: Dict[tuple, Callable] = {}
+        self._sweep_cache: Dict[tuple, Callable] = {}
+
+    @property
+    def group_names(self) -> List[str]:
+        return [g.name for g in self.network.synapses]
+
+    def _expand_group(self, name: str) -> List[str]:
+        """Resolve a synapse name to concrete group names.  A multi-post
+        synapse population ('exc' -> ['exc', 'inh']) is one declarative
+        object but several groups; its declared name addresses all of them."""
+        if name in set(self.group_names):
+            return [name]
+        for sp in self.spec.synapses:
+            if sp.name == name:
+                return sp.group_names()
+        raise SpecError(
+            f"unknown synapse group {name!r}; valid names: "
+            f"{sorted(set(self.group_names) | {s.name for s in self.spec.synapses})}")
+
+    @property
+    def dt(self) -> float:
+        return self.simulator.dt
+
+    def init_state(self, key: Optional[jax.Array] = None) -> SimState:
+        return self.simulator.init_state(key)
+
+    def step(self, state: SimState,
+             gscales: Optional[Mapping[str, jax.Array]] = None):
+        return self.simulator.step(state, self._norm_gscales(gscales))
+
+    def _norm_gscales(self, gscales) -> Dict[str, jax.Array]:
+        out: Dict[str, jax.Array] = {}
+        for k, v in (gscales or {}).items():
+            for g in self._expand_group(k):
+                if g in out:
+                    raise SpecError(
+                        f"gscales address synapse group {g!r} twice "
+                        f"(overlapping keys in {sorted(gscales)})")
+                out[g] = jnp.asarray(v, jnp.float32)
+        self.simulator._validate_gscales(out)
+        return out
+
+    def run(self, n_steps: int,
+            gscales: Optional[Mapping[str, jax.Array]] = None,
+            state: Optional[SimState] = None,
+            record_raster: bool = False) -> RunResult:
+        """Run n_steps from `state` (default: fresh init), jit-compiled.
+        The compiled executable is cached per (n_steps, gscale keys,
+        record_raster); gscale *values* are traced, so sweeping values
+        reuses one executable."""
+        gscales = self._norm_gscales(gscales)
+        if state is None:
+            state = self.init_state()
+        keys = tuple(sorted(gscales))
+        cache_key = (n_steps, keys, record_raster)
+        if cache_key not in self._run_cache:
+            sim = self.simulator
+
+            @jax.jit
+            def _run(st, vals):
+                return sim.run(st, n_steps, dict(zip(keys, vals)),
+                               record_raster=record_raster)
+
+            self._run_cache[cache_key] = _run
+        vals = tuple(gscales[k] for k in keys)
+        return self._run_cache[cache_key](state, vals)
+
+    def sweep_gscale(self, group: Union[str, Sequence[str]],
+                     values, n_steps: int,
+                     state: Optional[SimState] = None) -> SweepResult:
+        """Sweep a gscale multiplier over `values` for one synapse group (or
+        several scaled together): a single vmapped compile, the batch
+        dimension the paper's candidate search wants."""
+        requested = [group] if isinstance(group, str) else list(group)
+        names = [g for r in requested for g in self._expand_group(r)]
+        if state is None:
+            state = self.init_state()
+        values = jnp.atleast_1d(jnp.asarray(values, jnp.float32))
+        cache_key = (tuple(names), n_steps)
+        if cache_key not in self._sweep_cache:
+            sim = self.simulator
+
+            @jax.jit
+            def _sweep(st, vals):
+                def one(gval):
+                    res = sim.run(st, n_steps, {n: gval for n in names})
+                    return res.rates_hz, res.finite, res.spike_counts
+                return jax.vmap(one)(vals)
+
+            self._sweep_cache[cache_key] = _sweep
+        rates, finite, counts = self._sweep_cache[cache_key](state, values)
+        return SweepResult(values=values, rates_hz=rates, finite=finite,
+                           spike_counts=counts)
+
+    def memory_report(self) -> List[dict]:
+        return self.network.memory_report()
+
+    def __repr__(self) -> str:
+        pops = {p.name: p.n for p in self.spec.populations.values()}
+        return (f"CompiledModel({self.spec.name!r}, populations={pops}, "
+                f"synapse_groups={self.group_names}, dt={self.dt})")

@@ -1,10 +1,18 @@
-"""Synapse groups: connectivity + representation + post-synaptic dynamics.
+"""Synapse groups: connectivity + representation + generated dynamics.
 
 A SynapseGroup connects a pre to a post population.  Representation is chosen
-per the paper's memory model (eqs. (1)/(2)) unless forced; dynamics are either
-instantaneous current pulses (the Izhikevich cortical net) or exponentially
-decaying conductances (the mushroom-body net), optionally with a fixed
-axonal delay implemented as a spike ring-buffer.
+per the paper's memory model (eqs. (1)/(2)) unless forced.  Dynamics are no
+longer hardcoded branches: every group carries a GeNN-style
+
+  - WeightUpdateModel  (what a presynaptic spike contributes, plus optional
+                        trace-based learning updating ``g`` online), and
+  - PostsynapticModel  (how arriving input decays and is applied to the post
+                        neuron, with an optional reversal-potential term),
+
+both declared as code snippets and compiled through the same AST-whitelist ->
+jit pipeline as neuron models (repro.core.codegen).  The built-ins `Pulse`,
+`ExpDecay`, `ExpCond` reproduce the historical 'pulse'/'exp_decay' branches;
+`Alpha` and `STDP` are only expressible through the generated path.
 
 `gscale` is the paper's synaptic-conductance scaling factor — the quantity
 the whole scalability study is about.  It multiplies the stored conductances
@@ -14,17 +22,100 @@ at propagation time so a single network build can be swept over gscale.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.codegen import (CompiledWeightUpdate, PostsynapticModel,
+                                WeightUpdateModel, compile_postsynaptic,
+                                compile_weight_update)
 from repro.sparse import formats as F
 from repro.sparse import ops as sparse_ops
 from repro.kernels import ops as kops
 
-__all__ = ["SynapseGroup", "SynapseState"]
+__all__ = [
+    "SynapseGroup", "SynapseState", "make_group",
+    "Pulse", "ExpDecay", "ExpCond", "Alpha",
+    "StaticPulse", "STDP",
+]
+
+
+# ---------------------------------------------------------------------------
+# Built-in postsynaptic models.  Pulse/ExpDecay/ExpCond reproduce the
+# pre-redesign hardcoded branches bit-for-bit (same operations in the same
+# order, dt and tau entering as python floats).
+# ---------------------------------------------------------------------------
+
+def Pulse() -> PostsynapticModel:
+    """Instantaneous current injection (the Izhikevich cortical net)."""
+    return PostsynapticModel(name="pulse")
+
+
+def ExpDecay(tau_ms: float) -> PostsynapticModel:
+    """Exponentially decaying current, time constant tau_ms."""
+    return PostsynapticModel(
+        name="exp_decay",
+        state={"in_syn": 0.0},
+        params={"tau": float(tau_ms)},
+        decay_code="in_syn = in_syn * exp(-dt / tau) + inj",
+        apply_code="in_syn",
+    )
+
+
+def ExpCond(tau_ms: float, e_rev: float) -> PostsynapticModel:
+    """Exponentially decaying conductance with reversal potential e_rev."""
+    return PostsynapticModel(
+        name="exp_cond",
+        state={"in_syn": 0.0},
+        params={"tau": float(tau_ms), "e_rev": float(e_rev)},
+        decay_code="in_syn = in_syn * exp(-dt / tau) + inj",
+        apply_code="in_syn * (e_rev - V)",
+    )
+
+
+def Alpha(tau_ms: float) -> PostsynapticModel:
+    """Alpha-function synapse x(t) ~ (t/tau) exp(-t/tau) — a two-stage
+    exponential cascade the old 'pulse'/'exp_decay' API could not express."""
+    return PostsynapticModel(
+        name="alpha",
+        state={"x": 0.0, "y": 0.0},
+        params={"tau": float(tau_ms)},
+        decay_code=(
+            "x = (x + (dt / tau) * y) * exp(-dt / tau)\n"
+            "y = y * exp(-dt / tau) + inj"
+        ),
+        apply_code="x",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Built-in weight-update models.
+# ---------------------------------------------------------------------------
+
+def StaticPulse() -> WeightUpdateModel:
+    """A spike contributes the stored conductance g; no learning."""
+    return WeightUpdateModel(name="static_pulse")
+
+
+def STDP(lr: float = 0.005, tau_pre: float = 20.0, tau_post: float = 20.0,
+         g_min: float = 0.0, g_max: float = 1.0) -> WeightUpdateModel:
+    """Trace-based pair STDP updating ``g`` online from pre/post spike
+    coincidence — potentiation when pre precedes post, depression when post
+    precedes pre.  Not expressible in the pre-redesign API."""
+    return WeightUpdateModel(
+        name="stdp",
+        params={"lr": float(lr), "tau_pre": float(tau_pre),
+                "tau_post": float(tau_post), "g_min": float(g_min),
+                "g_max": float(g_max)},
+        pre_state={"x_pre": 0.0},
+        post_state={"x_post": 0.0},
+        pre_code="x_pre = x_pre * exp(-dt / tau_pre) + pre_spike",
+        post_code="x_post = x_post * exp(-dt / tau_post) + post_spike",
+        learn_code=("g = clip(g + lr * x_pre * post_spike"
+                    " - lr * x_post * pre_spike, g_min, g_max)"),
+    )
 
 
 @jax.tree_util.register_pytree_node_class
@@ -32,12 +123,22 @@ __all__ = ["SynapseGroup", "SynapseState"]
 class SynapseState:
     """Per-group dynamic state (pytree)."""
 
-    in_syn: Optional[jax.Array]        # decaying conductance input [n_post]
+    psm: Dict[str, jax.Array]          # postsynaptic model state   [n_post]
+    wu_pre: Dict[str, jax.Array]       # presynaptic trace vars     [n_pre]
+    wu_post: Dict[str, jax.Array]      # postsynaptic trace vars    [n_post]
+    g: Optional[jax.Array]             # dynamic weights (plastic groups)
+    syn: Dict[str, jax.Array]          # extra per-synapse vars [n_pre, K]
     spike_buffer: Optional[jax.Array]  # delay ring [delay+1, n_pre]
     cursor: Optional[jax.Array]        # ring cursor, int32 scalar
 
+    @property
+    def in_syn(self) -> Optional[jax.Array]:
+        """Legacy accessor for the ExpDecay/ExpCond conductance state."""
+        return self.psm.get("in_syn")
+
     def tree_flatten(self):
-        return (self.in_syn, self.spike_buffer, self.cursor), ()
+        return (self.psm, self.wu_pre, self.wu_post, self.g, self.syn,
+                self.spike_buffer, self.cursor), ()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -52,45 +153,109 @@ class SynapseGroup:
     ell: F.ELLSynapses                      # canonical storage
     dense: Optional[jax.Array] = None       # dense mirror when chosen/forced
     representation: str = "auto"            # 'auto' | 'sparse' | 'dense'
-    dynamics: str = "pulse"                 # 'pulse' | 'exp_decay'
-    tau_ms: float = 5.0                     # for exp_decay
-    e_rev: Optional[float] = None           # reversal potential (cond-based)
+    wum: Optional[WeightUpdateModel] = None  # default StaticPulse()
+    psm: Optional[PostsynapticModel] = None  # default from legacy `dynamics`
     delay_steps: int = 0
     sign: float = 1.0                       # +1 excitatory / -1 inhibitory
+    # legacy shorthand (pre-ModelSpec API); translated to a PostsynapticModel
+    # in __post_init__ and kept for introspection.
+    dynamics: Optional[str] = None          # 'pulse' | 'exp_decay'
+    tau_ms: float = 5.0                     # for exp_decay
+    e_rev: Optional[float] = None           # reversal potential (cond-based)
 
     def __post_init__(self) -> None:
-        if self.representation == "auto":
+        if self.psm is None:
+            dyn = self.dynamics or "pulse"
+            if dyn == "pulse":
+                self.psm = Pulse()
+            elif dyn == "exp_decay":
+                self.psm = (ExpDecay(self.tau_ms) if self.e_rev is None
+                            else ExpCond(self.tau_ms, self.e_rev))
+            else:
+                raise ValueError(
+                    f"{self.name}: unknown dynamics {dyn!r} "
+                    "(expected 'pulse' or 'exp_decay', or pass psm=)")
+        self.dynamics = self.psm.name
+        if self.wum is None:
+            self.wum = StaticPulse()
+
+        # Any non-default weight-update model propagates through the ELL
+        # effective-weight path (plastic g lives in state; custom spike_code
+        # rewrites weights per step), so a dense mirror would go stale or
+        # sit unused: an explicit 'dense' request is a conflict, and 'auto'
+        # resolves to sparse.
+        if not self.wum.is_static_pulse:
+            if self.representation == "dense":
+                raise ValueError(
+                    f"synapse group {self.name!r}: representation='dense' "
+                    f"is incompatible with weight-update model "
+                    f"{self.wum.name!r} (dynamic weights propagate via the "
+                    "ELL path); use 'sparse' or 'auto'")
+            self.representation = "sparse"
+        elif self.representation == "auto":
             nnz = self.ell.n_pre * self.ell.max_conn
             self.representation = F.choose_representation(
                 self.ell.n_pre, self.ell.n_post, nnz)
         if self.representation == "dense" and self.dense is None:
             self.dense = F.ell_to_dense(self.ell)
 
+        # --- code generation: compile the synapse models once per group ---
+        self._psm_step = compile_postsynaptic(self.psm)
+        self._wu: CompiledWeightUpdate = compile_weight_update(self.wum)
+
+    @property
+    def plastic(self) -> bool:
+        """True when learn_code rewrites g during simulation."""
+        return bool(self.wum.learn_code)
+
     # -- state ------------------------------------------------------------
     def init_state(self) -> SynapseState:
-        in_syn = (jnp.zeros((self.ell.n_post,), jnp.float32)
-                  if self.dynamics == "exp_decay" else None)
+        n_pre, n_post = self.ell.n_pre, self.ell.n_post
+        psm = {k: jnp.full((n_post,), v, jnp.float32)
+               for k, v in self.psm.state.items()}
+        wu_pre = {k: jnp.full((n_pre,), v, jnp.float32)
+                  for k, v in self.wum.pre_state.items()}
+        wu_post = {k: jnp.full((n_post,), v, jnp.float32)
+                   for k, v in self.wum.post_state.items()}
+        syn = {k: jnp.full((n_pre, self.ell.max_conn), v, jnp.float32)
+               for k, v in self.wum.syn_state.items()}
+        g = jnp.asarray(self.ell.g) if self.plastic else None
         if self.delay_steps > 0:
             buf = jnp.zeros((self.delay_steps + 1, self.ell.n_pre),
                             jnp.float32)
             cur = jnp.zeros((), jnp.int32)
         else:
             buf, cur = None, None
-        return SynapseState(in_syn=in_syn, spike_buffer=buf, cursor=cur)
+        return SynapseState(psm=psm, wu_pre=wu_pre, wu_post=wu_post, g=g,
+                            syn=syn, spike_buffer=buf, cursor=cur)
 
     # -- propagation -------------------------------------------------------
-    def _raw_current(self, spikes: jax.Array, gscale: jax.Array) -> jax.Array:
-        """sum_i spike_i * g_ij * gscale for this step's arriving spikes."""
+    def _raw_current(self, spikes: jax.Array, gscale: jax.Array,
+                     g: Optional[jax.Array], syn: Dict[str, jax.Array],
+                     externals: Dict[str, jax.Array]) -> jax.Array:
+        """sum_i spike_i * w_eff_ij * gscale for this step's arriving spikes."""
         spk = jnp.asarray(spikes, jnp.float32)
-        if self.representation == "dense":
-            out = sparse_ops.accumulate_dense(self.dense, spk)
+        if self.wum.is_static_pulse and g is None:
+            # static weights: use the prebuilt representation unmodified
+            if self.representation == "dense":
+                out = sparse_ops.accumulate_dense(self.dense, spk)
+            else:
+                out = kops.ell_spmv(self.ell, spk)
         else:
-            out = kops.ell_spmv(self.ell, spk)
+            g_cur = self.ell.g if g is None else g
+            w_eff = self._wu.effective_weight(g_cur, syn, self.wum.params,
+                                              externals)
+            w_eff = jnp.where(self.ell.valid, w_eff, 0.0)
+            ell = F.ELLSynapses(g=w_eff, post_ind=self.ell.post_ind,
+                                valid=self.ell.valid, n_post=self.ell.n_post)
+            out = kops.ell_spmv(ell, spk)
         return self.sign * gscale * out
 
     def step(
         self, state: SynapseState, spikes: jax.Array, gscale: jax.Array,
         dt: float, v_post: Optional[jax.Array] = None,
+        post_spikes: Optional[jax.Array] = None,
+        t: Optional[jax.Array] = None,
     ) -> tuple[SynapseState, jax.Array]:
         """Advance one step; returns (new_state, current into post neurons)."""
         if self.delay_steps > 0:
@@ -103,22 +268,52 @@ class SynapseGroup:
             arriving = spikes
             new_buf, new_cur = state.spike_buffer, state.cursor
 
-        inj = self._raw_current(arriving, gscale)
+        # dt/t are always present in the snippet environments: any model
+        # code referencing them must work even when a legacy caller omits t
+        wu_ext = {"dt": dt, "t": t if t is not None else jnp.float32(0.0)}
+        inj = self._raw_current(arriving, gscale, state.g, state.syn, wu_ext)
 
-        if self.dynamics == "exp_decay":
-            decay = jnp.exp(-dt / self.tau_ms).astype(jnp.float32)
-            in_syn = state.in_syn * decay + inj
-            if self.e_rev is not None and v_post is not None:
-                current = in_syn * (self.e_rev - v_post)
-            else:
-                current = in_syn
-            new_state = SynapseState(in_syn=in_syn, spike_buffer=new_buf,
-                                     cursor=new_cur)
-            return new_state, current
+        # -- learning (generated weight-update code) -----------------------
+        pre_spk = jnp.asarray(arriving, jnp.float32)
+        post_spk = (jnp.asarray(post_spikes, jnp.float32)
+                    if post_spikes is not None
+                    else jnp.zeros((self.ell.n_post,), jnp.float32))
+        new_pre = state.wu_pre
+        if self._wu.pre_step is not None:
+            new_pre = self._wu.pre_step(
+                state.wu_pre, self.wum.params,
+                {**wu_ext, "pre_spike": pre_spk})
+        new_post = state.wu_post
+        if self._wu.post_step is not None:
+            new_post = self._wu.post_step(
+                state.wu_post, self.wum.params,
+                {**wu_ext, "post_spike": post_spk})
+        new_g, new_syn = state.g, state.syn
+        if self._wu.learn is not None:
+            gather = self.ell.post_ind
+            traces = {"pre_spike": pre_spk[:, None],
+                      "post_spike": post_spk[gather]}
+            traces.update({k: v[:, None] for k, v in new_pre.items()})
+            traces.update({k: v[gather] for k, v in new_post.items()})
+            g_learn, new_syn = self._wu.learn(
+                state.g, state.syn, traces, self.wum.params, wu_ext)
+            new_g = jnp.where(self.ell.valid, g_learn, state.g)
 
-        new_state = SynapseState(in_syn=state.in_syn, spike_buffer=new_buf,
-                                 cursor=new_cur)
-        return new_state, inj
+        # -- postsynaptic dynamics (generated decay/apply code) ------------
+        psm_ext = {"inj": inj, "dt": wu_ext["dt"], "t": wu_ext["t"]}
+        if self.psm.needs_v:
+            if v_post is None:
+                raise ValueError(
+                    f"synapse group {self.name!r}: postsynaptic model "
+                    f"{self.psm.name!r} references V but the post population "
+                    "has no membrane state 'V'")
+            psm_ext["V"] = v_post
+        new_psm, current = self._psm_step(state.psm, self.psm.params, psm_ext)
+
+        new_state = SynapseState(psm=new_psm, wu_pre=new_pre,
+                                 wu_post=new_post, g=new_g, syn=new_syn,
+                                 spike_buffer=new_buf, cursor=new_cur)
+        return new_state, current
 
     # -- memory accounting (paper eqs 1/2) ----------------------------------
     def memory_report(self) -> dict:
@@ -136,13 +331,15 @@ class SynapseGroup:
 def make_group(
     rng: np.random.Generator, name: str, pre: str, post: str,
     n_pre: int, n_post: int, n_conn: int, weight_fn=None,
-    representation: str = "auto", **kw,
+    representation: str = "auto", connect: Optional[F.ConnectivityInit] = None,
+    **kw,
 ) -> SynapseGroup:
-    """Build a fixed-fanout group (the paper's construction)."""
-    post_ind, g = F.fixed_fanout_connectivity(
-        rng, n_pre, n_post, n_conn, weight_fn)
-    ell = F.ELLSynapses(
-        g=jnp.asarray(g), post_ind=jnp.asarray(post_ind),
-        valid=jnp.ones_like(jnp.asarray(post_ind), bool), n_post=n_post)
+    """Legacy front-end: build a group from a connectivity initializer
+    (default: the paper's fixed-fanout construction).  Thin shim over the
+    ModelSpec path — prefer repro.core.snn.spec for new code."""
+    if connect is None:
+        connect = F.FixedFanout(n_conn)
+    post_ind, g, valid = connect.resolve(rng, n_pre, n_post, weight_fn)
+    ell = F.triple_to_ell(post_ind, g, valid, n_post)
     return SynapseGroup(name=name, pre=pre, post=post, ell=ell,
                         representation=representation, **kw)

@@ -15,26 +15,41 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "batch_axes",
-           "MeshPlan"]
+__all__ = ["make_mesh", "make_production_mesh", "make_local_mesh",
+           "batch_axes", "MeshPlan"]
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _axis_type_kwargs(n: int) -> dict:
+    """`axis_types` compatibility shim: jax.sharding.AxisType only exists in
+    newer jax releases (and older jax.make_mesh rejects the kwarg).  Auto is
+    the default there anyway, so omitting it preserves semantics."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def make_mesh(shape, axes):
+    kwargs = _axis_type_kwargs(len(axes))
+    try:
+        return jax.make_mesh(shape, axes, **kwargs)
+    except TypeError:
+        # jax new enough to have AxisType but make_mesh not accepting the
+        # kwarg (or vice-versa mid-release): fall back to defaults.
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1):
     """Mesh over whatever devices exist (tests / CPU runs)."""
     n = len(jax.devices())
     mp = max(1, min(model_parallel, n))
-    return jax.make_mesh((n // mp, mp), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((n // mp, mp), ("data", "model"))
 
 
 def batch_axes(mesh) -> Tuple[str, ...]:

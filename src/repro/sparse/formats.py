@@ -26,6 +26,8 @@ __all__ = [
     "choose_representation",
     "dense_to_csr", "dense_to_ell", "csr_to_dense", "ell_to_dense",
     "fixed_fanout_connectivity",
+    "ConnectivityInit", "FixedFanout", "FixedProbability", "OneToOne",
+    "DenseInit", "triple_to_ell",
 ]
 
 
@@ -174,6 +176,112 @@ def ell_to_dense(s: ELLSynapses) -> jax.Array:
     vals = jnp.where(s.valid, s.g, 0.0)
     return w.at[rows.reshape(-1), s.post_ind.reshape(-1)].add(
         vals.reshape(-1))
+
+
+# ---------------------------------------------------------------------------
+# Connectivity initializers as data (GeNN's InitSparseConnectivitySnippet).
+# A ConnectivityInit is a declarative, seedable description of the synapse
+# graph; `resolve` materializes it as an ELL triple at model-build time.
+# All randomness comes from the passed rng, so the same seed reproduces the
+# same graph.  weight_fn has the repo-wide signature (rng, shape) -> array.
+# ---------------------------------------------------------------------------
+
+_Triple = Tuple[np.ndarray, np.ndarray, np.ndarray]  # post_ind, g, valid
+
+
+def _weights(rng: np.random.Generator, shape, weight_fn) -> np.ndarray:
+    if weight_fn is None:
+        return np.ones(shape, np.float32)
+    return np.asarray(weight_fn(rng, shape)).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConnectivityInit:
+    """Base class; subclasses fill a [n_pre, K] ELL triple."""
+
+    def resolve(self, rng: np.random.Generator, n_pre: int, n_post: int,
+                weight_fn=None) -> _Triple:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedFanout(ConnectivityInit):
+    """Exactly n_conn random targets per pre neuron (paper's construction)."""
+
+    n_conn: int
+
+    def resolve(self, rng, n_pre, n_post, weight_fn=None) -> _Triple:
+        post, g = fixed_fanout_connectivity(rng, n_pre, n_post, self.n_conn,
+                                            weight_fn)
+        return post, g, np.ones_like(post, bool)
+
+    def describe(self) -> str:
+        return f"FixedFanout(n_conn={self.n_conn})"
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedProbability(ConnectivityInit):
+    """Each (pre, post) pair connected independently with probability p."""
+
+    p: float
+
+    def resolve(self, rng, n_pre, n_post, weight_fn=None) -> _Triple:
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"FixedProbability p={self.p} outside [0, 1]")
+        # O(nnz + n_post) memory — never a dense n_pre*n_post mask, which
+        # would OOM at the scalability-study sizes (Generator.choice with
+        # size << n_post also keeps the per-row draw cheap): per-row degree
+        # is Binomial(n_post, p) and membership uniform without
+        # replacement — exactly the per-pair Bernoulli model, marginalized.
+        counts = rng.binomial(n_post, self.p, size=n_pre)
+        k = max(int(counts.max(initial=0)), 1)
+        post = np.zeros((n_pre, k), np.int32)
+        valid = np.arange(k)[None, :] < counts[:, None]
+        for i in range(n_pre):
+            cols = np.sort(rng.choice(n_post, size=counts[i],
+                                      replace=False))
+            post[i, : counts[i]] = cols
+        g = np.where(valid, _weights(rng, (n_pre, k), weight_fn), 0.0)
+        return post, g.astype(np.float32), valid
+
+    def describe(self) -> str:
+        return f"FixedProbability(p={self.p})"
+
+
+@dataclasses.dataclass(frozen=True)
+class OneToOne(ConnectivityInit):
+    """Neuron i connects to neuron i; requires equal population sizes."""
+
+    def resolve(self, rng, n_pre, n_post, weight_fn=None) -> _Triple:
+        if n_pre != n_post:
+            raise ValueError(
+                f"OneToOne requires n_pre == n_post, got {n_pre} != {n_post}")
+        post = np.arange(n_pre, dtype=np.int32)[:, None]
+        g = _weights(rng, (n_pre, 1), weight_fn)
+        return post, g, np.ones_like(post, bool)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseInit(ConnectivityInit):
+    """All-to-all connectivity (the dense matrix, in ELL form)."""
+
+    def resolve(self, rng, n_pre, n_post, weight_fn=None) -> _Triple:
+        post = np.broadcast_to(np.arange(n_post, dtype=np.int32),
+                               (n_pre, n_post)).copy()
+        g = _weights(rng, (n_pre, n_post), weight_fn)
+        return post, g, np.ones_like(post, bool)
+
+
+def triple_to_ell(post_ind: np.ndarray, g: np.ndarray, valid: np.ndarray,
+                  n_post: int) -> ELLSynapses:
+    """Device-side ELL container from a resolved connectivity triple."""
+    return ELLSynapses(
+        g=jnp.asarray(g, jnp.float32),
+        post_ind=jnp.asarray(post_ind, jnp.int32),
+        valid=jnp.asarray(valid, bool), n_post=n_post)
 
 
 def fixed_fanout_connectivity(

@@ -1,0 +1,77 @@
+"""Optional-hypothesis shim.
+
+The property-based tests prefer real hypothesis when it is installed
+(requirements-dev.txt lists it).  On machines without it, a tiny
+deterministic fallback runs each @given test over a fixed number of seeded
+random draws instead of failing at collection with ModuleNotFoundError.
+Only the strategy surface these tests use is implemented: floats, integers,
+sampled_from.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def integers(min_value, max_value, **_):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.integers(len(seq))])
+
+    st = _Strategies()
+
+    _DEFAULT_EXAMPLES = 10
+
+    def given(**strategy_kw):
+        def decorate(fn):
+            def wrapper():
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(wrapper._max_examples):
+                    drawn = {k: s.example(rng)
+                             for k, s in strategy_kw.items()}
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            # present a zero-arg signature so pytest does not mistake the
+            # drawn parameters for fixtures
+            wrapper.__signature__ = inspect.Signature()
+            wrapper._max_examples = _DEFAULT_EXAMPLES
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_):
+        def decorate(fn):
+            if hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+
+        return decorate

@@ -51,8 +51,8 @@ _SUBPROCESS = textwrap.dedent("""
     from repro.models import model as M
     from repro.configs.base import ShapeConfig
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     results = {{}}
     for arch in ["qwen2-0.5b", "granite-moe-1b-a400m", "mamba2-2.7b"]:
         cfg = dataclasses.replace(reduced(ARCHS[arch]), d_model=256,

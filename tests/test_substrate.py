@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.scaling import probe_and_fit, probe_scale_for_fanin
