@@ -1,0 +1,118 @@
+"""Weak-scaling benchmarks for the sharded SNN engine + device construction.
+
+Two series, both at constant work per device (weak scaling):
+
+  * construction: host-side numpy initializer vs device-resident
+    `device_init` resolve, build wall time vs network size;
+  * simulation: ShardedEngine step time at D = 1, 2, 4, ... devices with
+    neurons/device held constant.
+
+Emits ``experiments/bench/BENCH_snn_scaling.json`` (the perf-trajectory
+seed) and prints the harness CSV rows.
+
+Run on CPU with fake devices (the CI job does this on every push):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.snn_scaling
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+OUT_NAME = "BENCH_snn_scaling.json"
+
+
+def _bench_construction(per_dev: int, n_conn: int, sizes) -> list:
+    import numpy as np
+    import jax
+    from repro.sparse import device_init as DI
+    from repro.sparse import formats as F
+
+    rows = []
+    for n in sizes:
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        F.FixedFanout(n_conn).resolve(rng, n, n, F.UniformWeight(0, 0.5))
+        host_s = time.perf_counter() - t0
+
+        key = jax.random.PRNGKey(0)
+        # compiled-path timing: first call pays jit, second is steady state
+        args = (F.FixedFanout(n_conn), key, n, n, F.UniformWeight(0, 0.5))
+        jax.block_until_ready(DI.device_resolve(*args))
+        t0 = time.perf_counter()
+        jax.block_until_ready(DI.device_resolve(*args))
+        dev_s = time.perf_counter() - t0
+        rows.append({"n": n, "n_conn": n_conn, "host_s": host_s,
+                     "device_s": dev_s,
+                     "speedup": host_s / max(dev_s, 1e-9)})
+        print(f"construct_n={n},{dev_s * 1e6:.1f},"
+              f"host_us={host_s * 1e6:.1f} speedup={rows[-1]['speedup']:.1f}",
+              flush=True)
+    return rows
+
+
+def _bench_weak_scaling_steps(per_dev: int, n_conn: int,
+                              n_steps: int) -> list:
+    import jax
+    from repro.core.models.izhikevich_net import (IzhikevichNetConfig,
+                                                  compile_model)
+    from repro.launch.mesh import make_snn_mesh
+
+    n_dev = jax.device_count()
+    rows = []
+    d = 1
+    while d <= n_dev:
+        n_total = per_dev * d
+        cfg = IzhikevichNetConfig(n_total=n_total,
+                                  n_conn=min(n_conn, n_total))
+        model = compile_model(cfg, mesh=make_snn_mesh(d), init="device")
+        state = model.init_state()
+        jax.block_until_ready(model.run(n_steps, state=state).spike_counts)
+        t0 = time.perf_counter()
+        jax.block_until_ready(model.run(n_steps, state=state).spike_counts)
+        per_step_us = (time.perf_counter() - t0) / n_steps * 1e6
+        rows.append({"devices": d, "n_total": n_total,
+                     "neurons_per_device": per_dev,
+                     "us_per_step": per_step_us})
+        print(f"weak_scaling_d={d}_n={n_total},{per_step_us:.1f},"
+              f"us_per_step", flush=True)
+        d *= 2
+    return rows
+
+
+def main() -> None:
+    import jax
+
+    per_dev = int(os.environ.get("SNN_BENCH_PER_DEV", 1024))
+    n_conn = int(os.environ.get("SNN_BENCH_NCONN", 64))
+    n_steps = int(os.environ.get("SNN_BENCH_STEPS", 50))
+    sizes = [per_dev, 2 * per_dev, 4 * per_dev]
+
+    payload = {
+        "devices": jax.device_count(),
+        "backend": jax.default_backend(),
+        "per_device_neurons": per_dev,
+        "construction": _bench_construction(per_dev, n_conn, sizes),
+        "weak_scaling": _bench_weak_scaling_steps(per_dev, n_conn,
+                                                  n_steps),
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / OUT_NAME).write_text(json.dumps(payload, indent=1,
+                                               default=float))
+    print(f"wrote {RESULTS / OUT_NAME}", flush=True)
+
+
+if __name__ == "__main__":
+    # must precede any jax import: device count locks at backend init
+    if "--xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
+    sys.exit(main())

@@ -26,7 +26,7 @@ from repro.core.snn import neurons as N
 from repro.core.snn.network import Network
 from repro.core.snn.simulator import Simulator
 from repro.core.snn.spec import CompiledModel, ModelSpec
-from repro.sparse.formats import FixedFanout
+from repro.sparse.formats import FixedFanout, UniformWeight
 
 __all__ = ["IzhikevichNetConfig", "spec", "compile_model", "build"]
 
@@ -68,20 +68,24 @@ def spec(cfg: IzhikevichNetConfig) -> ModelSpec:
                              thalamic_inh)
 
     # fixed-fanout random connectivity, n_conn targets per pre neuron over
-    # the WHOLE population (multi-post: split into exc/inh groups at build)
+    # the WHOLE population (multi-post: split into exc/inh groups at build).
+    # Dual-backend weight snippets: bit-identical to the historical
+    # 0.5*r.random / -1.0*r.random lambdas on the host path, and resolvable
+    # on device (spec.build(init="device")).
     ms.add_synapse_population(
         "exc", "exc", ["exc", "inh"], connect=FixedFanout(cfg.n_conn),
-        weight=lambda r, shape: 0.5 * r.random(shape),
+        weight=UniformWeight(0.0, 0.5),
         representation=cfg.representation)
     ms.add_synapse_population(
         "inh", "inh", ["exc", "inh"], connect=FixedFanout(cfg.n_conn),
-        weight=lambda r, shape: -1.0 * r.random(shape),
+        weight=UniformWeight(0.0, -1.0),
         representation=cfg.representation)
     return ms
 
 
-def compile_model(cfg: IzhikevichNetConfig) -> CompiledModel:
-    return spec(cfg).build(dt=cfg.dt, seed=cfg.seed)
+def compile_model(cfg: IzhikevichNetConfig, mesh=None,
+                  init: str = "host") -> CompiledModel:
+    return spec(cfg).build(dt=cfg.dt, seed=cfg.seed, mesh=mesh, init=init)
 
 
 def build(cfg: IzhikevichNetConfig) -> tuple[Network, Simulator]:

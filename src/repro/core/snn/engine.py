@@ -1,0 +1,506 @@
+"""ShardedEngine: multi-device SNN simulation over a jax.sharding mesh.
+
+Populations are partitioned along the neuron axis: device d owns neuron
+block d of *every* population and, for every synapse group, the slots whose
+POST neuron lives in that block (`partition_ell_by_post`).  One step runs
+entirely under `shard_map`:
+
+  1. spike exchange: each device all-gathers the previous step's spikes
+     (one small bool vector per pre population — the only per-step
+     communication, following the distributed-construction literature);
+  2. synaptic propagation: each device scatter-accumulates currents into
+     its own post shard using its connectivity block (the compiled
+     weight-update / postsynaptic snippets are reused unchanged via the
+     `ell=`/`dense=` overrides of SynapseGroup.step);
+  3. neuron updates: the codegen'd model equations advance the local shard.
+
+The engine is *bit-exact* against the single-device Simulator for the same
+seed: the PRNG key schedule is replicated, external inputs are drawn
+full-size and sliced per shard, and the post-sharded connectivity preserves
+per-post-neuron scatter order.  Population sizes are padded to a multiple of
+the device count; padded lanes carry edge-replicated parameters, never
+spike, and are excluded from the finite reduction and all outputs.
+
+The whole n-step scan lives inside one shard_map call, so a run compiles to
+a single program with one all-gather per (population, step).  `sweep_gscale`
+vmaps the scan over candidates *inside* shard_map, composing the paper's
+conductance sweep with neuron-axis parallelism.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import codegen
+from repro.core.snn.network import Network
+from repro.core.snn.simulator import RunResult, SimState
+from repro.core.snn.synapses import SynapseState
+from repro.launch.mesh import snn_axis
+from repro.launch.sharding import neuron_pad, pad_neuron_axis, snn_shardings
+from repro.sparse import formats as F
+from repro.sparse.device_init import partition_ell_by_post
+
+__all__ = ["ShardedEngine"]
+
+
+class ShardedEngine:
+    """Runs a built Network partitioned over a 1-D device mesh."""
+
+    def __init__(self, net: Network, mesh, dt: float = 0.5, seed: int = 0):
+        self.net = net
+        self.mesh = mesh
+        self.axis = snn_axis(mesh)
+        self.n_shards = int(mesh.shape[self.axis])
+        self.dt = float(dt)
+        self.seed = seed
+        self._updates = {
+            name: codegen.compile_sim(pop.model)
+            for name, pop in net.populations.items()
+        }
+        self._group_names = {g.name for g in net.synapses}
+        D = self.n_shards
+        self._npad = {name: neuron_pad(pop.n, D)
+                      for name, pop in net.populations.items()}
+        self._shard = {name: self._npad[name] // D for name in self._npad}
+
+        self._sh = snn_shardings(mesh, self.axis)
+        sh_block = self._sh["block"]
+        sh_neuron = self._sh["neuron"]
+
+        # --- partition connectivity: post-shard every group ---------------
+        # blocks[gname]: {"g","post","valid"} each [D, n_pre, K_local], or
+        # {"dense"}: [D, n_pre, shard] column blocks of the dense mirror.
+        self._blocks: Dict[str, Dict[str, jax.Array]] = {}
+        self._block_specs: Dict[str, Dict[str, P]] = {}
+        self._k_local: Dict[str, int] = {}
+        for g in net.synapses:
+            n_post_pad = self._npad[g.post]
+            if g.representation == "dense" and not g.plastic:
+                w = jnp.pad(g.dense,
+                            ((0, 0), (0, n_post_pad - g.ell.n_post)))
+                blk = w.reshape(g.ell.n_pre, D, n_post_pad // D)
+                blk = jnp.moveaxis(blk, 1, 0)
+                self._blocks[g.name] = {
+                    "dense": jax.device_put(blk, sh_block)}
+                self._block_specs[g.name] = {"dense": P(self.axis, None,
+                                                        None)}
+            else:
+                gg, post, valid, shard_size, k_loc = partition_ell_by_post(
+                    g.ell, D)
+                assert shard_size == self._shard[g.post]
+                self._k_local[g.name] = k_loc
+                self._blocks[g.name] = {
+                    "g": jax.device_put(gg, sh_block),
+                    "post": jax.device_put(post, sh_block),
+                    "valid": jax.device_put(valid, sh_block),
+                }
+                self._block_specs[g.name] = {
+                    k: P(self.axis, None, None) for k in ("g", "post",
+                                                          "valid")}
+
+        # --- per-neuron parameter arrays (scalars stay baked) -------------
+        self._pn_params: Dict[str, Dict[str, jax.Array]] = {}
+        self._pn_specs: Dict[str, Dict[str, P]] = {}
+        self._scalar_params: Dict[str, Dict[str, object]] = {}
+        for name, pop in net.populations.items():
+            pn, sc = {}, {}
+            for k, v in pop.params.items():
+                arr = jnp.asarray(v)
+                if arr.ndim and arr.shape[0] == pop.n:
+                    pn[k] = jax.device_put(
+                        pad_neuron_axis(arr, self._npad[name]), sh_neuron)
+                else:
+                    sc[k] = v
+            self._pn_params[name] = pn
+            self._pn_specs[name] = {k: P(self.axis) for k in pn}
+            self._scalar_params[name] = sc
+
+        self._state_specs = self._make_state_specs()
+        self._run_cache: Dict[tuple, Callable] = {}
+        self._sweep_cache: Dict[tuple, Callable] = {}
+        self._step_cache: Dict[tuple, Callable] = {}
+
+    # ------------------------------------------------------------------
+    # state layout
+    # ------------------------------------------------------------------
+    def _make_state_specs(self) -> SimState:
+        net, ax = self.net, self.axis
+        neurons = {name: {k: P(ax) for k in pop.model.state}
+                   for name, pop in net.populations.items()}
+        spikes = {name: P(ax) for name in net.populations}
+        prev = {name: P(ax) for name, pop in net.populations.items()
+                if pop.edge_spikes}
+        syn = {}
+        for g in net.synapses:
+            # spec twin of each SynapseState: same pytree nodes, P leaves
+            syn[g.name] = SynapseState(
+                psm={k: P(ax) for k in g.psm.state},
+                wu_pre={k: P() for k in g.wum.pre_state},
+                wu_post={k: P(ax) for k in g.wum.post_state},
+                g=P(ax, None, None) if g.plastic else None,
+                syn={k: P(ax, None, None) for k in g.wum.syn_state},
+                spike_buffer=P() if g.delay_steps > 0 else None,
+                cursor=P() if g.delay_steps > 0 else None)
+        return SimState(neurons=neurons, spikes=spikes, prev_above=prev,
+                        syn=syn, t=P(), key=P(), finite=P())
+
+    def init_state(self, key: Optional[jax.Array] = None) -> SimState:
+        """Initial sharded state, bit-equivalent to Simulator.init_state on
+        the real lanes (padding lanes replicate the init constants)."""
+        if key is None:
+            key = jax.random.PRNGKey(self.seed)
+        net, D = self.net, self.n_shards
+        shn = self._sh["neuron"]
+        shr = self._sh["replicated"]
+        shb = self._sh["block"]
+        put = jax.device_put
+        neurons, spikes, prev = {}, {}, {}
+        for name, pop in net.populations.items():
+            npad = self._npad[name]
+            neurons[name] = {
+                k: put(jnp.full((npad,), v, jnp.float32), shn)
+                for k, v in pop.model.state.items()}
+            spikes[name] = put(jnp.zeros((npad,), bool), shn)
+            if pop.edge_spikes:
+                prev[name] = put(jnp.zeros((npad,), bool), shn)
+        syn = {}
+        for g in net.synapses:
+            n_pre = g.ell.n_pre
+            npost_pad = self._npad[g.post]
+            psm = {k: put(jnp.full((npost_pad,), v, jnp.float32), shn)
+                   for k, v in g.psm.state.items()}
+            wu_pre = {k: put(jnp.full((n_pre,), v, jnp.float32), shr)
+                      for k, v in g.wum.pre_state.items()}
+            wu_post = {k: put(jnp.full((npost_pad,), v, jnp.float32), shn)
+                       for k, v in g.wum.post_state.items()}
+            gv = (put(self._blocks[g.name]["g"], shb) if g.plastic
+                  else None)
+            syn_vars = {
+                k: put(jnp.full((D, n_pre, self._k_local[g.name]), v,
+                                jnp.float32), shb)
+                for k, v in g.wum.syn_state.items()}
+            if g.delay_steps > 0:
+                buf = put(jnp.zeros((g.delay_steps + 1, n_pre),
+                                    jnp.float32), shr)
+                cur = put(jnp.zeros((), jnp.int32), shr)
+            else:
+                buf, cur = None, None
+            syn[g.name] = SynapseState(psm=psm, wu_pre=wu_pre,
+                                       wu_post=wu_post, g=gv, syn=syn_vars,
+                                       spike_buffer=buf, cursor=cur)
+        return SimState(
+            neurons=neurons, spikes=spikes, prev_above=prev, syn=syn,
+            t=put(jnp.zeros((), jnp.float32), shr), key=put(key, shr),
+            finite=put(jnp.ones((), bool), shr))
+
+    # ------------------------------------------------------------------
+    # local (per-device) computation
+    # ------------------------------------------------------------------
+    def _squeeze_blocks(self, tree):
+        """[1, n_pre, K] local views -> [n_pre, K]."""
+        return jax.tree.map(lambda x: x[0] if x.ndim == 3 else x, tree)
+
+    def _squeeze_syn(self, syn):
+        out = {}
+        for name, s in syn.items():
+            out[name] = s.__class__(
+                psm=s.psm, wu_pre=s.wu_pre, wu_post=s.wu_post,
+                g=None if s.g is None else s.g[0],
+                syn={k: v[0] for k, v in s.syn.items()},
+                spike_buffer=s.spike_buffer, cursor=s.cursor)
+        return out
+
+    def _unsqueeze_syn(self, syn):
+        out = {}
+        for name, s in syn.items():
+            out[name] = s.__class__(
+                psm=s.psm, wu_pre=s.wu_pre, wu_post=s.wu_post,
+                g=None if s.g is None else s.g[None],
+                syn={k: v[None] for k, v in s.syn.items()},
+                spike_buffer=s.spike_buffer, cursor=s.cursor)
+        return out
+
+    def _local_step(self, state: SimState, blocks, pn_params,
+                    gscales: Mapping[str, jax.Array]):
+        """One dt step on this device's shard; mirrors Simulator.step
+        line for line (key schedule, group order, update order)."""
+        net, dt, ax = self.net, self.dt, self.axis
+        d = jax.lax.axis_index(ax)
+        key, *subkeys = jax.random.split(state.key,
+                                         1 + 2 * len(net.populations))
+        subkeys = iter(subkeys)
+
+        # 0. spike exchange: full pre-spike vectors, one gather per pop
+        full_spikes = {}
+        for name in sorted({g.pre for g in net.synapses}):
+            fs = jax.lax.all_gather(state.spikes[name], ax, tiled=True)
+            full_spikes[name] = fs[: net.populations[name].n]
+
+        # 1. synaptic propagation into the local post shard --------------
+        isyn = {name: jnp.zeros((self._shard[name],), jnp.float32)
+                for name in net.populations}
+        new_syn = dict(state.syn)
+        for g in net.synapses:
+            gs = jnp.asarray(gscales.get(g.name, 1.0), jnp.float32)
+            blk = blocks[g.name]
+            if "dense" in blk:
+                ell_l, dense_l = None, blk["dense"]
+                # a local ELL stand-in keeps post-side shapes consistent
+                ell_l = F.ELLSynapses(
+                    g=jnp.zeros((g.ell.n_pre, 1), jnp.float32),
+                    post_ind=jnp.zeros((g.ell.n_pre, 1), jnp.int32),
+                    valid=jnp.zeros((g.ell.n_pre, 1), bool),
+                    n_post=self._shard[g.post])
+            else:
+                ell_l = F.ELLSynapses(g=blk["g"], post_ind=blk["post"],
+                                      valid=blk["valid"],
+                                      n_post=self._shard[g.post])
+                dense_l = None
+            v_post = state.neurons[g.post].get("V")
+            s_new, cur = g.step(
+                state.syn[g.name], full_spikes[g.pre], gs, dt,
+                v_post=v_post, post_spikes=state.spikes[g.post], t=state.t,
+                ell=ell_l, dense=dense_l)
+            new_syn[g.name] = s_new
+            isyn[g.post] = isyn[g.post] + cur
+
+        # 2+3. neuron updates on the local shard -------------------------
+        new_neurons, new_spikes = {}, {}
+        new_prev = dict(state.prev_above)
+        finite = state.finite
+        for name, pop in net.populations.items():
+            k_in, k_rand = next(subkeys), next(subkeys)
+            S = self._shard[name]
+            lane = d * S + jnp.arange(S)
+            lane_valid = lane < pop.n
+            cur = isyn[name]
+            if pop.input_fn is not None:
+                # full-size draw + slice: bit-identical to the unsharded
+                # path (the key consumes the same stream regardless of D)
+                full = pop.input_fn(k_in, state.t, pop.n)
+                full = jnp.pad(full, (0, self._npad[name] - pop.n))
+                cur = cur + jax.lax.dynamic_slice(full, (d * S,), (S,))
+            params = dict(self._scalar_params[name])
+            params.update(pn_params[name])
+            ext = {"Isyn": cur, "dt": jnp.float32(dt), "t": state.t}
+            if pop.model.needs_rand:
+                full = jax.random.uniform(k_rand, (pop.n,))
+                full = jnp.pad(full, (0, self._npad[name] - pop.n))
+                ext["rand"] = jax.lax.dynamic_slice(full, (d * S,), (S,))
+            ns, above = self._updates[name](state.neurons[name], params,
+                                           ext)
+            if pop.edge_spikes:
+                spk = above & ~state.prev_above[name]
+                new_prev[name] = above
+            else:
+                spk = above
+            new_neurons[name] = ns
+            new_spikes[name] = spk & lane_valid
+            for arr in ns.values():
+                finite = finite & jnp.all(
+                    jnp.isfinite(jnp.where(lane_valid, arr, 0.0)))
+
+        return SimState(
+            neurons=new_neurons, spikes=new_spikes, prev_above=new_prev,
+            syn=new_syn, t=state.t + dt, key=key, finite=finite), new_spikes
+
+    def _combine_finite(self, finite):
+        return jax.lax.pmin(finite.astype(jnp.int32), self.axis) == 1
+
+    # ------------------------------------------------------------------
+    # compiled entry points (cached like CompiledModel)
+    # ------------------------------------------------------------------
+    def _validate_gscales(self, gscales) -> None:
+        if not gscales:
+            return
+        unknown = set(gscales) - self._group_names
+        if unknown:
+            raise ValueError(
+                f"unknown gscale key(s) {sorted(unknown)}; valid synapse "
+                f"group names: {sorted(self._group_names)}")
+
+    def _in_specs(self):
+        return (self._state_specs, self._block_specs, self._pn_specs)
+
+    def _shard_map(self, fn, in_specs, out_specs):
+        return jax.jit(shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False))
+
+    def _make_run(self, n_steps: int, keys: Tuple[str, ...],
+                  record_raster: bool):
+        def local_fn(state, blocks, pn_params, vals):
+            blocks = {k: self._squeeze_blocks(v) for k, v in blocks.items()}
+            state = state.__class__(
+                neurons=state.neurons, spikes=state.spikes,
+                prev_above=state.prev_above,
+                syn=self._squeeze_syn(state.syn), t=state.t, key=state.key,
+                finite=state.finite)
+            gs = dict(zip(keys, vals))
+
+            def body(carry, _):
+                st, counts = carry
+                st2, spk = self._local_step(st, blocks, pn_params, gs)
+                counts = {k: counts[k] + spk[k] for k in counts}
+                return (st2, counts), (spk if record_raster else None)
+
+            counts0 = {name: jnp.zeros((self._shard[name],), jnp.int32)
+                       for name in self.net.populations}
+            (st2, counts), raster = jax.lax.scan(
+                body, (state, counts0), None, length=n_steps)
+            st2 = st2.__class__(
+                neurons=st2.neurons, spikes=st2.spikes,
+                prev_above=st2.prev_above,
+                syn=self._unsqueeze_syn(st2.syn), t=st2.t, key=st2.key,
+                finite=self._combine_finite(st2.finite))
+            return st2, counts, raster
+
+        ax = self.axis
+        counts_specs = {name: P(ax) for name in self.net.populations}
+        raster_specs = ({name: P(None, ax) for name in self.net.populations}
+                        if record_raster else None)
+        return self._shard_map(
+            local_fn,
+            in_specs=(*self._in_specs(), tuple(P() for _ in keys)),
+            out_specs=(self._state_specs, counts_specs, raster_specs))
+
+    def run(self, n_steps: int,
+            gscales: Optional[Mapping[str, jax.Array]] = None,
+            state: Optional[SimState] = None,
+            record_raster: bool = False) -> RunResult:
+        """Scan n_steps under shard_map; spike statistics match the
+        single-device Simulator bit for bit."""
+        gscales = dict(gscales or {})
+        self._validate_gscales(gscales)
+        if state is None:
+            state = self.init_state()
+        keys = tuple(sorted(gscales))
+        cache_key = (n_steps, keys, record_raster)
+        if cache_key not in self._run_cache:
+            self._run_cache[cache_key] = self._make_run(n_steps, keys,
+                                                        record_raster)
+        vals = tuple(jnp.asarray(gscales[k], jnp.float32) for k in keys)
+        st2, counts, raster = self._run_cache[cache_key](
+            state, self._blocks, self._pn_params, vals)
+        pops = self.net.populations
+        counts = {k: v[: pops[k].n] for k, v in counts.items()}
+        t_sec = n_steps * self.dt * 1e-3
+        rates = {k: jnp.mean(v) / t_sec for k, v in counts.items()}
+        if record_raster:
+            raster = {k: v[:, : pops[k].n] for k, v in raster.items()}
+        return RunResult(state=st2, spike_counts=counts, rates_hz=rates,
+                         finite=st2.finite,
+                         raster=raster if record_raster else None)
+
+    def _make_step(self, keys: Tuple[str, ...]):
+        def local_fn(state, blocks, pn_params, vals):
+            blocks = {k: self._squeeze_blocks(v) for k, v in blocks.items()}
+            state = state.__class__(
+                neurons=state.neurons, spikes=state.spikes,
+                prev_above=state.prev_above,
+                syn=self._squeeze_syn(state.syn), t=state.t, key=state.key,
+                finite=state.finite)
+            st2, spk = self._local_step(state, blocks, pn_params,
+                                        dict(zip(keys, vals)))
+            st2 = st2.__class__(
+                neurons=st2.neurons, spikes=st2.spikes,
+                prev_above=st2.prev_above,
+                syn=self._unsqueeze_syn(st2.syn), t=st2.t, key=st2.key,
+                finite=st2.finite)
+            return st2, spk
+
+        ax = self.axis
+        return self._shard_map(
+            local_fn,
+            in_specs=(*self._in_specs(), tuple(P() for _ in keys)),
+            out_specs=(self._state_specs,
+                       {name: P(ax) for name in self.net.populations}))
+
+    def step(self, state: SimState,
+             gscales: Optional[Mapping[str, jax.Array]] = None):
+        """One dt step (sharded); returns (new_state, spikes dict [n])."""
+        gscales = dict(gscales or {})
+        self._validate_gscales(gscales)
+        keys = tuple(sorted(gscales))
+        if keys not in self._step_cache:
+            self._step_cache[keys] = self._make_step(keys)
+        vals = tuple(jnp.asarray(gscales[k], jnp.float32) for k in keys)
+        st2, spk = self._step_cache[keys](state, self._blocks,
+                                          self._pn_params, vals)
+        return st2, {k: v[: self.net.populations[k].n]
+                     for k, v in spk.items()}
+
+    def _make_sweep(self, n_steps: int, names: Tuple[str, ...]):
+        def local_fn(state, blocks, pn_params, vals):
+            blocks = {k: self._squeeze_blocks(v) for k, v in blocks.items()}
+            state = state.__class__(
+                neurons=state.neurons, spikes=state.spikes,
+                prev_above=state.prev_above,
+                syn=self._squeeze_syn(state.syn), t=state.t, key=state.key,
+                finite=state.finite)
+
+            def one(v):
+                gs = {n: v for n in names}
+
+                def body(carry, _):
+                    st, counts = carry
+                    st2, spk = self._local_step(st, blocks, pn_params, gs)
+                    counts = {k: counts[k] + spk[k] for k in counts}
+                    return (st2, counts), None
+
+                counts0 = {name: jnp.zeros((self._shard[name],), jnp.int32)
+                           for name in self.net.populations}
+                (st2, counts), _ = jax.lax.scan(
+                    body, (state, counts0), None, length=n_steps)
+                return counts, st2.finite
+
+            counts, finite = jax.vmap(one)(vals)
+            return counts, self._combine_finite(finite)
+
+        ax = self.axis
+        return self._shard_map(
+            local_fn,
+            in_specs=(*self._in_specs(), P()),
+            out_specs=({name: P(None, ax)
+                        for name in self.net.populations}, P()))
+
+    def sweep_gscale(self, names: Sequence[str], values, n_steps: int,
+                     state: Optional[SimState] = None):
+        """Vmapped gscale sweep inside shard_map: candidates on the batch
+        dimension, neurons on the mesh.  Returns (values, rates, finite,
+        counts) matching CompiledModel.sweep_gscale semantics."""
+        names = tuple(names)
+        self._validate_gscales({n: 1.0 for n in names})
+        if state is None:
+            state = self.init_state()
+        values = jnp.atleast_1d(jnp.asarray(values, jnp.float32))
+        cache_key = (tuple(names), n_steps)
+        if cache_key not in self._sweep_cache:
+            self._sweep_cache[cache_key] = self._make_sweep(n_steps, names)
+        counts, finite = self._sweep_cache[cache_key](
+            state, self._blocks, self._pn_params, values)
+        pops = self.net.populations
+        counts = {k: v[:, : pops[k].n] for k, v in counts.items()}
+        t_sec = n_steps * self.dt * 1e-3
+        rates = {k: jnp.mean(v, axis=1) / t_sec for k, v in counts.items()}
+        return values, rates, finite, counts
+
+    def memory_report(self) -> List[dict]:
+        """Per-group sharded footprint next to the paper's eq-(1)/(2)
+        elements: what one device actually holds."""
+        out = []
+        for g in self.net.synapses:
+            rep = g.memory_report()
+            blk = self._blocks[g.name]
+            if "dense" in blk:
+                local = int(blk["dense"].shape[1] * blk["dense"].shape[2])
+            else:
+                local = int(blk["g"].shape[1] * blk["g"].shape[2])
+            rep["local_elements_per_device"] = local
+            rep["n_shards"] = self.n_shards
+            out.append(rep)
+        return out

@@ -85,6 +85,7 @@ class Simulator:
             for name in net.populations
         }
         self._group_names = {g.name for g in net.synapses}
+        self._run_jit_cache: Dict[tuple, object] = {}
 
     def _validate_gscales(
             self, gscales: Optional[Mapping[str, jax.Array]]) -> None:
@@ -199,11 +200,18 @@ class Simulator:
                          raster=raster if record_raster else None)
 
     # jit-compiled convenience wrapper (step count static) --------------
-    def run_jit(self, n_steps: int):
-        import functools
+    def run_jit(self, n_steps: int, record_raster: bool = False):
+        """Cached per (n_steps, record_raster), mirroring CompiledModel's
+        executable cache: repeated calls with the same step count reuse one
+        compiled program instead of re-jitting (gscale *values* are traced,
+        so sweeping values also reuses it)."""
+        cache_key = (int(n_steps), bool(record_raster))
+        if cache_key not in self._run_jit_cache:
 
-        @functools.partial(jax.jit, static_argnames=())
-        def _run(state, gscales):
-            return self.run(state, n_steps, gscales)
+            @jax.jit
+            def _run(state, gscales):
+                return self.run(state, n_steps, gscales,
+                                record_raster=record_raster)
 
-        return _run
+            self._run_jit_cache[cache_key] = _run
+        return self._run_jit_cache[cache_key]

@@ -223,33 +223,62 @@ class ModelSpec:
         return spec
 
     # -- build ------------------------------------------------------------
-    def build(self, dt: float = 0.5, seed: int = 0) -> "CompiledModel":
-        """Validate, resolve connectivity (seeded), choose representations
-        and generate the simulator.  Initializers are resolved in
-        declaration order from a single np rng seeded with `seed`, so the
-        same spec + seed reproduces the same graph."""
+    def build(self, dt: float = 0.5, seed: int = 0, mesh=None,
+              init: str = "host") -> "CompiledModel":
+        """Validate, resolve connectivity (seeded) and generate the
+        simulator.
+
+        init="host" (default): initializers are resolved in declaration
+        order from a single np rng seeded with `seed` — same spec + seed
+        reproduces the same graph bit-for-bit (the reference oracle).
+
+        init="device": connectivity is generated on-accelerator by
+        `repro.sparse.device_init` — jit-compiled, O(nnz) memory,
+        counter-based (per-row key-split) so the graph is seed-deterministic
+        and independent of device count.  Weights must be dual-backend
+        snippets (UniformWeight / NormalWeight / ConstantWeight) or scalars.
+
+        mesh: a 1-D jax.sharding mesh (see launch.mesh.make_snn_mesh) —
+        populations are partitioned along the neuron axis and `run` /
+        `step` / `sweep_gscale` execute on the ShardedEngine; mesh=None
+        keeps the single-device Simulator path.
+        """
+        if init not in ("host", "device"):
+            raise SpecError(f"init must be 'host' or 'device', got {init!r}")
         if not self.populations:
             raise SpecError(f"model {self.name!r} declares no populations")
         rng = np.random.default_rng(seed)
+        base_key = jax.random.PRNGKey(seed) if init == "device" else None
         net = Network(name=self.name)
         for pop in self.populations.values():
             net.add_population(pop.name, pop.model, pop.n,
                                params=pop.params, input_fn=pop.input_fn,
                                edge_spikes=pop.edge_spikes)
 
-        for sp in self.synapses:
+        for sidx, sp in enumerate(self.synapses):
             n_pre = self.populations[sp.pre].n
             sizes = [self.populations[p].n for p in sp.post]
             n_post_total = int(sum(sizes))
-            weight_fn = _as_weight_fn(sp.weight)
-            try:
-                post_ind, g, valid = sp.connect.resolve(
-                    rng, n_pre, n_post_total, weight_fn)
-            except ValueError as e:
-                raise SpecError(
-                    f"synapse population {sp.name!r} "
-                    f"({sp.pre} -> {'+'.join(sp.post)}): {e}") from None
+            where = (f"synapse population {sp.name!r} "
+                     f"({sp.pre} -> {'+'.join(sp.post)})")
+            if init == "device":
+                from repro.sparse import device_init as DI
+                try:
+                    post_ind, g, valid = DI.device_resolve(
+                        sp.connect, jax.random.fold_in(base_key, sidx),
+                        n_pre, n_post_total, sp.weight)
+                except (ValueError, TypeError, NotImplementedError) as e:
+                    # TypeError here is our own declaration check (numpy
+                    # weight callables can't be traced), not a user bug
+                    raise SpecError(f"{where}: {e}") from None
+            else:
+                try:
+                    post_ind, g, valid = sp.connect.resolve(
+                        rng, n_pre, n_post_total, _as_weight_fn(sp.weight))
+                except ValueError as e:
+                    raise SpecError(f"{where}: {e}") from None
 
+            xp = jnp if init == "device" else np
             lo = 0
             for pname, n_p, gname in zip(sp.post, sizes, sp.group_names()):
                 hi = lo + n_p
@@ -257,8 +286,8 @@ class ModelSpec:
                     idx, gg, vv = post_ind, g, valid
                 else:
                     mask = (post_ind >= lo) & (post_ind < hi) & valid
-                    idx = np.where(mask, post_ind - lo, 0).astype(np.int32)
-                    gg = np.where(mask, g, 0.0).astype(np.float32)
+                    idx = xp.where(mask, post_ind - lo, 0).astype(xp.int32)
+                    gg = xp.where(mask, g, 0.0).astype(xp.float32)
                     vv = mask
                 group = SynapseGroup(
                     name=gname, pre=sp.pre, post=pname,
@@ -269,8 +298,13 @@ class ModelSpec:
                 net.add_synapse(group)
                 lo = hi
 
+        engine = None
+        if mesh is not None:
+            from repro.core.snn.engine import ShardedEngine
+            engine = ShardedEngine(net, mesh, dt=dt, seed=seed)
         return CompiledModel(spec=self, network=net,
-                             simulator=Simulator(net, dt=dt, seed=seed))
+                             simulator=Simulator(net, dt=dt, seed=seed),
+                             engine=engine)
 
 
 @dataclasses.dataclass
@@ -288,14 +322,17 @@ class CompiledModel:
 
     Wraps the lower-level Simulator with a cached-jit `run`, a `step`, and
     the first-class `sweep_gscale` (one compile, vmapped over candidates)
-    that the conductance-scaling study drives.
+    that the conductance-scaling study drives.  When built with a mesh,
+    `run`/`step`/`sweep_gscale` execute on the multi-device ShardedEngine
+    instead (same results, neuron axis partitioned over devices).
     """
 
     def __init__(self, spec: ModelSpec, network: Network,
-                 simulator: Simulator):
+                 simulator: Simulator, engine=None):
         self.spec = spec
         self.network = network
         self.simulator = simulator
+        self.engine = engine
         self._run_cache: Dict[tuple, Callable] = {}
         self._sweep_cache: Dict[tuple, Callable] = {}
 
@@ -321,10 +358,14 @@ class CompiledModel:
         return self.simulator.dt
 
     def init_state(self, key: Optional[jax.Array] = None) -> SimState:
+        if self.engine is not None:
+            return self.engine.init_state(key)
         return self.simulator.init_state(key)
 
     def step(self, state: SimState,
              gscales: Optional[Mapping[str, jax.Array]] = None):
+        if self.engine is not None:
+            return self.engine.step(state, self._norm_gscales(gscales))
         return self.simulator.step(state, self._norm_gscales(gscales))
 
     def _norm_gscales(self, gscales) -> Dict[str, jax.Array]:
@@ -348,6 +389,8 @@ class CompiledModel:
         record_raster); gscale *values* are traced, so sweeping values
         reuses one executable."""
         gscales = self._norm_gscales(gscales)
+        if self.engine is not None:
+            return self.engine.run(n_steps, gscales, state, record_raster)
         if state is None:
             state = self.init_state()
         keys = tuple(sorted(gscales))
@@ -372,6 +415,11 @@ class CompiledModel:
         dimension the paper's candidate search wants."""
         requested = [group] if isinstance(group, str) else list(group)
         names = [g for r in requested for g in self._expand_group(r)]
+        if self.engine is not None:
+            vals, rates, finite, counts = self.engine.sweep_gscale(
+                names, values, n_steps, state)
+            return SweepResult(values=vals, rates_hz=rates, finite=finite,
+                               spike_counts=counts)
         if state is None:
             state = self.init_state()
         values = jnp.atleast_1d(jnp.asarray(values, jnp.float32))

@@ -232,23 +232,31 @@ class SynapseGroup:
     # -- propagation -------------------------------------------------------
     def _raw_current(self, spikes: jax.Array, gscale: jax.Array,
                      g: Optional[jax.Array], syn: Dict[str, jax.Array],
-                     externals: Dict[str, jax.Array]) -> jax.Array:
-        """sum_i spike_i * w_eff_ij * gscale for this step's arriving spikes."""
+                     externals: Dict[str, jax.Array],
+                     ell: Optional[F.ELLSynapses] = None,
+                     dense: Optional[jax.Array] = None) -> jax.Array:
+        """sum_i spike_i * w_eff_ij * gscale for this step's arriving spikes.
+
+        `ell`/`dense` override the stored representation — the sharded
+        engine passes each device's post-shard of the connectivity while
+        reusing this group's compiled dynamics unchanged."""
+        ell = self.ell if ell is None else ell
+        dense = self.dense if dense is None else dense
         spk = jnp.asarray(spikes, jnp.float32)
         if self.wum.is_static_pulse and g is None:
             # static weights: use the prebuilt representation unmodified
             if self.representation == "dense":
-                out = sparse_ops.accumulate_dense(self.dense, spk)
+                out = sparse_ops.accumulate_dense(dense, spk)
             else:
-                out = kops.ell_spmv(self.ell, spk)
+                out = kops.ell_spmv(ell, spk)
         else:
-            g_cur = self.ell.g if g is None else g
+            g_cur = ell.g if g is None else g
             w_eff = self._wu.effective_weight(g_cur, syn, self.wum.params,
                                               externals)
-            w_eff = jnp.where(self.ell.valid, w_eff, 0.0)
-            ell = F.ELLSynapses(g=w_eff, post_ind=self.ell.post_ind,
-                                valid=self.ell.valid, n_post=self.ell.n_post)
-            out = kops.ell_spmv(ell, spk)
+            w_eff = jnp.where(ell.valid, w_eff, 0.0)
+            eff = F.ELLSynapses(g=w_eff, post_ind=ell.post_ind,
+                                valid=ell.valid, n_post=ell.n_post)
+            out = kops.ell_spmv(eff, spk)
         return self.sign * gscale * out
 
     def step(
@@ -256,8 +264,13 @@ class SynapseGroup:
         dt: float, v_post: Optional[jax.Array] = None,
         post_spikes: Optional[jax.Array] = None,
         t: Optional[jax.Array] = None,
+        ell: Optional[F.ELLSynapses] = None,
+        dense: Optional[jax.Array] = None,
     ) -> tuple[SynapseState, jax.Array]:
-        """Advance one step; returns (new_state, current into post neurons)."""
+        """Advance one step; returns (new_state, current into post neurons).
+
+        `ell`/`dense` override the stored connectivity (sharded engine path);
+        all shapes on the post side then follow the override."""
         if self.delay_steps > 0:
             buf = state.spike_buffer.at[state.cursor].set(
                 jnp.asarray(spikes, jnp.float32))
@@ -268,16 +281,18 @@ class SynapseGroup:
             arriving = spikes
             new_buf, new_cur = state.spike_buffer, state.cursor
 
+        lell = self.ell if ell is None else ell
         # dt/t are always present in the snippet environments: any model
         # code referencing them must work even when a legacy caller omits t
         wu_ext = {"dt": dt, "t": t if t is not None else jnp.float32(0.0)}
-        inj = self._raw_current(arriving, gscale, state.g, state.syn, wu_ext)
+        inj = self._raw_current(arriving, gscale, state.g, state.syn, wu_ext,
+                                ell=ell, dense=dense)
 
         # -- learning (generated weight-update code) -----------------------
         pre_spk = jnp.asarray(arriving, jnp.float32)
         post_spk = (jnp.asarray(post_spikes, jnp.float32)
                     if post_spikes is not None
-                    else jnp.zeros((self.ell.n_post,), jnp.float32))
+                    else jnp.zeros((lell.n_post,), jnp.float32))
         new_pre = state.wu_pre
         if self._wu.pre_step is not None:
             new_pre = self._wu.pre_step(
@@ -290,14 +305,14 @@ class SynapseGroup:
                 {**wu_ext, "post_spike": post_spk})
         new_g, new_syn = state.g, state.syn
         if self._wu.learn is not None:
-            gather = self.ell.post_ind
+            gather = lell.post_ind
             traces = {"pre_spike": pre_spk[:, None],
                       "post_spike": post_spk[gather]}
             traces.update({k: v[:, None] for k, v in new_pre.items()})
             traces.update({k: v[gather] for k, v in new_post.items()})
             g_learn, new_syn = self._wu.learn(
                 state.g, state.syn, traces, self.wum.params, wu_ext)
-            new_g = jnp.where(self.ell.valid, g_learn, state.g)
+            new_g = jnp.where(lell.valid, g_learn, state.g)
 
         # -- postsynaptic dynamics (generated decay/apply code) ------------
         psm_ext = {"inj": inj, "dt": wu_ext["dt"], "t": wu_ext["t"]}

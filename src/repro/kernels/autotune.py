@@ -29,7 +29,8 @@ from typing import Dict, Sequence, Tuple
 
 __all__ = [
     "TPULimits", "V5E", "occupancy", "choose_block_elementwise",
-    "choose_block_matmul", "occupancy_report",
+    "choose_block_matmul", "choose_block_spmv", "spmv_block_bytes",
+    "occupancy_report",
 ]
 
 
@@ -143,6 +144,58 @@ def choose_block_matmul(
                     best = (key, {"bm": bm, "bn": bn, "bk": bk,
                                   "occupancy": occ, "grid": grid})
     assert best is not None
+    return best[1]
+
+
+def spmv_block_bytes(bp: int, bn: int, k: int, b: int,
+                     dtype_bytes: int = 4) -> int:
+    """VMEM working set of one ELL-spmv grid step (repro.kernels.ell_spmv):
+    spike tile [B, BP], g + idx tiles [BP, K], output tile [B, BN], plus the
+    in-kernel one-hot materialization [BP*K, BN] and the K-expanded spike
+    tile [B, BP*K] — the one-hot temporary is the VMEM driver."""
+    m = bp * k
+    return (b * bp + 2 * bp * k + b * bn + m * bn + b * m) * dtype_bytes
+
+
+def choose_block_spmv(
+    n_pre: int, k: int, n_post: int, b: int, dtype_bytes: int = 4,
+    lim: TPULimits = V5E,
+) -> Dict[str, int]:
+    """Pick (bp, bn) tiles for the ELL one-hot-matmul spmv via the
+    occupancy model (paper §3: smallest block that still hides latency;
+    ties prefer larger tiles / fewer grid steps).
+
+    The kernel loads full-K row tiles, so for very wide rows (K beyond a
+    few thousand slots) *no* (bp, bn) fits VMEM: the result then carries
+    ``feasible: False`` and the minimum (8, 128) tiling — callers
+    (repro.kernels.ell_spmv) split K into feasible chunks and sum."""
+    bn_candidates = [bn for bn in (128, 256, 512, 1024)
+                     if bn <= max(128, math.ceil(n_post / lim.lane)
+                                  * lim.lane)]
+    best = None
+    for bn in bn_candidates:
+        bp = lim.sublane_f32
+        while bp <= max(lim.sublane_f32, 1 << 14):
+            if bp > n_pre and bp != lim.sublane_f32:
+                break
+            grid = math.ceil(n_post / bn) * math.ceil(n_pre / bp)
+            blk = spmv_block_bytes(bp, bn, k, b, dtype_bytes)
+            occ = occupancy(blk, grid,
+                            [(bp, k), (b, bp), (b, bn), (bp * k, bn)],
+                            dtype_bytes, lim)
+            key = (occ, bp * bn)           # ties -> bigger tile
+            if best is None or key > best[0]:
+                best = (key, {"bp": bp, "bn": bn, "occupancy": occ,
+                              "grid": grid,
+                              "block_bytes": blk, "feasible": occ > 0.0})
+            bp *= 2
+    if best is None or best[0][0] <= 0.0:
+        blk = spmv_block_bytes(lim.sublane_f32, lim.lane, k, b, dtype_bytes)
+        return {"bp": lim.sublane_f32, "bn": lim.lane, "occupancy": 0.0,
+                "grid": (math.ceil(n_post / lim.lane)
+                         * math.ceil(n_pre / lim.sublane_f32)),
+                "block_bytes": blk,
+                "feasible": blk * lim.double_buffer <= lim.vmem_bytes}
     return best[1]
 
 

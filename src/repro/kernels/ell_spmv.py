@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.autotune import V5E, TPULimits
+from repro.kernels.autotune import V5E, TPULimits, choose_block_spmv
 
 __all__ = ["ell_spmv_pallas", "default_blocks"]
 
@@ -64,16 +64,23 @@ def _kernel(spk_ref, g_ref, idx_ref, out_ref, *, bn: int):
 
 def default_blocks(n_pre: int, k: int, n_post: int, b: int,
                    lim: TPULimits = V5E) -> tuple[int, int]:
-    """(pre_block, post_block) via the occupancy model: the one-hot tile
-    (BP*K x BN) f32 is the VMEM driver; keep 2x-buffered footprint under
-    budget and grid >= min_grid_per_core."""
-    bn = min(512, max(lim.lane, lim.lane * math.ceil(n_post / lim.lane)))
-    # shrink BN to fit; grow BP while the one-hot tile stays under ~4 MiB
-    bp = max(8, min(n_pre, 4 * 1024 * 1024 // max(1, k * bn * 4)))
-    bp = min(n_pre, 1 << (bp - 1).bit_length())  # round to pow2
-    while bp * k * bn * 4 > 6 * 1024 * 1024 and bp > 8:
-        bp //= 2
-    return bp, bn
+    """(pre_block, post_block) from the occupancy-based block-size
+    determination (paper §3, repro.kernels.autotune.choose_block_spmv)."""
+    cfg = choose_block_spmv(n_pre, k, n_post, b, lim=lim)
+    return cfg["bp"], cfg["bn"]
+
+
+def feasible_k_chunk(n_pre: int, k: int, n_post: int, b: int,
+                     lim: TPULimits = V5E) -> tuple[int, dict]:
+    """Largest K-chunk whose chosen tiling fits VMEM (the kernel loads
+    full-K row tiles, so very wide rows must be split and the partial
+    currents summed).  Returns (k_chunk, block config for that chunk)."""
+    kc = k
+    while True:
+        cfg = choose_block_spmv(n_pre, kc, n_post, b, lim=lim)
+        if cfg["feasible"] or kc == 1:
+            return kc, cfg
+        kc = (kc + 1) // 2
 
 
 @functools.partial(
@@ -85,15 +92,32 @@ def ell_spmv_pallas(
     post_block: int | None = None, interpret: bool = False,
 ) -> jax.Array:
     """Batched ELL spmv on TPU.  g/post_ind/valid: [n_pre, K];
-    spikes: [B, n_pre] -> [B, n_post]."""
+    spikes: [B, n_pre] -> [B, n_post].
+
+    When no (bp, bn) tiling of the full K width fits VMEM (K beyond a few
+    thousand slots), the rows are split into feasible K-chunks, each
+    launched separately, and the partial currents summed."""
     n_pre, k = g.shape
     b = spikes.shape[0]
-    gm = jnp.where(valid, g, 0.0).astype(jnp.float32)
 
-    if pre_block is None or post_block is None:
+    if pre_block is None and post_block is None:
+        kc, cfg = feasible_k_chunk(n_pre, k, n_post, b)
+        if kc < k:
+            out = jnp.zeros((b, n_post), jnp.float32)
+            for lo in range(0, k, kc):
+                out = out + ell_spmv_pallas(
+                    g[:, lo:lo + kc], post_ind[:, lo:lo + kc],
+                    valid[:, lo:lo + kc], spikes, n_post=n_post,
+                    pre_block=cfg["bp"], post_block=cfg["bn"],
+                    interpret=interpret)
+            return out
+        pre_block, post_block = cfg["bp"], cfg["bn"]
+    elif pre_block is None or post_block is None:
         dbp, dbn = default_blocks(n_pre, k, n_post, b)
         pre_block = pre_block or dbp
         post_block = post_block or dbn
+
+    gm = jnp.where(valid, g, 0.0).astype(jnp.float32)
 
     # pad to block multiples (padded g rows are zero => no contribution;
     # padded post columns are sliced off)

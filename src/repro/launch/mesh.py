@@ -16,7 +16,10 @@ from typing import Optional, Sequence, Tuple
 import jax
 
 __all__ = ["make_mesh", "make_production_mesh", "make_local_mesh",
-           "batch_axes", "MeshPlan"]
+           "make_snn_mesh", "snn_axis", "batch_axes", "MeshPlan"]
+
+#: mesh axis the SNN engine partitions neuron populations over
+SNN_AXIS = "neuron"
 
 
 def _axis_type_kwargs(n: int) -> dict:
@@ -50,6 +53,25 @@ def make_local_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     mp = max(1, min(model_parallel, n))
     return make_mesh((n // mp, mp), ("data", "model"))
+
+
+def make_snn_mesh(n_devices: Optional[int] = None):
+    """1-D mesh for the sharded SNN engine: populations are partitioned
+    along the neuron axis (`SNN_AXIS`) over `n_devices` (default: all)."""
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return make_mesh((n,), (SNN_AXIS,))
+
+
+def snn_axis(mesh) -> str:
+    """The neuron-partition axis of a mesh: `SNN_AXIS` when present, else a
+    single-axis mesh's only axis (so plain 1-D meshes work unrenamed)."""
+    if SNN_AXIS in mesh.axis_names:
+        return SNN_AXIS
+    if len(mesh.axis_names) == 1:
+        return mesh.axis_names[0]
+    raise ValueError(
+        f"mesh axes {mesh.axis_names} have no {SNN_AXIS!r} axis; build the "
+        "mesh with make_snn_mesh or name one axis 'neuron'")
 
 
 def batch_axes(mesh) -> Tuple[str, ...]:

@@ -26,7 +26,8 @@ from repro.launch.mesh import batch_axes
 from repro.models.layers import clear_axis_env, set_axis_env
 
 __all__ = ["activate", "param_specs", "param_shardings", "batch_specs",
-           "cache_shardings", "spec_tree_to_shardings"]
+           "cache_shardings", "spec_tree_to_shardings",
+           "neuron_pad", "pad_neuron_axis", "snn_shardings"]
 
 
 @contextlib.contextmanager
@@ -152,6 +153,40 @@ def batch_specs(batch, mesh):
         return P(*([None] * leaf.ndim))
 
     return jax.tree.map(spec_of, batch)
+
+
+# --------------------------------------------------------------------------
+# SNN neuron-axis partitioning (the sharded engine, repro.core.snn.engine):
+# every population is split along its neuron dimension over the mesh's
+# neuron axis; these helpers own the pad-to-divisible layout so the engine
+# and tests agree on it.
+# --------------------------------------------------------------------------
+
+def neuron_pad(n: int, n_shards: int) -> int:
+    """Smallest multiple of n_shards >= n (per-population padded size)."""
+    return -(-n // n_shards) * n_shards
+
+
+def pad_neuron_axis(x, n_pad: int, axis: int = 0):
+    """Pad a per-neuron array to the sharded size, edge-replicating so the
+    padded lanes carry benign (bounded-dynamics) values."""
+    n = x.shape[axis]
+    if n == n_pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, n_pad - n)
+    return jnp.pad(x, widths, mode="edge")
+
+
+def snn_shardings(mesh, axis: str):
+    """The three placements SNN engine state uses: per-neuron arrays split on
+    `axis`, replicated scalars/full-pre vectors, and [D, n_pre, K] per-shard
+    connectivity blocks split on their leading device dim."""
+    return {
+        "neuron": NamedSharding(mesh, P(axis)),
+        "replicated": NamedSharding(mesh, P()),
+        "block": NamedSharding(mesh, P(axis, None, None)),
+    }
 
 
 def cache_shardings(caches, mesh):

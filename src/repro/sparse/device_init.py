@@ -1,0 +1,301 @@
+"""Device-resident connectivity construction (the build-time hot path).
+
+The host-side initializers in `repro.sparse.formats` materialize the synapse
+graph with a python loop over pre-neuron rows — at the paper's scalability-
+study sizes the *construction*, not the step loop, becomes the ceiling
+(minutes of host time and host RAM for graphs whose simulation step is
+milliseconds).  Following "Runtime Construction of Large-Scale Spiking
+Neuronal Network Models on GPU Devices" (Golosio et al., 2023), this module
+generates connectivity *on device, in parallel*, emitting `ELLSynapses`
+directly in O(nnz) memory.
+
+Design rules:
+
+* **Counter-based randomness.**  Every row draws from
+  ``fold_in(base_key, global_row_index)`` — a pure function of (seed, row).
+  The graph is therefore bit-deterministic for a fixed seed and *identical*
+  regardless of device count or row chunking: generating rows [0, n) in one
+  call equals concatenating any partition of the rows (`rows=` argument).
+* **O(nnz) memory.**  Fixed-fanout sampling without replacement uses a
+  dedup-redraw loop over the K slots (exactly the "collect first K distinct
+  values of an iid stream" construction of a uniform K-subset), never a
+  dense [n_pre, n_post] mask.  Only when K > n_post/2 — where O(n_post) per
+  row *is* O(K) — does it switch to a per-row top-k permutation.
+* **Same declarations.**  The dispatcher `device_resolve` consumes the very
+  same `ConnectivityInit` dataclasses the host path uses; weights come from
+  the dual-backend `WeightSnippet`s (scalars and None also work).
+
+`partition_ell_by_post` repacks a built ELL into post-sharded per-device
+blocks for the sharded engine (`repro.core.snn.engine`): slot (i, k) goes to
+the shard owning post neuron post_ind[i, k], compacted to K_local slots with
+the original slot order preserved (so scatter-accumulation order — and hence
+bit-exact currents — is preserved per post neuron).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse import formats as F
+
+__all__ = [
+    "device_resolve", "device_fixed_fanout", "device_fixed_probability",
+    "device_one_to_one", "device_dense", "partition_ell_by_post",
+    "as_device_weight",
+]
+
+_JTriple = Tuple[jax.Array, jax.Array, jax.Array]  # post_ind, g, valid
+
+_MAX_REDRAW_ROUNDS = 64  # residual-duplicate probability < 2**-64 per slot
+
+
+# ---------------------------------------------------------------------------
+# weights
+# ---------------------------------------------------------------------------
+
+def as_device_weight(weight) -> F.WeightSnippet:
+    """Normalize a ModelSpec weight declaration to a device-capable snippet.
+
+    None -> ConstantWeight(1); scalars -> ConstantWeight(x); WeightSnippet
+    passes through.  Raw numpy callables cannot be traced under jit — raise
+    with the fix spelled out.
+    """
+    if weight is None:
+        return F.ConstantWeight(1.0)
+    if isinstance(weight, F.WeightSnippet):
+        return weight
+    if isinstance(weight, (int, float)):
+        return F.ConstantWeight(float(weight))
+    raise TypeError(
+        f"device-side construction needs a dual-backend weight initializer "
+        f"(ConstantWeight / UniformWeight / NormalWeight, or a scalar), got "
+        f"{weight!r}; host-only numpy callables cannot run under jit — "
+        "declare the weight as a WeightSnippet or build with init='host'")
+
+
+def _row_keys(key: jax.Array, rows: jax.Array) -> jax.Array:
+    return jax.vmap(lambda r: jax.random.fold_in(key, r))(rows)
+
+
+def _row_weights(weight: F.WeightSnippet, key: jax.Array, rows: jax.Array,
+                 k: int) -> jax.Array:
+    """Per-row keyed weight draws: w[r] depends only on (seed, global row)."""
+    wkey = jax.random.fold_in(key, 0x5EED)
+    return jax.vmap(lambda rk: weight.device(rk, (k,)))(_row_keys(wkey, rows))
+
+
+# ---------------------------------------------------------------------------
+# distinct sampling: k targets per row, uniform without replacement
+# ---------------------------------------------------------------------------
+
+def _distinct_topk(rk: jax.Array, n_post: int, k: int) -> jax.Array:
+    """Uniform k-subset via the k smallest of n_post iid uniforms.
+    O(n_post) per row — used only when k > n_post/2, where that *is* O(k)."""
+    u = jax.random.uniform(rk, (n_post,))
+    _, idx = jax.lax.top_k(-u, k)
+    return jnp.sort(idx.astype(jnp.int32))
+
+
+def _distinct_redraw(rk: jax.Array, n_post: int, k: int) -> jax.Array:
+    """Uniform k-subset in O(k) memory: draw k iid values, redraw duplicate
+    slots with fresh counters until all distinct.  Keeping first occurrences
+    and redrawing the rest is exactly "first k distinct values of an iid
+    uniform stream" — i.e. sequential sampling without replacement."""
+
+    def dup_mask(sorted_vals):
+        return jnp.concatenate([jnp.zeros((1,), bool),
+                                sorted_vals[1:] == sorted_vals[:-1]])
+
+    def cond(carry):
+        i, _, has_dup = carry
+        return has_dup & (i < _MAX_REDRAW_ROUNDS)
+
+    def body(carry):
+        i, vals, _ = carry
+        fresh = jax.random.randint(jax.random.fold_in(rk, i), (k,), 0,
+                                   n_post, jnp.int32)
+        vals = jnp.sort(jnp.where(dup_mask(vals), fresh, vals))
+        return i + 1, vals, dup_mask(vals).any()
+
+    v0 = jnp.sort(jax.random.randint(jax.random.fold_in(rk, 0), (k,), 0,
+                                     n_post, jnp.int32))
+    _, vals, _ = jax.lax.while_loop(cond, body, (1, v0, dup_mask(v0).any()))
+    return vals
+
+
+@functools.partial(jax.jit, static_argnames=("n_post", "k"))
+def _sample_distinct_rows(key: jax.Array, rows: jax.Array, n_post: int,
+                          k: int) -> jax.Array:
+    """[len(rows), k] int32, each row a uniform k-subset of [0, n_post),
+    sorted ascending, keyed by the *global* row index."""
+    if k > n_post:
+        raise ValueError(f"k={k} > n_post={n_post}")
+    if k == n_post:
+        return jnp.broadcast_to(jnp.arange(n_post, dtype=jnp.int32),
+                                (rows.shape[0], n_post))
+    rks = _row_keys(key, rows)
+    one = _distinct_topk if k > n_post // 2 else _distinct_redraw
+    return jax.vmap(lambda rk: one(rk, n_post, k))(rks)
+
+
+# ---------------------------------------------------------------------------
+# initializer kernels
+# ---------------------------------------------------------------------------
+
+def _rows_or_default(rows, n_pre: int) -> jax.Array:
+    if rows is None:
+        return jnp.arange(n_pre, dtype=jnp.int32)
+    return jnp.asarray(rows, jnp.int32)
+
+
+def device_fixed_fanout(key: jax.Array, n_pre: int, n_post: int,
+                        n_conn: int, weight=None,
+                        rows: Optional[jax.Array] = None) -> _JTriple:
+    """Exactly n_conn distinct random targets per pre row, on device."""
+    rows = _rows_or_default(rows, n_pre)
+    post = _sample_distinct_rows(jax.random.fold_in(key, 0xC0), rows,
+                                 n_post, n_conn)
+    g = _row_weights(as_device_weight(weight), key, rows, n_conn)
+    return post, g.astype(jnp.float32), jnp.ones_like(post, bool)
+
+
+def _binomial_slots(n_post: int, p: float) -> int:
+    """Static slot count covering Binomial(n_post, p) row degrees: mean plus
+    six standard deviations (residual clamp probability < 1e-9 per row)."""
+    mean = n_post * p
+    std = math.sqrt(max(n_post * p * (1.0 - p), 0.0))
+    return int(min(n_post, max(1, math.ceil(mean + 6.0 * std + 1.0))))
+
+
+@functools.partial(jax.jit, static_argnames=("n_post", "k"))
+def _fixed_probability_rows(key: jax.Array, rows: jax.Array, n_post: int,
+                            p: float, k: int) -> Tuple[jax.Array, jax.Array]:
+    """(post [R, k], counts [R]): per-row Binomial(n_post, p) degrees, then a
+    uniform degree-subset of targets (a k-subset randomly permuted, first
+    `count` slots valid) — the per-pair Bernoulli model, marginalized."""
+    ckey = jax.random.fold_in(key, 0xDE)
+
+    def one(rk):
+        cnt = jax.random.binomial(jax.random.fold_in(rk, 1), n_post,
+                                  p).astype(jnp.int32)
+        cnt = jnp.clip(cnt, 0, k)
+        vals = (_distinct_topk if k > n_post // 2 else _distinct_redraw)(
+            jax.random.fold_in(rk, 2), n_post, k)
+        perm = jnp.argsort(
+            jax.random.uniform(jax.random.fold_in(rk, 3), (k,)))
+        return vals[perm], cnt
+
+    return jax.vmap(one)(_row_keys(ckey, rows))
+
+
+def device_fixed_probability(key: jax.Array, n_pre: int, n_post: int,
+                             p: float, weight=None,
+                             rows: Optional[jax.Array] = None) -> _JTriple:
+    """Each (pre, post) pair connected independently with probability p."""
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"FixedProbability p={p} outside [0, 1]")
+    rows = _rows_or_default(rows, n_pre)
+    k = _binomial_slots(n_post, p)
+    post, counts = _fixed_probability_rows(key, rows, n_post, p, k)
+    valid = jnp.arange(k, dtype=jnp.int32)[None, :] < counts[:, None]
+    g = _row_weights(as_device_weight(weight), key, rows, k)
+    g = jnp.where(valid, g, 0.0).astype(jnp.float32)
+    return jnp.where(valid, post, 0).astype(jnp.int32), g, valid
+
+
+def device_one_to_one(key: jax.Array, n_pre: int, n_post: int, weight=None,
+                      rows: Optional[jax.Array] = None) -> _JTriple:
+    if n_pre != n_post:
+        raise ValueError(
+            f"OneToOne requires n_pre == n_post, got {n_pre} != {n_post}")
+    rows = _rows_or_default(rows, n_pre)
+    post = rows[:, None]
+    g = _row_weights(as_device_weight(weight), key, rows, 1)
+    return post, g.astype(jnp.float32), jnp.ones_like(post, bool)
+
+
+def device_dense(key: jax.Array, n_pre: int, n_post: int, weight=None,
+                 rows: Optional[jax.Array] = None) -> _JTriple:
+    rows = _rows_or_default(rows, n_pre)
+    post = jnp.broadcast_to(jnp.arange(n_post, dtype=jnp.int32),
+                            (rows.shape[0], n_post))
+    g = _row_weights(as_device_weight(weight), key, rows, n_post)
+    return post, g.astype(jnp.float32), jnp.ones_like(post, bool)
+
+
+def device_resolve(connect: F.ConnectivityInit, key: jax.Array, n_pre: int,
+                   n_post: int, weight=None,
+                   rows: Optional[jax.Array] = None) -> _JTriple:
+    """Dispatch a ConnectivityInit declaration to its device kernel."""
+    if isinstance(connect, F.FixedFanout):
+        return device_fixed_fanout(key, n_pre, n_post, connect.n_conn,
+                                   weight, rows)
+    if isinstance(connect, F.FixedProbability):
+        return device_fixed_probability(key, n_pre, n_post, connect.p,
+                                        weight, rows)
+    if isinstance(connect, F.OneToOne):
+        return device_one_to_one(key, n_pre, n_post, weight, rows)
+    if isinstance(connect, F.DenseInit):
+        return device_dense(key, n_pre, n_post, weight, rows)
+    raise NotImplementedError(
+        f"no device-side kernel for {connect.describe()}; build with "
+        "init='host' or add a kernel to repro.sparse.device_init")
+
+
+# ---------------------------------------------------------------------------
+# post-sharding: repack a global ELL into per-device blocks
+# ---------------------------------------------------------------------------
+
+def partition_ell_by_post(
+    ell: F.ELLSynapses, n_shards: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, int, int]:
+    """Split an ELL column-wise into `n_shards` post-neuron shards.
+
+    Returns (g, post_local, valid, shard_size, k_local) with the first three
+    shaped [n_shards, n_pre, k_local]: shard d holds, for every pre row, the
+    slots whose post neuron lives in [d*shard_size, (d+1)*shard_size),
+    compacted left and re-indexed to shard-local post ids.  The within-row
+    slot order is preserved (stable sort), so per-post-neuron scatter
+    accumulation order — and hence bit-exact currents — matches the global
+    ELL.  Total memory across shards ~= nnz (k_local ~= K / n_shards).
+    """
+    n_pre, k = ell.g.shape
+    n_post = ell.n_post
+    shard_size = -(-n_post // n_shards)  # ceil
+    shard = jnp.where(ell.valid, ell.post_ind // shard_size, n_shards)
+    order = jnp.argsort(shard, axis=1)            # stable in jax
+    shard_s = jnp.take_along_axis(shard, order, axis=1)
+    post_s = jnp.take_along_axis(ell.post_ind, order, axis=1)
+    g_s = jnp.take_along_axis(jnp.where(ell.valid, ell.g, 0.0), order,
+                              axis=1)
+    # per-row per-shard slot counts from the sorted shard ids via
+    # searchsorted boundaries: O(n_pre * D log K), never an [n_pre, K, D]
+    # one-hot temporary (which would be O(nnz * D) — the very blowup this
+    # module exists to avoid)
+    bounds = jnp.arange(n_shards + 1, dtype=shard_s.dtype)
+    edges = jax.vmap(
+        lambda row: jnp.searchsorted(row, bounds, side="left"))(shard_s)
+    counts = jnp.diff(edges, axis=1)              # [n_pre, n_shards]
+    k_local = max(1, int(counts.max()))           # build-time host sync
+    start = jnp.concatenate(
+        [jnp.zeros((n_pre, 1), counts.dtype),
+         jnp.cumsum(counts, axis=1)[:, :-1]], axis=1)   # exclusive prefix
+    d_idx = shard_s                                # [n_pre, k]
+    slot = jnp.arange(k, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
+        start, jnp.clip(d_idx, 0, n_shards - 1), axis=1)
+    row = jnp.broadcast_to(jnp.arange(n_pre)[:, None], (n_pre, k))
+    shape = (n_shards, n_pre, k_local)
+    # invalid slots carry d_idx == n_shards -> dropped by the OOB mode
+    g_out = jnp.zeros(shape, jnp.float32).at[d_idx, row, slot].set(
+        g_s, mode="drop")
+    post_out = jnp.zeros(shape, jnp.int32).at[d_idx, row, slot].set(
+        (post_s - d_idx * shard_size).astype(jnp.int32), mode="drop")
+    valid_out = jnp.zeros(shape, bool).at[d_idx, row, slot].set(
+        shard_s < n_shards, mode="drop")
+    return g_out, post_out, valid_out, shard_size, k_local

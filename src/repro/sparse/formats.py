@@ -28,6 +28,7 @@ __all__ = [
     "fixed_fanout_connectivity",
     "ConnectivityInit", "FixedFanout", "FixedProbability", "OneToOne",
     "DenseInit", "triple_to_ell",
+    "WeightSnippet", "ConstantWeight", "UniformWeight", "NormalWeight",
 ]
 
 
@@ -187,6 +188,69 @@ def ell_to_dense(s: ELLSynapses) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 _Triple = Tuple[np.ndarray, np.ndarray, np.ndarray]  # post_ind, g, valid
+
+
+# ---------------------------------------------------------------------------
+# Backend-dual weight initializers (GeNN's InitVarSnippet).  Each one is
+# callable with the repo-wide numpy protocol (rng, shape) -> array, so it
+# drops into every existing host-side path unchanged, and additionally
+# carries a `device(key, shape)` jax path so the same declaration can be
+# resolved on-accelerator by repro.sparse.device_init.  Raw lambdas remain
+# valid for host-only builds; device builds require one of these (or a
+# scalar), because a numpy closure cannot be traced under jit.
+# ---------------------------------------------------------------------------
+
+class WeightSnippet:
+    """Base class for dual-backend (numpy + jax) weight initializers."""
+
+    def __call__(self, rng: np.random.Generator, shape) -> np.ndarray:
+        raise NotImplementedError
+
+    def device(self, key: jax.Array, shape) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantWeight(WeightSnippet):
+    value: float = 1.0
+
+    def __call__(self, rng, shape) -> np.ndarray:
+        return np.full(shape, self.value, np.float32)
+
+    def device(self, key, shape) -> jax.Array:
+        return jnp.full(shape, self.value, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformWeight(WeightSnippet):
+    """U(lo, hi) scaled draws.  `lo + (hi - lo) * u` with u = rng.random —
+    for lo = 0 this is bit-identical to the historical `hi * rng.random`
+    lambdas (including negative hi for inhibitory weights)."""
+
+    lo: float = 0.0
+    hi: float = 1.0
+
+    def __call__(self, rng, shape) -> np.ndarray:
+        return (self.lo + (self.hi - self.lo) * rng.random(shape)).astype(
+            np.float32)
+
+    def device(self, key, shape) -> jax.Array:
+        return self.lo + (self.hi - self.lo) * jax.random.uniform(
+            key, shape, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class NormalWeight(WeightSnippet):
+    mean: float = 0.0
+    std: float = 1.0
+
+    def __call__(self, rng, shape) -> np.ndarray:
+        return (self.mean + self.std * rng.standard_normal(shape)).astype(
+            np.float32)
+
+    def device(self, key, shape) -> jax.Array:
+        return self.mean + self.std * jax.random.normal(key, shape,
+                                                        jnp.float32)
 
 
 def _weights(rng: np.random.Generator, shape, weight_fn) -> np.ndarray:

@@ -1,0 +1,279 @@
+"""Device-resident construction: equivalence with the host-side oracle.
+
+Three property families (the PR's acceptance contract):
+  1. distribution: device initializers match the host numpy initializers on
+     degree distributions (fanout exactly; probability statistically);
+  2. determinism: the same seed reproduces the same graph bit for bit;
+  3. partition invariance: generating rows in any chunking (1 vs N
+     partitions) yields the identical graph — construction is independent
+     of device count.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+
+from repro.sparse import device_init as DI
+from repro.sparse import formats as F
+
+
+def _key(seed=0):
+    return jax.random.PRNGKey(seed)
+
+
+# ---------------------------------------------------------------------------
+# fixed fanout
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n_pre=st.integers(1, 40), n_post=st.integers(2, 120),
+       seed=st.integers(0, 3))
+def test_fixed_fanout_degrees_and_distinctness(n_pre, n_post, seed):
+    n_conn = max(1, min(n_post, n_post // 3))
+    post, g, valid = DI.device_fixed_fanout(_key(seed), n_pre, n_post,
+                                            n_conn)
+    post = np.asarray(post)
+    assert post.shape == (n_pre, n_conn)
+    assert bool(np.asarray(valid).all())
+    # out-degree is exactly n_conn with all-distinct targets (the host
+    # FixedFanout contract)
+    for row in post:
+        assert len(set(row.tolist())) == n_conn
+        assert row.min() >= 0 and row.max() < n_post
+
+
+def test_fixed_fanout_bit_deterministic():
+    a = DI.device_fixed_fanout(_key(7), 30, 200, 12,
+                               F.UniformWeight(0.0, 0.5))
+    b = DI.device_fixed_fanout(_key(7), 30, 200, 12,
+                               F.UniformWeight(0.0, 0.5))
+    for x, y in zip(a, b):
+        assert (np.asarray(x) == np.asarray(y)).all()
+    c = DI.device_fixed_fanout(_key(8), 30, 200, 12,
+                               F.UniformWeight(0.0, 0.5))
+    assert not (np.asarray(a[0]) == np.asarray(c[0])).all()
+
+
+@pytest.mark.parametrize("splits", [1, 2, 5])
+def test_fixed_fanout_partition_invariance(splits):
+    """Row-chunked generation == whole-graph generation, for any chunking:
+    the counter-based keying makes construction device-count independent."""
+    n_pre, n_post, k = 40, 150, 9
+    w = F.NormalWeight(0.0, 0.3)
+    full = DI.device_fixed_fanout(_key(3), n_pre, n_post, k, w)
+    bounds = np.linspace(0, n_pre, splits + 1).astype(int)
+    parts = [DI.device_fixed_fanout(_key(3), n_pre, n_post, k, w,
+                                    rows=jnp.arange(lo, hi))
+             for lo, hi in zip(bounds[:-1], bounds[1:])]
+    for i in range(3):
+        cat = np.concatenate([np.asarray(p[i]) for p in parts])
+        assert (cat == np.asarray(full[i])).all()
+
+
+def test_fixed_fanout_matches_host_degree_distribution():
+    """In-degree distribution of device vs host construction (same model:
+    uniform fanout): means equal by construction, spreads statistically
+    close."""
+    rng = np.random.default_rng(0)
+    n_pre, n_post, k = 400, 300, 20
+    host_post, _ = F.fixed_fanout_connectivity(rng, n_pre, n_post, k)
+    dev_post, _, _ = DI.device_fixed_fanout(_key(0), n_pre, n_post, k)
+    host_in = np.bincount(host_post.reshape(-1), minlength=n_post)
+    dev_in = np.bincount(np.asarray(dev_post).reshape(-1),
+                         minlength=n_post)
+    assert host_in.sum() == dev_in.sum() == n_pre * k
+    assert abs(host_in.mean() - dev_in.mean()) < 1e-9
+    # both are sums of without-replacement indicators: same variance model
+    assert abs(host_in.std() - dev_in.std()) / host_in.std() < 0.25
+
+
+def test_fixed_fanout_dense_regime_uses_topk_path():
+    # n_conn > n_post/2 exercises the permutation path; n_conn == n_post
+    # the iota shortcut
+    post, _, _ = DI.device_fixed_fanout(_key(1), 8, 16, 12)
+    for row in np.asarray(post):
+        assert len(set(row.tolist())) == 12
+    post, _, _ = DI.device_fixed_fanout(_key(1), 4, 8, 8)
+    assert (np.asarray(post) == np.arange(8)).all()
+
+
+# ---------------------------------------------------------------------------
+# fixed probability
+# ---------------------------------------------------------------------------
+
+def test_fixed_probability_matches_host_degree_distribution():
+    n_pre, n_post, p = 600, 400, 0.05
+    rng = np.random.default_rng(0)
+    _, _, host_valid = F.FixedProbability(p).resolve(rng, n_pre, n_post)
+    dev_post, dev_g, dev_valid = DI.device_fixed_probability(
+        _key(0), n_pre, n_post, p)
+    host_deg = host_valid.sum(axis=1)
+    dev_deg = np.asarray(dev_valid).sum(axis=1)
+    mean = n_post * p
+    std = np.sqrt(n_post * p * (1 - p))
+    # both row-degree samples are Binomial(n_post, p): compare moments
+    assert abs(host_deg.mean() - mean) < 4 * std / np.sqrt(n_pre)
+    assert abs(dev_deg.mean() - mean) < 4 * std / np.sqrt(n_pre)
+    assert 0.7 < dev_deg.std() / std < 1.3
+    # per-row distinct targets; invalid slots zeroed like the host path
+    dev_post, dev_valid = np.asarray(dev_post), np.asarray(dev_valid)
+    for i in range(n_pre):
+        vs = dev_post[i, dev_valid[i]]
+        assert len(set(vs.tolist())) == len(vs)
+    assert (np.asarray(dev_g)[~dev_valid] == 0).all()
+
+
+def test_fixed_probability_target_uniformity():
+    """Targets must be uniform over post neurons (a sorted-truncation bug
+    would skew mass toward low indices)."""
+    post, _, valid = DI.device_fixed_probability(_key(2), 2000, 50, 0.1)
+    counts = np.bincount(np.asarray(post)[np.asarray(valid)],
+                         minlength=50)
+    frac_low = counts[:25].sum() / counts.sum()
+    assert 0.45 < frac_low < 0.55
+
+
+def test_fixed_probability_determinism_and_chunking():
+    a = DI.device_fixed_probability(_key(5), 60, 300, 0.04, 2.0)
+    b = DI.device_fixed_probability(_key(5), 60, 300, 0.04, 2.0)
+    for x, y in zip(a, b):
+        assert (np.asarray(x) == np.asarray(y)).all()
+    lo = DI.device_fixed_probability(_key(5), 60, 300, 0.04, 2.0,
+                                     rows=jnp.arange(0, 25))
+    hi = DI.device_fixed_probability(_key(5), 60, 300, 0.04, 2.0,
+                                     rows=jnp.arange(25, 60))
+    for i in range(3):
+        cat = np.concatenate([np.asarray(lo[i]), np.asarray(hi[i])])
+        assert (cat == np.asarray(a[i])).all()
+
+
+def test_fixed_probability_rejects_bad_p():
+    with pytest.raises(ValueError, match="outside"):
+        DI.device_fixed_probability(_key(0), 4, 4, 1.5)
+
+
+# ---------------------------------------------------------------------------
+# one-to-one / dispatch / weights
+# ---------------------------------------------------------------------------
+
+def test_one_to_one_device():
+    post, g, valid = DI.device_one_to_one(_key(0), 9, 9, 0.25)
+    assert (np.asarray(post)[:, 0] == np.arange(9)).all()
+    assert np.allclose(np.asarray(g), 0.25)
+    with pytest.raises(ValueError, match="n_pre == n_post"):
+        DI.device_one_to_one(_key(0), 4, 5)
+
+
+def test_device_resolve_dispatch_matches_kernels():
+    for init, kw in [(F.FixedFanout(4), {}), (F.FixedProbability(0.2), {}),
+                     (F.OneToOne(), {}), (F.DenseInit(), {})]:
+        post, g, valid = DI.device_resolve(init, _key(1), 12, 12, 0.5)
+        assert post.shape == g.shape == valid.shape
+
+
+def test_device_resolve_rejects_unknown_init():
+    class Weird(F.ConnectivityInit):
+        pass
+
+    with pytest.raises(NotImplementedError, match="device-side"):
+        DI.device_resolve(Weird(), _key(0), 4, 4)
+
+
+def test_as_device_weight_rejects_numpy_callables():
+    with pytest.raises(TypeError, match="dual-backend"):
+        DI.as_device_weight(lambda rng, shape: rng.random(shape))
+
+
+def test_weight_snippets_dual_backend():
+    rng = np.random.default_rng(0)
+    for w in (F.ConstantWeight(0.3), F.UniformWeight(-1.0, 1.0),
+              F.NormalWeight(0.0, 2.0)):
+        h = w(rng, (50, 8))
+        d = np.asarray(w.device(_key(0), (50, 8)))
+        assert h.shape == d.shape and h.dtype == np.float32
+        assert abs(h.mean() - d.mean()) < 0.3
+    # host UniformWeight is bit-identical to the historical lambdas
+    r1, r2 = np.random.default_rng(9), np.random.default_rng(9)
+    assert (F.UniformWeight(0.0, 0.5)(r1, (20, 3))
+            == (0.5 * r2.random((20, 3))).astype(np.float32)).all()
+
+
+# ---------------------------------------------------------------------------
+# post-sharding partition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4, 7])
+def test_partition_ell_by_post_reconstructs(n_shards):
+    post, g, valid = DI.device_fixed_probability(_key(4), 30, 53, 0.2,
+                                                 F.UniformWeight(0, 1))
+    ell = F.ELLSynapses(g=jnp.where(valid, g, 0.0), post_ind=post,
+                        valid=valid, n_post=53)
+    G, PL, V, S, KL = DI.partition_ell_by_post(ell, n_shards)
+    assert G.shape == (n_shards, 30, KL)
+    # slot conservation and exact dense reconstruction
+    assert int(np.asarray(V).sum()) == int(np.asarray(valid).sum())
+    dense = np.asarray(F.ell_to_dense(ell))
+    rec = np.zeros((30, S * n_shards), np.float32)
+    for d in range(n_shards):
+        sub = F.ELLSynapses(g=G[d], post_ind=PL[d], valid=V[d], n_post=S)
+        rec[:, d * S:(d + 1) * S] = np.asarray(F.ell_to_dense(sub))
+    assert np.array_equal(rec[:, :53], dense)
+    # local indices in range
+    assert np.asarray(PL)[np.asarray(V)].max() < S
+
+
+def test_partition_preserves_slot_order():
+    """Within-row slot order must survive compaction (scatter-accumulation
+    order — and bit-exact currents — depend on it)."""
+    post = jnp.asarray([[5, 0, 9, 2, 7]], jnp.int32)
+    g = jnp.asarray([[1., 2., 3., 4., 5.]])
+    valid = jnp.ones((1, 5), bool)
+    ell = F.ELLSynapses(g=g, post_ind=post, valid=valid, n_post=10)
+    G, PL, V, S, KL = DI.partition_ell_by_post(ell, 2)
+    # shard 0 owns post 0..4: slots (0->g2, 2->g4) in original order
+    g0 = np.asarray(G[0])[0][np.asarray(V[0])[0]]
+    assert g0.tolist() == [2.0, 4.0]
+    g1 = np.asarray(G[1])[0][np.asarray(V[1])[0]]
+    assert g1.tolist() == [1.0, 3.0, 5.0]
+
+
+# ---------------------------------------------------------------------------
+# ModelSpec device build
+# ---------------------------------------------------------------------------
+
+def test_spec_device_build_runs_and_is_device_count_free():
+    from repro.core.models.izhikevich_net import (IzhikevichNetConfig,
+                                                  compile_model)
+    cfg = IzhikevichNetConfig(n_total=80, n_conn=16, seed=5)
+    m1 = compile_model(cfg, init="device")
+    m2 = compile_model(cfg, init="device")
+    for g1, g2 in zip(m1.network.synapses, m2.network.synapses):
+        assert (np.asarray(g1.ell.post_ind)
+                == np.asarray(g2.ell.post_ind)).all()
+        assert (np.asarray(g1.ell.g) == np.asarray(g2.ell.g)).all()
+    res = m1.run(20)
+    assert bool(res.finite)
+
+
+def test_spec_device_build_rejects_numpy_weight():
+    from repro.core.snn.spec import ModelSpec, SpecError
+    s = ModelSpec("bad")
+    s.add_neuron_population("a", 8, "izhikevich")
+    s.add_synapse_population("aa", "a", "a", connect=F.FixedFanout(2),
+                             weight=lambda r, shape: r.random(shape))
+    with pytest.raises(SpecError, match="dual-backend"):
+        s.build(dt=1.0, seed=0, init="device")
+    # ...but the same spec still builds host-side
+    s.build(dt=1.0, seed=0, init="host")
+
+
+def test_spec_build_rejects_bad_init():
+    from repro.core.snn.spec import ModelSpec, SpecError
+    s = ModelSpec("bad")
+    s.add_neuron_population("a", 8, "izhikevich")
+    with pytest.raises(SpecError, match="init"):
+        s.build(init="gpu")

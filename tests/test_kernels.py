@@ -160,3 +160,81 @@ def test_ssd_state_carry_matches_two_halves():
                      None, chunk=32, initial_state=s1)
     np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
                                np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# occupancy-based tile selection for the ELL spmv (paper §3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_pre,k,n_post,b", [
+    (16, 4, 32, 1), (1000, 100, 1000, 1), (1000, 1000, 1000, 16),
+    (100_000, 100, 100_000, 1), (8192, 512, 8192, 8),
+    (50_000, 1000, 50_000, 4),
+])
+def test_spmv_chosen_tiles_are_vmem_feasible(n_pre, k, n_post, b):
+    """The autotuned (bp, bn) must fit VMEM with Mosaic's double buffering
+    and stay hardware-aligned — for every shape, including the paper's
+    scalability-study sizes."""
+    from repro.kernels.autotune import (V5E, choose_block_spmv,
+                                        spmv_block_bytes)
+    cfg = choose_block_spmv(n_pre, k, n_post, b)
+    assert cfg["feasible"]
+    assert cfg["bn"] % V5E.lane == 0
+    assert cfg["bp"] % V5E.sublane_f32 == 0
+    need = spmv_block_bytes(cfg["bp"], cfg["bn"], k, b) * V5E.double_buffer
+    assert need <= V5E.vmem_bytes, (cfg, need)
+
+
+def test_spmv_wide_k_chunks_to_feasible_tiles():
+    """K beyond the one-hot kernel's full-row VMEM limit must be flagged
+    infeasible and split into chunks whose tiling fits (e.g. the row widths
+    FixedProbability produces at p=0.05, n_post=100k)."""
+    from repro.kernels.autotune import (V5E, choose_block_spmv,
+                                        spmv_block_bytes)
+    from repro.kernels.ell_spmv import feasible_k_chunk
+    wide = choose_block_spmv(10_000, 5000, 100_000, 1)
+    assert not wide["feasible"]
+    kc, cfg = feasible_k_chunk(10_000, 5000, 100_000, 1)
+    assert kc < 5000 and cfg["feasible"]
+    need = spmv_block_bytes(cfg["bp"], cfg["bn"], kc, 1) * V5E.double_buffer
+    assert need <= V5E.vmem_bytes
+
+
+def test_spmv_pallas_wide_k_correct():
+    """Interpret-mode end to end through the K-chunked launch path."""
+    n_pre, k, n_post, b = 24, 5000, 64, 2
+    g = RNG.standard_normal((n_pre, k)).astype(np.float32)
+    idx = RNG.integers(0, n_post, (n_pre, k)).astype(np.int32)
+    valid = RNG.random((n_pre, k)) < 0.5
+    spk = (RNG.random((b, n_pre)) < 0.4).astype(np.float32)
+    ref = R.ell_spmv_ref(jnp.asarray(g), jnp.asarray(idx),
+                         jnp.asarray(valid), jnp.asarray(spk), n_post)
+    out = ell_spmv_pallas(jnp.asarray(g), jnp.asarray(idx),
+                          jnp.asarray(valid), jnp.asarray(spk),
+                          n_post=n_post, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_default_blocks_routes_through_autotune():
+    from repro.kernels.autotune import choose_block_spmv
+    from repro.kernels.ell_spmv import default_blocks
+    for shape in [(64, 16, 100, 4), (4096, 128, 4096, 2)]:
+        cfg = choose_block_spmv(*shape)
+        assert default_blocks(*shape) == (cfg["bp"], cfg["bn"])
+
+
+def test_spmv_pallas_correct_with_autotuned_blocks():
+    """End to end: interpret-mode kernel with the chosen tiles == oracle."""
+    n_pre, k, n_post, b = 96, 24, 260, 3
+    g = RNG.standard_normal((n_pre, k)).astype(np.float32)
+    idx = RNG.integers(0, n_post, (n_pre, k)).astype(np.int32)
+    valid = RNG.random((n_pre, k)) < 0.7
+    spk = (RNG.random((b, n_pre)) < 0.3).astype(np.float32)
+    ref = R.ell_spmv_ref(jnp.asarray(g), jnp.asarray(idx),
+                         jnp.asarray(valid), jnp.asarray(spk), n_post)
+    out = ell_spmv_pallas(jnp.asarray(g), jnp.asarray(idx),
+                          jnp.asarray(valid), jnp.asarray(spk),
+                          n_post=n_post, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)

@@ -455,3 +455,19 @@ def test_network_shim_still_works_with_simulator():
     res = sim.run(sim.init_state(), 20)
     assert bool(res.finite)
     assert float(res.rates_hz["a"]) > 0.0
+
+
+def test_simulator_run_jit_cached_per_n_steps():
+    """run_jit mirrors the CompiledModel cache: one compiled callable per
+    (n_steps, record_raster), not one per call."""
+    spec = _two_pop_spec()
+    spec.add_synapse_population("ab", "a", "b", connect=F.FixedFanout(2))
+    sim = spec.build(dt=1.0, seed=0).simulator
+    f1 = sim.run_jit(10)
+    f2 = sim.run_jit(10)
+    assert f1 is f2
+    assert sim.run_jit(20) is not f1
+    assert sim.run_jit(10, record_raster=True) is not f1
+    assert len(sim._run_jit_cache) == 3
+    res = f1(sim.init_state(), {})
+    assert bool(res.finite)
