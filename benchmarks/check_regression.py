@@ -1,0 +1,124 @@
+"""Bench regression gate: freshly emitted JSONs vs committed baselines.
+
+CI runs the small-size SNN benchmarks (benchmarks/snn_scaling.py,
+benchmarks/snn_serving.py), then this script compares the step-time /
+throughput numbers against the baselines committed under
+``benchmarks/baselines/`` and fails on *gross* regressions — shared-runner
+timing is noisy, so the default tolerance is a generous 3x ratio; the JSONs
+are also uploaded as workflow artifacts so the trajectory stays inspectable.
+
+Gated metrics (matched row-by-row on their key fields):
+
+  BENCH_snn_scaling.json  weak_scaling[].us_per_step   (lower is better)
+  BENCH_snn_serving.json  streams[].steps_per_sec      (higher is better)
+
+Construction times and other fields are reported but never gate (first-call
+jit noise dominates them at CI sizes).  A missing fresh file or baseline is
+a warning, not a failure, so the gate cannot mask a bench crash silently —
+CI runs the benches as separate steps that fail on their own.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--fresh experiments/bench] [--baseline benchmarks/baselines] \
+        [--max-ratio 3.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+# (file, series key, payload-identity fields, row-identity fields, metric,
+# direction).  Identity fields must pin the whole workload a metric was
+# measured on — payload fields cover knobs recorded once at top level
+# (network size, device count): a CI env-knob change without a regenerated
+# baseline then degrades to the skip-with-warning path instead of silently
+# comparing incomparable numbers.
+GATES = [
+    ("BENCH_snn_scaling.json", "weak_scaling",
+     ("devices", "per_device_neurons"),
+     ("devices", "n_total", "neurons_per_device"), "us_per_step", "lower"),
+    ("BENCH_snn_serving.json", "streams",
+     ("devices", "n_total"),
+     ("streams", "chunk", "n_steps", "requests"), "steps_per_sec", "higher"),
+]
+
+
+def _load(path: Path):
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def _index(rows, fields):
+    return {tuple(r.get(f) for f in fields): r for r in rows}
+
+
+def check(fresh_dir: Path, base_dir: Path, max_ratio: float) -> int:
+    failures, checked = [], 0
+    for fname, series, pfields, fields, metric, direction in GATES:
+        fresh = _load(fresh_dir / fname)
+        base = _load(base_dir / fname)
+        if fresh is None:
+            print(f"[check_regression] WARN: no fresh {fname} "
+                  f"(bench not run?)")
+            continue
+        if base is None:
+            print(f"[check_regression] WARN: no baseline {fname} "
+                  f"(commit one under {base_dir})")
+            continue
+        mismatch = {f: (fresh.get(f), base.get(f)) for f in pfields
+                    if fresh.get(f) != base.get(f)}
+        if mismatch:
+            print(f"[check_regression] WARN: {fname} workload differs from "
+                  f"baseline {mismatch}; regenerate the baseline — "
+                  "skipping this gate")
+            continue
+        base_rows = _index(base.get(series, []), fields)
+        for row in fresh.get(series, []):
+            key = tuple(row.get(f) for f in fields)
+            ref = base_rows.get(key)
+            if ref is None or metric not in ref or metric not in row:
+                continue
+            got, want = float(row[metric]), float(ref[metric])
+            if want <= 0:
+                continue
+            ratio = got / want
+            worse = ratio if direction == "lower" else 1.0 / max(ratio, 1e-12)
+            ok = worse <= max_ratio
+            checked += 1
+            tag = "ok" if ok else "REGRESSION"
+            print(f"[check_regression] {fname} {series}"
+                  f"{dict(zip(fields, key))} {metric}: fresh={got:.1f} "
+                  f"baseline={want:.1f} ({worse:.2f}x worse-ratio) {tag}")
+            if not ok:
+                failures.append((fname, key, metric, got, want, worse))
+    if not checked:
+        print("[check_regression] WARN: nothing compared")
+    if failures:
+        print(f"[check_regression] FAILED: {len(failures)} gross "
+              f"regression(s) (> {max_ratio}x)")
+        return 1
+    print(f"[check_regression] passed: {checked} metric(s) within "
+          f"{max_ratio}x of baseline")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", type=Path,
+                    default=REPO / "experiments" / "bench")
+    ap.add_argument("--baseline", type=Path,
+                    default=REPO / "benchmarks" / "baselines")
+    ap.add_argument("--max-ratio", type=float, default=3.0,
+                    help="fail when a metric is more than this factor "
+                         "worse than baseline")
+    args = ap.parse_args(argv)
+    return check(args.fresh, args.baseline, args.max_ratio)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -110,8 +110,9 @@ def spec(cfg: MushroomBodyConfig) -> ModelSpec:
     return ms
 
 
-def compile_model(cfg: MushroomBodyConfig) -> CompiledModel:
-    return spec(cfg).build(dt=cfg.dt, seed=cfg.seed)
+def compile_model(cfg: MushroomBodyConfig, mesh=None,
+                  init: str = "host") -> CompiledModel:
+    return spec(cfg).build(dt=cfg.dt, seed=cfg.seed, mesh=mesh, init=init)
 
 
 def build(cfg: MushroomBodyConfig) -> tuple[Network, Simulator]:

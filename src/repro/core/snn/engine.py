@@ -25,6 +25,15 @@ The whole n-step scan lives inside one shard_map call, so a run compiles to
 a single program with one all-gather per (population, step).  `sweep_gscale`
 vmaps the scan over candidates *inside* shard_map, composing the paper's
 conductance sweep with neuron-axis parallelism.
+
+Serving (`init_stream_state` / `serve_chunk`) reuses the same vmap-inside-
+shard_map composition with a *stream* axis instead of the candidate axis:
+`max_streams` independent simulations stay resident on device (each slot
+its own neuron/synapse/delay state + PRNG key, every leaf gaining a leading
+stream dim), and one compiled chunk program advances all slots together
+under per-slot `steps_left` masking.  External stimuli enter full-size and
+replicated, sliced per shard exactly like input_fn draws, so a served
+stream is bit-exact against the offline `run(..., stim=...)`.
 """
 
 from __future__ import annotations
@@ -34,7 +43,7 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import codegen
 from repro.core.snn.network import Network
@@ -124,6 +133,7 @@ class ShardedEngine:
         self._run_cache: Dict[tuple, Callable] = {}
         self._sweep_cache: Dict[tuple, Callable] = {}
         self._step_cache: Dict[tuple, Callable] = {}
+        self._serve_cache: Dict[tuple, Callable] = {}
 
     # ------------------------------------------------------------------
     # state layout
@@ -226,9 +236,13 @@ class ShardedEngine:
         return out
 
     def _local_step(self, state: SimState, blocks, pn_params,
-                    gscales: Mapping[str, jax.Array]):
+                    gscales: Mapping[str, jax.Array],
+                    stim: Optional[Mapping[str, jax.Array]] = None):
         """One dt step on this device's shard; mirrors Simulator.step
-        line for line (key schedule, group order, update order)."""
+        line for line (key schedule, group order, update order).
+        stim: population -> [n] full-size external currents (replicated),
+        sliced per shard exactly like input_fn draws."""
+        stim = stim or {}
         net, dt, ax = self.net, self.dt, self.axis
         d = jax.lax.axis_index(ax)
         key, *subkeys = jax.random.split(state.key,
@@ -285,6 +299,10 @@ class ShardedEngine:
                 full = pop.input_fn(k_in, state.t, pop.n)
                 full = jnp.pad(full, (0, self._npad[name] - pop.n))
                 cur = cur + jax.lax.dynamic_slice(full, (d * S,), (S,))
+            if name in stim:
+                full = jnp.asarray(stim[name], jnp.float32)
+                full = jnp.pad(full, (0, self._npad[name] - pop.n))
+                cur = cur + jax.lax.dynamic_slice(full, (d * S,), (S,))
             params = dict(self._scalar_params[name])
             params.update(pn_params[name])
             ext = {"Isyn": cur, "dt": jnp.float32(dt), "t": state.t}
@@ -324,6 +342,15 @@ class ShardedEngine:
                 f"unknown gscale key(s) {sorted(unknown)}; valid synapse "
                 f"group names: {sorted(self._group_names)}")
 
+    def _validate_stim(self, stim) -> None:
+        if not stim:
+            return
+        unknown = set(stim) - set(self.net.populations)
+        if unknown:
+            raise ValueError(
+                f"unknown stim population(s) {sorted(unknown)}; declared "
+                f"populations: {sorted(self.net.populations)}")
+
     def _in_specs(self):
         return (self._state_specs, self._block_specs, self._pn_specs)
 
@@ -332,8 +359,8 @@ class ShardedEngine:
                                  out_specs=out_specs, check_rep=False))
 
     def _make_run(self, n_steps: int, keys: Tuple[str, ...],
-                  record_raster: bool):
-        def local_fn(state, blocks, pn_params, vals):
+                  record_raster: bool, stim_keys: Tuple[str, ...] = ()):
+        def local_fn(state, blocks, pn_params, vals, stim):
             blocks = {k: self._squeeze_blocks(v) for k, v in blocks.items()}
             state = state.__class__(
                 neurons=state.neurons, spikes=state.spikes,
@@ -342,16 +369,18 @@ class ShardedEngine:
                 finite=state.finite)
             gs = dict(zip(keys, vals))
 
-            def body(carry, _):
+            def body(carry, stim_t):
                 st, counts = carry
-                st2, spk = self._local_step(st, blocks, pn_params, gs)
+                st2, spk = self._local_step(st, blocks, pn_params, gs,
+                                            stim=stim_t)
                 counts = {k: counts[k] + spk[k] for k in counts}
                 return (st2, counts), (spk if record_raster else None)
 
             counts0 = {name: jnp.zeros((self._shard[name],), jnp.int32)
                        for name in self.net.populations}
             (st2, counts), raster = jax.lax.scan(
-                body, (state, counts0), None, length=n_steps)
+                body, (state, counts0), stim if stim_keys else None,
+                length=n_steps)
             st2 = st2.__class__(
                 neurons=st2.neurons, spikes=st2.spikes,
                 prev_above=st2.prev_above,
@@ -365,27 +394,35 @@ class ShardedEngine:
                         if record_raster else None)
         return self._shard_map(
             local_fn,
-            in_specs=(*self._in_specs(), tuple(P() for _ in keys)),
+            in_specs=(*self._in_specs(), tuple(P() for _ in keys),
+                      {k: P() for k in stim_keys}),
             out_specs=(self._state_specs, counts_specs, raster_specs))
 
     def run(self, n_steps: int,
             gscales: Optional[Mapping[str, jax.Array]] = None,
             state: Optional[SimState] = None,
-            record_raster: bool = False) -> RunResult:
+            record_raster: bool = False,
+            stim: Optional[Mapping[str, jax.Array]] = None) -> RunResult:
         """Scan n_steps under shard_map; spike statistics match the
-        single-device Simulator bit for bit."""
+        single-device Simulator bit for bit.  stim: population ->
+        [n_steps, n] external currents (full-size; sliced per shard)."""
         gscales = dict(gscales or {})
         self._validate_gscales(gscales)
+        self._validate_stim(stim)
+        stim = {k: jnp.asarray(v, jnp.float32)
+                for k, v in (stim or {}).items()}
         if state is None:
             state = self.init_state()
         keys = tuple(sorted(gscales))
-        cache_key = (n_steps, keys, record_raster)
+        stim_keys = tuple(sorted(stim))
+        cache_key = (n_steps, keys, record_raster, stim_keys)
         if cache_key not in self._run_cache:
             self._run_cache[cache_key] = self._make_run(n_steps, keys,
-                                                        record_raster)
+                                                        record_raster,
+                                                        stim_keys)
         vals = tuple(jnp.asarray(gscales[k], jnp.float32) for k in keys)
         st2, counts, raster = self._run_cache[cache_key](
-            state, self._blocks, self._pn_params, vals)
+            state, self._blocks, self._pn_params, vals, stim)
         pops = self.net.populations
         counts = {k: v[: pops[k].n] for k, v in counts.items()}
         t_sec = n_steps * self.dt * 1e-3
@@ -396,8 +433,9 @@ class ShardedEngine:
                          finite=st2.finite,
                          raster=raster if record_raster else None)
 
-    def _make_step(self, keys: Tuple[str, ...]):
-        def local_fn(state, blocks, pn_params, vals):
+    def _make_step(self, keys: Tuple[str, ...],
+                   stim_keys: Tuple[str, ...] = ()):
+        def local_fn(state, blocks, pn_params, vals, stim):
             blocks = {k: self._squeeze_blocks(v) for k, v in blocks.items()}
             state = state.__class__(
                 neurons=state.neurons, spikes=state.spikes,
@@ -405,7 +443,7 @@ class ShardedEngine:
                 syn=self._squeeze_syn(state.syn), t=state.t, key=state.key,
                 finite=state.finite)
             st2, spk = self._local_step(state, blocks, pn_params,
-                                        dict(zip(keys, vals)))
+                                        dict(zip(keys, vals)), stim=stim)
             st2 = st2.__class__(
                 neurons=st2.neurons, spikes=st2.spikes,
                 prev_above=st2.prev_above,
@@ -416,21 +454,29 @@ class ShardedEngine:
         ax = self.axis
         return self._shard_map(
             local_fn,
-            in_specs=(*self._in_specs(), tuple(P() for _ in keys)),
+            in_specs=(*self._in_specs(), tuple(P() for _ in keys),
+                      {k: P() for k in stim_keys}),
             out_specs=(self._state_specs,
                        {name: P(ax) for name in self.net.populations}))
 
     def step(self, state: SimState,
-             gscales: Optional[Mapping[str, jax.Array]] = None):
-        """One dt step (sharded); returns (new_state, spikes dict [n])."""
+             gscales: Optional[Mapping[str, jax.Array]] = None,
+             stim: Optional[Mapping[str, jax.Array]] = None):
+        """One dt step (sharded); returns (new_state, spikes dict [n]).
+        stim: population -> [n] external currents (full-size)."""
         gscales = dict(gscales or {})
         self._validate_gscales(gscales)
+        self._validate_stim(stim)
+        stim = {k: jnp.asarray(v, jnp.float32)
+                for k, v in (stim or {}).items()}
         keys = tuple(sorted(gscales))
-        if keys not in self._step_cache:
-            self._step_cache[keys] = self._make_step(keys)
+        stim_keys = tuple(sorted(stim))
+        cache_key = (keys, stim_keys)
+        if cache_key not in self._step_cache:
+            self._step_cache[cache_key] = self._make_step(keys, stim_keys)
         vals = tuple(jnp.asarray(gscales[k], jnp.float32) for k in keys)
-        st2, spk = self._step_cache[keys](state, self._blocks,
-                                          self._pn_params, vals)
+        st2, spk = self._step_cache[cache_key](state, self._blocks,
+                                               self._pn_params, vals, stim)
         return st2, {k: v[: self.net.populations[k].n]
                      for k, v in spk.items()}
 
@@ -488,6 +534,124 @@ class ShardedEngine:
         t_sec = n_steps * self.dt * 1e-3
         rates = {k: jnp.mean(v, axis=1) / t_sec for k, v in counts.items()}
         return values, rates, finite, counts
+
+    # ------------------------------------------------------------------
+    # streaming / serving: a leading stream axis over independent sims
+    # ------------------------------------------------------------------
+    def _stream_state_specs(self):
+        """Spec twin of a stream-batched SimState: every leaf gains a
+        leading (unsharded) stream dim in front of its single-sim spec."""
+        return jax.tree.map(lambda spec: P(None, *tuple(spec)),
+                            self._state_specs)
+
+    def init_stream_state(self, keys: jax.Array) -> SimState:
+        """Batched sharded initial state: one independent simulation per
+        slot, every leaf broadcast along a leading stream axis (neuron
+        shards stay on their devices; per-slot PRNG keys replicated).  Slot
+        s starts bit-identical to init_state(keys[s])."""
+        keys = jnp.asarray(keys)
+        S = int(keys.shape[0])
+        base = self.init_state()
+        mesh = self.mesh
+
+        def bcast(x, spec):
+            sh = NamedSharding(mesh, P(None, *tuple(spec)))
+            return jax.device_put(
+                jnp.broadcast_to(x[None], (S,) + x.shape), sh)
+
+        st = jax.tree.map(bcast, base, self._state_specs)
+        return SimState(
+            neurons=st.neurons, spikes=st.spikes, prev_above=st.prev_above,
+            syn=st.syn, t=st.t,
+            key=jax.device_put(keys, self._sh["replicated"]),
+            finite=st.finite)
+
+    def _make_serve(self, n_steps: int, keys: Tuple[str, ...],
+                    stim_keys: Tuple[str, ...], record_raster: bool):
+        def local_fn(state, blocks, pn_params, vals, stim, steps_left):
+            blocks = {k: self._squeeze_blocks(v) for k, v in blocks.items()}
+            gs = dict(zip(keys, vals))
+
+            def one_stream(st, st_stim, left):
+                st = st.__class__(
+                    neurons=st.neurons, spikes=st.spikes,
+                    prev_above=st.prev_above,
+                    syn=self._squeeze_syn(st.syn), t=st.t, key=st.key,
+                    finite=st.finite)
+
+                def body(carry, xs):
+                    t_idx, stim_t = xs
+                    st, counts = carry
+                    st2, spk = self._local_step(st, blocks, pn_params, gs,
+                                                stim=stim_t)
+                    act = t_idx < left
+                    st2 = jax.tree.map(lambda a, b: jnp.where(act, a, b),
+                                       st2, st)
+                    spk = {k: v & act for k, v in spk.items()}
+                    counts = {k: counts[k] + spk[k] for k in counts}
+                    return (st2, counts), (spk if record_raster else None)
+
+                counts0 = {name: jnp.zeros((self._shard[name],), jnp.int32)
+                           for name in self.net.populations}
+                xs = (jnp.arange(n_steps, dtype=jnp.int32),
+                      st_stim if stim_keys else None)
+                (st2, counts), raster = jax.lax.scan(
+                    body, (st, counts0), xs, length=n_steps)
+                st2 = st2.__class__(
+                    neurons=st2.neurons, spikes=st2.spikes,
+                    prev_above=st2.prev_above,
+                    syn=self._unsqueeze_syn(st2.syn), t=st2.t, key=st2.key,
+                    finite=st2.finite)
+                return st2, counts, raster
+
+            st2, counts, raster = jax.vmap(one_stream)(state, stim,
+                                                       steps_left)
+            st2 = st2.__class__(
+                neurons=st2.neurons, spikes=st2.spikes,
+                prev_above=st2.prev_above, syn=st2.syn, t=st2.t,
+                key=st2.key, finite=self._combine_finite(st2.finite))
+            return st2, counts, raster
+
+        ax = self.axis
+        stream_specs = self._stream_state_specs()
+        counts_specs = {name: P(None, ax) for name in self.net.populations}
+        raster_specs = ({name: P(None, None, ax)
+                         for name in self.net.populations}
+                        if record_raster else None)
+        return self._shard_map(
+            local_fn,
+            in_specs=(stream_specs, self._block_specs, self._pn_specs,
+                      tuple(P() for _ in keys), {k: P() for k in stim_keys},
+                      P()),
+            out_specs=(stream_specs, counts_specs, raster_specs))
+
+    def serve_chunk(self, state: SimState, stim: Mapping[str, jax.Array],
+                    steps_left: jax.Array, n_steps: int,
+                    gscales: Optional[Mapping[str, jax.Array]] = None,
+                    record_raster: bool = False):
+        """Advance every stream slot by up to n_steps under shard_map:
+        streams on the vmap axis, neurons on the mesh.  Semantics match
+        Simulator.serve_chunk (per-slot steps_left masking, masked lanes
+        exact no-ops); outputs are cropped to real neurons."""
+        gscales = dict(gscales or {})
+        self._validate_gscales(gscales)
+        self._validate_stim(stim)
+        stim = {k: jnp.asarray(v, jnp.float32) for k, v in stim.items()}
+        steps_left = jnp.asarray(steps_left, jnp.int32)
+        keys = tuple(sorted(gscales))
+        stim_keys = tuple(sorted(stim))
+        cache_key = (n_steps, keys, stim_keys, record_raster)
+        if cache_key not in self._serve_cache:
+            self._serve_cache[cache_key] = self._make_serve(
+                n_steps, keys, stim_keys, record_raster)
+        vals = tuple(jnp.asarray(gscales[k], jnp.float32) for k in keys)
+        st2, counts, raster = self._serve_cache[cache_key](
+            state, self._blocks, self._pn_params, vals, stim, steps_left)
+        pops = self.net.populations
+        counts = {k: v[:, : pops[k].n] for k, v in counts.items()}
+        if record_raster:
+            raster = {k: v[:, :, : pops[k].n] for k, v in raster.items()}
+        return st2, counts, (raster if record_raster else None)
 
     def memory_report(self) -> List[dict]:
         """Per-group sharded footprint next to the paper's eq-(1)/(2)

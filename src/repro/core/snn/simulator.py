@@ -13,6 +13,22 @@ This is the JAX analogue of GeNN's generated simulation loop:
 compiled simulator serves the whole conductance-scaling sweep (vmap over
 candidates — the batch dimension the TPU spmv kernel wants).
 
+External stimuli (`stim`): `step`/`run` accept per-population injected
+currents — the serving path's per-request drive.  A stimulus is added to
+Isyn *after* the population's input_fn, consuming no PRNG draws, so a run
+with stim is bit-identical to the same run with that current folded into an
+input_fn, and the serving engine's per-slot replay of a stimulus is
+bit-identical to the offline run (the exactness contract
+tests/test_serving.py pins down).
+
+Streaming/serving (`init_stream_state` / `serve_chunk`): state gains a
+leading *stream* axis (vmap) — `max_streams` independent simulations
+resident on device, each slot carrying its own neuron/synapse/delay state
+and PRNG key.  `serve_chunk` advances every slot up to `n_steps` with
+per-slot `steps_left` masking: slot lanes past their remaining stimulus are
+select-restored, so idle/finished slots are exact no-ops (state, key stream
+and finite flag untouched).
+
 NaN containment (paper §2): every step folds an `isfinite` reduction over
 membrane state into a carried `finite` flag; overflow from an over-scaled
 conductance is detected without host round-trips.
@@ -99,6 +115,17 @@ class Simulator:
                 f"unknown gscale key(s) {sorted(unknown)}; valid synapse "
                 f"group names: {sorted(self._group_names)}")
 
+    def _validate_stim(self, stim: Optional[Mapping[str, jax.Array]]) -> None:
+        """Stim keys must name populations (same silent-typo hazard as
+        gscales: a misspelled key would be an ignored no-op drive)."""
+        if not stim:
+            return
+        unknown = set(stim) - set(self.net.populations)
+        if unknown:
+            raise ValueError(
+                f"unknown stim population(s) {sorted(unknown)}; declared "
+                f"populations: {sorted(self.net.populations)}")
+
     # ------------------------------------------------------------------
     def init_state(self, key: Optional[jax.Array] = None) -> SimState:
         if key is None:
@@ -122,11 +149,15 @@ class Simulator:
     def step(
         self, state: SimState,
         gscales: Optional[Mapping[str, jax.Array]] = None,
+        stim: Optional[Mapping[str, jax.Array]] = None,
     ) -> Tuple[SimState, Dict[str, jax.Array]]:
-        """One dt step. gscales: synapse-group name -> scalar multiplier."""
+        """One dt step. gscales: synapse-group name -> scalar multiplier;
+        stim: population name -> [n] external current injected this step."""
         net, dt = self.net, self.dt
         self._validate_gscales(gscales)
+        self._validate_stim(stim)
         gscales = gscales or {}
+        stim = stim or {}
         key, *subkeys = jax.random.split(state.key,
                                          1 + 2 * len(net.populations))
         subkeys = iter(subkeys)
@@ -152,6 +183,8 @@ class Simulator:
             cur = isyn[name]
             if pop.input_fn is not None:
                 cur = cur + pop.input_fn(k_in, state.t, pop.n)
+            if name in stim:
+                cur = cur + jnp.asarray(stim[name], jnp.float32)
             ext = {"Isyn": cur, "dt": jnp.float32(dt), "t": state.t}
             if pop.model.needs_rand:
                 ext["rand"] = jax.random.uniform(k_rand, (pop.n,))
@@ -177,13 +210,18 @@ class Simulator:
         self, state: SimState, n_steps: int,
         gscales: Optional[Mapping[str, jax.Array]] = None,
         record_raster: bool = False,
+        stim: Optional[Mapping[str, jax.Array]] = None,
     ) -> RunResult:
-        """Scan n_steps; returns spike statistics (and optionally rasters)."""
+        """Scan n_steps; returns spike statistics (and optionally rasters).
+        stim: population name -> [n_steps, n] external currents, one row
+        injected per step (the serving path's offline oracle)."""
         self._validate_gscales(gscales)
+        self._validate_stim(stim)
+        stim = {k: jnp.asarray(v, jnp.float32) for k, v in (stim or {}).items()}
 
-        def body(carry, _):
+        def body(carry, stim_t):
             st, counts = carry
-            st2, spk = self.step(st, gscales)
+            st2, spk = self.step(st, gscales, stim=stim_t)
             counts = {k: counts[k] + spk[k] for k in counts}
             out = spk if record_raster else None
             return (st2, counts), out
@@ -191,7 +229,7 @@ class Simulator:
         counts0 = {name: jnp.zeros((pop.n,), jnp.int32)
                    for name, pop in self.net.populations.items()}
         (state2, counts), raster = jax.lax.scan(
-            body, (state, counts0), None, length=n_steps)
+            body, (state, counts0), stim if stim else None, length=n_steps)
 
         t_sec = n_steps * self.dt * 1e-3
         rates = {k: jnp.mean(v) / t_sec for k, v in counts.items()}
@@ -215,3 +253,59 @@ class Simulator:
 
             self._run_jit_cache[cache_key] = _run
         return self._run_jit_cache[cache_key]
+
+    # ------------------------------------------------------------------
+    # streaming / serving: a leading stream axis over independent sims
+    # ------------------------------------------------------------------
+    def init_stream_state(self, keys: jax.Array) -> SimState:
+        """Batched initial state: one independent simulation per slot.
+        keys: [max_streams, ...] stacked PRNG keys (one per slot); every
+        other leaf is the single-sim init broadcast along the stream axis,
+        so slot s starts bit-identical to init_state(keys[s])."""
+        return jax.vmap(self.init_state)(jnp.asarray(keys))
+
+    def serve_chunk(
+        self, state: SimState, stim: Mapping[str, jax.Array],
+        steps_left: jax.Array, n_steps: int,
+        gscales: Optional[Mapping[str, jax.Array]] = None,
+        record_raster: bool = False,
+    ):
+        """Advance every stream slot by up to `n_steps` (one serving chunk).
+
+        state: SimState with a leading stream axis (init_stream_state);
+        stim: population -> [max_streams, n_steps, n] injected currents;
+        steps_left: [max_streams] int32 — slot s advances
+        min(steps_left[s], n_steps) steps; lanes at or past their budget are
+        select-restored so idle/finished slots are exact no-ops.
+
+        Returns (new_state, counts, raster): counts maps population ->
+        [max_streams, n] spikes within the chunk (masked steps contribute
+        zero); raster maps population -> [max_streams, n_steps, n] when
+        record_raster (masked steps all-False), else None.
+        """
+        self._validate_gscales(gscales)
+        self._validate_stim(stim)
+        stim = {k: jnp.asarray(v, jnp.float32) for k, v in stim.items()}
+        steps_left = jnp.asarray(steps_left, jnp.int32)
+
+        def one_stream(st, st_stim, left):
+            def body(carry, xs):
+                t_idx, stim_t = xs
+                st, counts = carry
+                st2, spk = self.step(st, gscales, stim=stim_t)
+                act = t_idx < left
+                st2 = jax.tree.map(lambda a, b: jnp.where(act, a, b),
+                                   st2, st)
+                spk = {k: v & act for k, v in spk.items()}
+                counts = {k: counts[k] + spk[k] for k in counts}
+                return (st2, counts), (spk if record_raster else None)
+
+            counts0 = {name: jnp.zeros((pop.n,), jnp.int32)
+                       for name, pop in self.net.populations.items()}
+            xs = (jnp.arange(n_steps, dtype=jnp.int32),
+                  st_stim if st_stim else None)
+            (st2, counts), raster = jax.lax.scan(
+                body, (st, counts0), xs, length=n_steps)
+            return st2, counts, raster
+
+        return jax.vmap(one_stream)(state, stim, steps_left)

@@ -363,10 +363,24 @@ class CompiledModel:
         return self.simulator.init_state(key)
 
     def step(self, state: SimState,
-             gscales: Optional[Mapping[str, jax.Array]] = None):
+             gscales: Optional[Mapping[str, jax.Array]] = None,
+             stim: Optional[Mapping[str, jax.Array]] = None):
+        stim = self._norm_stim(stim)
         if self.engine is not None:
-            return self.engine.step(state, self._norm_gscales(gscales))
-        return self.simulator.step(state, self._norm_gscales(gscales))
+            return self.engine.step(state, self._norm_gscales(gscales),
+                                    stim=stim)
+        return self.simulator.step(state, self._norm_gscales(gscales),
+                                   stim=stim)
+
+    def _norm_stim(self, stim) -> Dict[str, jax.Array]:
+        out = {k: jnp.asarray(v, jnp.float32)
+               for k, v in (stim or {}).items()}
+        unknown = set(out) - set(self.network.populations)
+        if unknown:
+            raise SpecError(
+                f"unknown stim population(s) {sorted(unknown)}; declared "
+                f"populations: {sorted(self.network.populations)}")
+        return out
 
     def _norm_gscales(self, gscales) -> Dict[str, jax.Array]:
         out: Dict[str, jax.Array] = {}
@@ -383,29 +397,35 @@ class CompiledModel:
     def run(self, n_steps: int,
             gscales: Optional[Mapping[str, jax.Array]] = None,
             state: Optional[SimState] = None,
-            record_raster: bool = False) -> RunResult:
+            record_raster: bool = False,
+            stim: Optional[Mapping[str, jax.Array]] = None) -> RunResult:
         """Run n_steps from `state` (default: fresh init), jit-compiled.
-        The compiled executable is cached per (n_steps, gscale keys,
-        record_raster); gscale *values* are traced, so sweeping values
-        reuses one executable."""
+        The compiled executable is cached per (n_steps, gscale keys, stim
+        keys, record_raster); gscale/stim *values* are traced, so sweeping
+        values reuses one executable.  stim: population -> [n_steps, n]
+        external currents injected one row per step — the offline oracle a
+        served stream is bit-exact against."""
         gscales = self._norm_gscales(gscales)
+        stim = self._norm_stim(stim)
         if self.engine is not None:
-            return self.engine.run(n_steps, gscales, state, record_raster)
+            return self.engine.run(n_steps, gscales, state, record_raster,
+                                   stim=stim)
         if state is None:
             state = self.init_state()
         keys = tuple(sorted(gscales))
-        cache_key = (n_steps, keys, record_raster)
+        stim_keys = tuple(sorted(stim))
+        cache_key = (n_steps, keys, record_raster, stim_keys)
         if cache_key not in self._run_cache:
             sim = self.simulator
 
             @jax.jit
-            def _run(st, vals):
+            def _run(st, vals, stim_v):
                 return sim.run(st, n_steps, dict(zip(keys, vals)),
-                               record_raster=record_raster)
+                               record_raster=record_raster, stim=stim_v)
 
             self._run_cache[cache_key] = _run
         vals = tuple(gscales[k] for k in keys)
-        return self._run_cache[cache_key](state, vals)
+        return self._run_cache[cache_key](state, vals, stim)
 
     def sweep_gscale(self, group: Union[str, Sequence[str]],
                      values, n_steps: int,
@@ -438,6 +458,52 @@ class CompiledModel:
         rates, finite, counts = self._sweep_cache[cache_key](state, values)
         return SweepResult(values=values, rates_hz=rates, finite=finite,
                            spike_counts=counts)
+
+    # -- streaming / serving ----------------------------------------------
+    def init_stream_state(self, keys) -> SimState:
+        """Batched device-resident state: one independent simulation per
+        stream slot (leading stream axis on every leaf).  keys: stacked
+        per-slot PRNG keys [max_streams, ...]; slot s starts bit-identical
+        to init_state(keys[s])."""
+        backend = self.engine if self.engine is not None else self.simulator
+        return backend.init_stream_state(jnp.asarray(keys))
+
+    def serve_chunk(self, state: SimState, stim, steps_left, n_steps: int,
+                    gscales: Optional[Mapping[str, jax.Array]] = None,
+                    record_raster: bool = False):
+        """Advance every stream slot by up to n_steps (one serving chunk),
+        jit-compiled and cached per (n_steps, gscale keys, stim pops,
+        record_raster).  See Simulator.serve_chunk for the masking
+        contract; SNNServer (repro.launch.snn_serve) drives this."""
+        gscales = self._norm_gscales(gscales)
+        stim = self._norm_stim(stim)
+        steps_left = jnp.asarray(steps_left, jnp.int32)
+        if self.engine is not None:
+            return self.engine.serve_chunk(state, stim, steps_left, n_steps,
+                                           gscales, record_raster)
+        keys = tuple(sorted(gscales))
+        stim_keys = tuple(sorted(stim))
+        cache_key = ("serve", n_steps, keys, stim_keys, record_raster)
+        if cache_key not in self._run_cache:
+            sim = self.simulator
+
+            @jax.jit
+            def _serve(st, stim_v, left, vals):
+                return sim.serve_chunk(st, stim_v, left, n_steps,
+                                       dict(zip(keys, vals)),
+                                       record_raster=record_raster)
+
+            self._run_cache[cache_key] = _serve
+        vals = tuple(gscales[k] for k in keys)
+        return self._run_cache[cache_key](state, stim, steps_left, vals)
+
+    def serve(self, max_streams: int = 4, chunk: int = 50, **kwargs):
+        """A streaming SNNServer over this model: `max_streams` device-
+        resident slots on the stream (vmap) axis, advanced `chunk` steps
+        per serve_step call.  See repro.launch.snn_serve."""
+        from repro.launch.snn_serve import SNNServer
+        return SNNServer(self, max_streams=max_streams, chunk=chunk,
+                         **kwargs)
 
     def memory_report(self) -> List[dict]:
         return self.network.memory_report()

@@ -1,0 +1,132 @@
+"""Slot scheduling for continuous-batching servers.
+
+Both serving front-ends — the transformer token server (launch/serve.py) and
+the spiking-network stream server (launch/snn_serve.py) — share the same
+shape: a fixed table of device-resident slots (KV-cache rows there, stream
+lanes on the SNN vmap axis here), a FIFO queue of pending requests, and a
+loop that admits queued requests into free slots, advances every occupied
+slot in one compiled step, and evicts finished requests so their slots are
+immediately reusable.  This module is that shared core, plus the
+per-request latency accounting both servers report.
+
+Requests are arbitrary objects with an integer ``rid`` attribute; the
+scheduler never inspects anything else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["RequestTiming", "SlotScheduler"]
+
+
+@dataclasses.dataclass
+class RequestTiming:
+    """Wall-clock milestones of one request through the slot table."""
+
+    submitted_at: float
+    admitted_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.admitted_at is None:
+            return None
+        return self.admitted_at - self.submitted_at
+
+    @property
+    def service_s(self) -> Optional[float]:
+        if self.admitted_at is None or self.finished_at is None:
+            return None
+        return self.finished_at - self.admitted_at
+
+    @property
+    def total_s(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+class SlotScheduler:
+    """FIFO queue + fixed slot table (continuous batching).
+
+    Slots are integers in [0, max_slots); a slot is either free or bound to
+    exactly one in-flight request.  ``admit`` moves queued requests into
+    free slots (FIFO), ``release`` frees a slot when its request finishes —
+    the next ``admit`` refills it, so a long-running request never blocks
+    the batch (the continuous-batching property both servers rely on).
+    """
+
+    def __init__(self, max_slots: int):
+        if max_slots <= 0:
+            raise ValueError(f"max_slots must be positive, got {max_slots}")
+        self.max_slots = int(max_slots)
+        self.queue: List[object] = []
+        self.active: Dict[int, object] = {}      # slot -> request
+        self.timings: Dict[int, RequestTiming] = {}   # rid -> timing
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, req) -> None:
+        """Enqueue a request (stamped for latency accounting)."""
+        if req.rid in self.timings:
+            raise ValueError(
+                f"duplicate request rid {req.rid}: timing/accounting is "
+                "keyed by rid; use forget() after collecting a finished "
+                "request to recycle its id")
+        self.timings[req.rid] = RequestTiming(submitted_at=time.monotonic())
+        self.queue.append(req)
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.max_slots) if s not in self.active]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active)
+
+    # -- slot transitions -------------------------------------------------
+    def admit(self) -> List[Tuple[int, object]]:
+        """Bind queued requests to free slots (FIFO); returns the new
+        (slot, request) assignments so the caller can initialize the
+        device-resident state those slots hold."""
+        assigned: List[Tuple[int, object]] = []
+        free = self.free_slots
+        now = time.monotonic()
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            self.active[slot] = req
+            self.timings[req.rid].admitted_at = now
+            assigned.append((slot, req))
+        return assigned
+
+    def release(self, slot: int):
+        """Free a slot whose request finished; returns the request."""
+        req = self.active.pop(slot)
+        self.timings[req.rid].finished_at = time.monotonic()
+        return req
+
+    def forget(self, rid: int) -> None:
+        """Drop a finished request's timing record (long-lived servers
+        prune per-request accounting after collecting results; without
+        this the timings dict grows one entry per request forever)."""
+        t = self.timings.get(rid)
+        if t is not None and t.finished_at is not None:
+            del self.timings[rid]
+
+    # -- reporting --------------------------------------------------------
+    def latency_summary(self) -> Dict[str, float]:
+        """Mean/max total latency and queue wait over finished requests."""
+        done = [t for t in self.timings.values()
+                if t.finished_at is not None]
+        if not done:
+            return {"finished": 0}
+        totals = [t.total_s for t in done]
+        waits = [t.queue_wait_s for t in done]
+        return {
+            "finished": len(done),
+            "mean_total_s": sum(totals) / len(done),
+            "max_total_s": max(totals),
+            "mean_queue_wait_s": sum(waits) / len(done),
+        }

@@ -1,8 +1,9 @@
 """Serving driver: batched prefill + decode loop with continuous batching.
 
 A minimal production-shaped server: requests (prompt token lists) enter a
-queue; the scheduler packs up to `max_batch` active sequences; prefill runs
-per admission; decode steps run the whole active batch through one jitted
+queue; the slot scheduler (launch/scheduling.py, shared with the SNN stream
+server) packs up to `max_batch` active sequences; prefill runs per
+admission; decode steps run the whole active batch through one jitted
 decode_step (KV caches preallocated to max_seq).  Finished sequences free
 their slots for queued requests (continuous batching).  Greedy or
 temperature sampling.
@@ -25,6 +26,7 @@ import numpy as np
 from repro.configs import get_config, reduced as make_reduced
 from repro.launch import sharding as SH
 from repro.launch.mesh import make_local_mesh
+from repro.launch.scheduling import SlotScheduler
 from repro.models import transformer as T
 
 __all__ = ["Server", "Request"]
@@ -54,14 +56,22 @@ class Server:
             self.params = T.init_params(self.cfg, jax.random.PRNGKey(seed))
             self._decode = jax.jit(
                 lambda p, c, t: T.decode_step(p, self.cfg, c, t))
-        self.queue: List[Request] = []
-        self.active: Dict[int, Request] = {}   # slot -> request
+        self.sched = SlotScheduler(max_batch)
+        self.finished: List[Request] = []
         self.caches = None
         self.slot_len: Dict[int, int] = {}
 
     # -- queue --------------------------------------------------------------
+    @property
+    def queue(self) -> List[Request]:
+        return self.sched.queue
+
+    @property
+    def active(self) -> Dict[int, Request]:
+        return self.sched.active
+
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.sched.submit(req)
 
     # -- internals ------------------------------------------------------------
     def _extra(self, b):
@@ -76,11 +86,12 @@ class Server:
 
     def _admit(self) -> None:
         """Prefill queued requests into free slots (one batch per admit)."""
-        free = [s for s in range(self.max_batch) if s not in self.active]
-        if not free or not self.queue:
+        assigned = self.sched.admit()
+        if not assigned:
             return
-        take = min(len(free), len(self.queue))
-        reqs = [self.queue.pop(0) for _ in range(take)]
+        slots = [s for s, _ in assigned]
+        reqs = [r for _, r in assigned]
+        take = len(reqs)
         maxlen = max(len(r.prompt) for r in reqs)
         toks = np.zeros((take, maxlen), np.int32)
         for i, r in enumerate(reqs):
@@ -93,14 +104,13 @@ class Server:
         # batch yet, adopt; otherwise run sequences independently per admit)
         if self.caches is None and take == self.max_batch:
             self.caches = caches
-        for i, (r, s) in enumerate(zip(reqs, free)):
-            self.active[s] = r
+        for i, (r, s) in enumerate(zip(reqs, slots)):
             self.slot_len[s] = maxlen
             tok = self._sample(np.asarray(logits[i]), r)
             r.out.append(int(tok))
         # dedicated per-admit caches (slot-batched serving): store
         self._admit_caches = caches
-        self._admit_slots = free[:take]
+        self._admit_slots = slots
 
     def _sample(self, logits: np.ndarray, req: Request) -> int:
         if req.temperature <= 0:
@@ -132,17 +142,24 @@ class Server:
             if len(r.out) >= r.max_new:
                 r.done = True
         for s in [s for s, r in self.active.items() if r.done]:
-            del self.active[s]
+            self.finished.append(self.sched.release(s))
         if not self.active:
             self._admit_caches = None
             return bool(self.queue)
         return True
 
     def run(self) -> List[Request]:
-        finished: List[Request] = []
         while self.step():
             pass
-        return finished
+        return list(self.finished)
+
+    def pop_finished(self) -> List[Request]:
+        """Collect finished requests, pruning their accounting records so
+        a long-lived server stays bounded (and their rids reusable)."""
+        done, self.finished = self.finished, []
+        for r in done:
+            self.sched.forget(r.rid)
+        return done
 
 
 def main(argv=None):
@@ -172,6 +189,7 @@ def main(argv=None):
     total_tokens = sum(len(r.out) for r in reqs)
     print(f"[serve] {args.requests} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
+    print(f"[serve] latency: {srv.sched.latency_summary()}")
     for r in reqs[:4]:
         print(f"  req{r.rid}: prompt[:6]={r.prompt[:6]} -> out[:8]={r.out[:8]}")
 

@@ -1,0 +1,282 @@
+"""Serving tests: slot scheduler, both servers, served-vs-offline exactness.
+
+The load-bearing contract (ISSUE 3 acceptance): a served SNN stream's spike
+output is *bit-exact* against an offline `Simulator.run` / sharded
+`ShardedEngine.run` with the same seed and stimulus, with >= 2 streams
+active concurrently and continuous batching (more requests than slots,
+partial trailing chunks), for both host and sharded builds.
+
+Run standalone (the CI `serving` job does, on 8 fake CPU devices):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest -q tests/test_serving.py
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.models.izhikevich_net import (IzhikevichNetConfig,
+                                              compile_model)
+from repro.core.snn.spec import ModelSpec, SpecError
+from repro.core.snn.synapses import ExpDecay, STDP
+from repro.launch.mesh import make_snn_mesh
+from repro.launch.scheduling import SlotScheduler
+from repro.launch.snn_serve import SNNServer, StreamRequest
+from repro.sparse.formats import FixedFanout, UniformWeight
+
+
+def _n_dev() -> int:
+    """Cap at 8 (importing launch.dryrun elsewhere in the suite can force
+    512 fake devices; a 512-way shard_map over tiny nets is all rendezvous)."""
+    return min(jax.device_count(), 8)
+
+
+@dataclasses.dataclass
+class _Req:
+    rid: int
+
+
+# ---------------------------------------------------------------------------
+# SlotScheduler (shared by the transformer and SNN servers)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_fifo_admission_and_capacity():
+    sched = SlotScheduler(2)
+    for i in range(4):
+        sched.submit(_Req(rid=i))
+    assigned = sched.admit()
+    assert [(s, r.rid) for s, r in assigned] == [(0, 0), (1, 1)]
+    assert sched.admit() == []          # full: nothing admitted
+    assert [r.rid for r in sched.queue] == [2, 3]
+    assert sched.has_work()
+
+
+def test_scheduler_release_refills_fifo():
+    sched = SlotScheduler(2)
+    for i in range(3):
+        sched.submit(_Req(rid=i))
+    sched.admit()
+    assert sched.release(0).rid == 0
+    assigned = sched.admit()            # continuous batching: refill slot 0
+    assert [(s, r.rid) for s, r in assigned] == [(0, 2)]
+    sched.release(0), sched.release(1)
+    assert not sched.has_work()
+    assert sched.free_slots == [0, 1]
+
+
+def test_scheduler_timing_accounting():
+    sched = SlotScheduler(1)
+    sched.submit(_Req(rid=7))
+    t = sched.timings[7]
+    assert t.admitted_at is None and t.total_s is None
+    sched.admit()
+    assert t.queue_wait_s is not None and t.queue_wait_s >= 0
+    sched.release(0)
+    assert t.total_s is not None and t.service_s is not None
+    assert sched.latency_summary()["finished"] == 1
+
+
+def test_scheduler_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        SlotScheduler(0)
+
+
+# ---------------------------------------------------------------------------
+# stim plumbing (the offline oracle the serving path is exact against)
+# ---------------------------------------------------------------------------
+
+def test_run_with_zero_stim_is_noop():
+    model = compile_model(IzhikevichNetConfig(n_total=50, n_conn=8, seed=2))
+    n_exc = model.network.populations["exc"].n
+    r1 = model.run(15)
+    r2 = model.run(15, stim={"exc": np.zeros((15, n_exc), np.float32)})
+    for k in r1.spike_counts:
+        assert np.array_equal(np.asarray(r1.spike_counts[k]),
+                              np.asarray(r2.spike_counts[k])), k
+
+
+def test_run_rejects_unknown_stim_population():
+    model = compile_model(IzhikevichNetConfig(n_total=50, n_conn=8))
+    with pytest.raises(SpecError, match="nope"):
+        model.run(5, stim={"nope": np.zeros((5, 50), np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# SNNServer: served streams bit-exact vs offline runs
+# ---------------------------------------------------------------------------
+
+def _requests(model, pops, lengths, scale=3.0, seed0=100):
+    rng = np.random.default_rng(0)
+    sizes = {p: model.network.populations[p].n for p in pops}
+    reqs = []
+    for i, T in enumerate(lengths):
+        stim = {p: (scale * rng.normal(size=(T, n))).astype(np.float32)
+                for p, n in sizes.items()}
+        reqs.append(StreamRequest(rid=i, n_steps=T, stim=stim,
+                                  seed=seed0 + i))
+    return reqs
+
+
+def _assert_streams_exact(model, srv, finished):
+    """Every finished stream == offline run with its seed + stimulus."""
+    for req in finished:
+        res = model.run(req.n_steps, stim=req.stim, record_raster=True,
+                        state=model.init_state(
+                            jax.random.PRNGKey(req.seed)))
+        counts = req.spike_counts
+        raster = req.raster
+        for k, v in res.spike_counts.items():
+            assert np.array_equal(np.asarray(v), counts[k]), \
+                (req.rid, k, "counts")
+            assert np.array_equal(np.asarray(res.raster[k]), raster[k]), \
+                (req.rid, k, "raster")
+
+
+def test_served_streams_exact_host():
+    """Host build: 3 slots, 5 requests with varied lengths (partial
+    trailing chunks + slot reuse), bit-exact counts and rasters."""
+    model = compile_model(IzhikevichNetConfig(n_total=60, n_conn=10,
+                                              seed=5))
+    srv = SNNServer(model, max_streams=3, chunk=7, stim_pops=("exc",),
+                    record_raster=True)
+    reqs = [srv.submit(r)
+            for r in _requests(model, ("exc",), [20, 13, 25, 9, 17])]
+    finished = srv.run()
+    assert len(finished) == 5 and all(r.done for r in reqs)
+    _assert_streams_exact(model, srv, finished)
+    stats = srv.stats()
+    assert stats["slot_steps"] == sum([20, 13, 25, 9, 17])
+    assert stats["latency"]["finished"] == 5
+
+
+def test_served_streams_exact_sharded():
+    """Sharded build: >= 2 streams concurrently on the mesh; bit-exact vs
+    the offline ShardedEngine.run AND the single-device Simulator.run."""
+    cfg = IzhikevichNetConfig(n_total=64, n_conn=12, seed=9)
+    model = compile_model(cfg, mesh=make_snn_mesh(_n_dev()))
+    srv = SNNServer(model, max_streams=2, chunk=6, stim_pops=("exc",),
+                    record_raster=True)
+    reqs = [srv.submit(r)
+            for r in _requests(model, ("exc",), [14, 11, 8])]
+    finished = srv.run()
+    assert len(finished) == 3 and all(r.done for r in reqs)
+    _assert_streams_exact(model, srv, finished)            # engine oracle
+    host = compile_model(cfg)                              # host oracle
+    _assert_streams_exact(host, srv, finished)
+
+
+def test_served_streams_exact_delays_and_stdp():
+    """Serving covers every state kind: delay rings, STDP traces, plastic
+    g — the per-slot masking must restore all of them bit-for-bit."""
+    def mk():
+        s = ModelSpec("serve_cover")
+        s.add_neuron_population(
+            "a", 30, "izhikevich",
+            input_fn=lambda k, t, n: 6.0 * jax.random.normal(k, (n,)))
+        s.add_neuron_population("b", 14, "izhikevich")
+        s.add_synapse_population("ab", "a", "b", connect=FixedFanout(4),
+                                 weight=UniformWeight(0, 0.8),
+                                 psm=ExpDecay(4.0), delay_steps=2)
+        s.add_synapse_population("aa", "a", "a", connect=FixedFanout(5),
+                                 weight=UniformWeight(0, 0.4),
+                                 wum=STDP(0.01))
+        return s
+
+    model = mk().build(dt=1.0, seed=11)
+    srv = SNNServer(model, max_streams=2, chunk=5, stim_pops=("a",),
+                    record_raster=True)
+    for r in _requests(model, ("a",), [12, 9, 11], scale=2.0):
+        srv.submit(r)
+    finished = srv.run()
+    assert len(finished) == 3
+    _assert_streams_exact(model, srv, finished)
+
+
+def test_idle_slots_are_exact_noops():
+    """Masking semantics: slots without an admitted stream keep their
+    state (incl. PRNG key and t) bit-identical across serve_steps."""
+    model = compile_model(IzhikevichNetConfig(n_total=40, n_conn=6))
+    srv = SNNServer(model, max_streams=3, chunk=4, stim_pops=("exc",))
+    before = jax.tree.map(lambda x: np.asarray(x[1:]).copy(), srv.states)
+    srv.submit(_requests(model, ("exc",), [8])[0])   # occupies slot 0 only
+    srv.run()
+    after = jax.tree.map(lambda x: np.asarray(x[1:]), srv.states)
+    leaves_b, leaves_a = jax.tree.leaves(before), jax.tree.leaves(after)
+    assert leaves_b and len(leaves_b) == len(leaves_a)
+    for b, a in zip(leaves_b, leaves_a):
+        assert np.array_equal(b, a)
+
+
+def test_pop_finished_bounds_memory_and_recycles_rids():
+    model = compile_model(IzhikevichNetConfig(n_total=40, n_conn=6))
+    srv = SNNServer(model, max_streams=2, chunk=4, stim_pops=("exc",))
+    srv.submit(_requests(model, ("exc",), [6])[0])
+    with pytest.raises(ValueError, match="duplicate request rid"):
+        srv.submit(_requests(model, ("exc",), [6])[0])     # rid=0 again
+    srv.run()
+    done = srv.pop_finished()
+    assert [r.rid for r in done] == [0] and done[0].done
+    assert not srv.requests and 0 not in srv.sched.timings
+    srv.submit(_requests(model, ("exc",), [6])[0])         # rid recycled
+    assert srv.run()[0].done
+
+
+def test_server_validates_requests():
+    model = compile_model(IzhikevichNetConfig(n_total=40, n_conn=6))
+    srv = SNNServer(model, max_streams=2, chunk=4, stim_pops=("exc",))
+    n_exc = model.network.populations["exc"].n
+    with pytest.raises(ValueError, match="not served"):
+        srv.submit(StreamRequest(
+            rid=0, n_steps=4,
+            stim={"inh": np.zeros((4, 8), np.float32)}))
+    with pytest.raises(ValueError, match="shape"):
+        srv.submit(StreamRequest(
+            rid=1, n_steps=4,
+            stim={"exc": np.zeros((3, n_exc), np.float32)}))
+    with pytest.raises(ValueError, match="unknown stim population"):
+        SNNServer(model, stim_pops=("bogus",))
+
+
+def test_compiled_model_serve_handle():
+    model = compile_model(IzhikevichNetConfig(n_total=40, n_conn=6))
+    srv = model.serve(max_streams=2, chunk=8, stim_pops=("exc",))
+    assert isinstance(srv, SNNServer)
+    assert srv.model is model and srv.max_streams == 2 and srv.chunk == 8
+
+
+# ---------------------------------------------------------------------------
+# transformer server on the shared scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_requests,max_batch", [(3, 2)])
+def test_transformer_server_continuous_batching(n_requests, max_batch):
+    from repro.launch.serve import Request, Server
+
+    srv = Server("qwen2-0.5b", use_reduced=True, max_batch=max_batch,
+                 max_seq=64)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(n_requests):
+        prompt = rng.integers(3, srv.cfg.vocab, size=5).tolist()
+        r = Request(rid=i, prompt=prompt, max_new=4)
+        reqs.append(r)
+        srv.submit(r)
+    finished = srv.run()
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 4 for r in reqs)
+    assert sorted(r.rid for r in finished) == list(range(n_requests))
+    summary = srv.sched.latency_summary()
+    assert summary["finished"] == n_requests
+    # continuous batching: the 3rd request was admitted strictly after the
+    # first two (no free slot until one finished)
+    t0, t2 = srv.sched.timings[0], srv.sched.timings[2]
+    assert t2.admitted_at >= t0.admitted_at
+    assert not srv.sched.has_work()
+    # long-lived servers prune accounting via pop_finished
+    assert len(srv.pop_finished()) == n_requests
+    assert not srv.finished and not srv.sched.timings
