@@ -1,0 +1,124 @@
+"""Seeded-determinism smoke: same seed, different --devices, same spikes.
+
+The whole sharded-SNN story rests on one invariant: a simulation is a pure
+function of (spec, seed) — never of the device count.  This smoke runs the
+same device-initialized model (heterogeneous dendritic delays + a
+homogeneous-delay group, the states most likely to break the invariant)
+under 1 and N host-platform devices in separate subprocesses (the XLA
+device count locks at backend init, so one process cannot do both), and
+fails if any spike count, raster bit or generated delay slot differs.
+
+Emits ``experiments/bench/BENCH_determinism.json`` so the CI artifact
+records the checked configuration next to the perf JSONs.
+
+    PYTHONPATH=src python -m benchmarks.determinism_smoke [--devices 8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+OUT_NAME = "BENCH_determinism.json"
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+_WORKER = r"""
+import os, sys, json, hashlib
+import numpy as np
+import jax
+from repro.core.snn.spec import ModelSpec
+from repro.core.snn.synapses import ExpDecay
+from repro.launch.mesh import make_snn_mesh
+from repro.sparse.formats import FixedFanout, UniformIntDelay, UniformWeight
+
+devices = int(sys.argv[1])
+seed = int(sys.argv[2])
+steps = int(sys.argv[3])
+
+s = ModelSpec("determinism")
+s.add_neuron_population(
+    "a", 48, "izhikevich",
+    input_fn=lambda k, t, n: 8.0 * jax.random.normal(k, (n,)))
+s.add_neuron_population("b", 24, "izhikevich")
+s.add_synapse_population("ab", "a", "b", connect=FixedFanout(6),
+                         weight=UniformWeight(0, 9.0), psm=ExpDecay(4.0),
+                         delay=UniformIntDelay(0, 3))
+s.add_synapse_population("bb", "b", "b", connect=FixedFanout(4),
+                         weight=UniformWeight(0, 0.3), delay_steps=2)
+mesh = make_snn_mesh(devices) if devices > 1 else None
+model = s.build(dt=1.0, seed=seed, init="device", mesh=mesh)
+res = model.run(steps, record_raster=True)
+out = {
+    "devices": devices,
+    "finite": bool(res.finite),
+    "counts": {k: np.asarray(v).tolist() for k, v in res.spike_counts.items()},
+    "raster_hash": {k: hashlib.sha256(
+                        np.asarray(v, np.uint8).tobytes()).hexdigest()
+                    for k, v in res.raster.items()},
+    "delay_slots": np.asarray(
+        model.network.synapses[0].ell.delay).tolist(),
+}
+print(json.dumps(out))
+"""
+
+
+def _run(devices: int, seed: int, steps: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "").replace(
+        "--xla_force_host_platform_device_count=8", "").strip()
+        + f" --xla_force_host_platform_device_count={devices}").strip()
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", _WORKER, str(devices), str(seed), str(steps)],
+        capture_output=True, text=True, timeout=600, env=env)
+    if out.returncode != 0:
+        raise SystemExit(
+            f"determinism worker (devices={devices}) failed:\n"
+            + out.stderr[-3000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    one = _run(1, args.seed, args.steps)
+    many = _run(args.devices, args.seed, args.steps)
+    checks = {
+        "finite": one["finite"] and many["finite"],
+        "spike_counts_equal": one["counts"] == many["counts"],
+        "rasters_equal": one["raster_hash"] == many["raster_hash"],
+        "delay_slots_equal": one["delay_slots"] == many["delay_slots"],
+    }
+    payload = {
+        "seed": args.seed,
+        "steps": args.steps,
+        "devices_compared": [1, args.devices],
+        "checks": checks,
+        "wall_s": time.perf_counter() - t0,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / OUT_NAME).write_text(json.dumps(payload, indent=1))
+    print(f"wrote {RESULTS / OUT_NAME}", flush=True)
+    for name, ok in checks.items():
+        print(f"determinism_{name}: {'OK' if ok else 'MISMATCH'}",
+              flush=True)
+    if not all(checks.values()):
+        raise SystemExit(
+            f"seeded-determinism smoke FAILED: {checks} — the same seed "
+            f"produced different results on 1 vs {args.devices} devices")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -381,7 +381,11 @@ class WeightUpdateModel:
 
     spike_code: per-synapse *expression* for the contribution a presynaptic
                 spike adds to the post neuron's input (GeNN's addToInSyn).
-                May reference ``g``, syn_state vars and params.
+                May reference ``g``, syn_state vars, params and ``delay``
+                (the per-synapse dendritic delay in dt steps, as float32;
+                the scalar delay_steps on homogeneous groups, 0.0 on
+                delay-free ones) — e.g. a distance-dependent attenuation
+                ``g * exp(-delay / lam)``.
     syn_state:  extra per-synapse variables (same shape as ``g``).
     pre_state / post_state:
                 per-pre- / per-post-neuron trace variables -> initial value.
@@ -392,7 +396,8 @@ class WeightUpdateModel:
     learn_code: statements updating per-synapse variables (``g`` and
                 syn_state) each step.  Pre-side names (pre traces,
                 ``pre_spike``) broadcast as [n_pre, 1]; post-side names are
-                gathered to synapse shape [n_pre, max_conn].
+                gathered to synapse shape [n_pre, max_conn].  May also read
+                ``delay`` (per-synapse dendritic delay, float32).
     """
 
     name: str
@@ -407,7 +412,8 @@ class WeightUpdateModel:
 
     def __post_init__(self) -> None:
         _check_reserved(self.name,
-                        {"g", "pre_spike", "post_spike"} | set(_WU_EXTERNALS),
+                        {"g", "pre_spike", "post_spike", "delay"}
+                        | set(_WU_EXTERNALS),
                         params=self.params, syn_state=self.syn_state,
                         pre_state=self.pre_state, post_state=self.post_state)
 
@@ -423,6 +429,9 @@ class WeightUpdateModel:
 
 
 _WU_EXTERNALS = ("dt", "t")
+# per-synapse-shaped externals visible to spike_code / learn_code only (the
+# pre/post trace snippets are population-shaped and must not see them)
+_WU_SYN_EXTERNALS = ("dt", "t", "delay")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -450,14 +459,15 @@ def compile_weight_update(model: WeightUpdateModel) -> "CompiledWeightUpdate":
     pre_keys = tuple(model.pre_state)
     post_keys = tuple(model.post_state)
 
-    w_allowed = {"g"} | set(syn_keys) | set(param_keys) | set(_WU_EXTERNALS)
+    w_allowed = ({"g"} | set(syn_keys) | set(param_keys)
+                 | set(_WU_SYN_EXTERNALS))
     w_code = compile_expr(model.spike_code, w_allowed,
                           f"{model.name}.spike")
 
     def effective_weight(g, syn_state, params, externals=None):
         env = _env_base()
         env.update({k: params[k] for k in param_keys})
-        env.update({k: (externals or {})[k] for k in _WU_EXTERNALS
+        env.update({k: (externals or {})[k] for k in _WU_SYN_EXTERNALS
                     if k in (externals or {})})
         env["g"] = g
         env.update({k: syn_state[k] for k in syn_keys})
@@ -491,7 +501,7 @@ def compile_weight_update(model: WeightUpdateModel) -> "CompiledWeightUpdate":
     if model.learn_code:
         allowed = ({"g", "pre_spike", "post_spike"} | set(syn_keys)
                    | set(pre_keys) | set(post_keys) | set(param_keys)
-                   | set(_WU_EXTERNALS))
+                   | set(_WU_SYN_EXTERNALS))
         allowed |= _assigned_names(model.learn_code)
         l_code = _compile_block(model.learn_code, allowed,
                                 f"{model.name}.learn")
@@ -499,7 +509,7 @@ def compile_weight_update(model: WeightUpdateModel) -> "CompiledWeightUpdate":
         def learn(g, syn_state, traces, params, externals):
             env = _env_base()
             env.update({k: params[k] for k in param_keys})
-            env.update({k: externals[k] for k in _WU_EXTERNALS
+            env.update({k: externals[k] for k in _WU_SYN_EXTERNALS
                         if k in externals})
             env.update(traces)
             env["g"] = g

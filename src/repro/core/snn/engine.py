@@ -11,7 +11,10 @@ entirely under `shard_map`:
   2. synaptic propagation: each device scatter-accumulates currents into
      its own post shard using its connectivity block (the compiled
      weight-update / postsynaptic snippets are reused unchanged via the
-     `ell=`/`dense=` overrides of SynapseGroup.step);
+     `ell=`/`dense=` overrides of SynapseGroup.step); dendritic delays land
+     those currents in the group's post-sharded delay ring — each device
+     holds [max_delay+1, n_post_local], with per-synapse delay slots
+     partitioned alongside the weights, so no delay state is replicated;
   3. neuron updates: the codegen'd model equations advance the local shard.
 
 The engine is *bit-exact* against the single-device Simulator for the same
@@ -99,8 +102,8 @@ class ShardedEngine:
                 self._block_specs[g.name] = {"dense": P(self.axis, None,
                                                         None)}
             else:
-                gg, post, valid, shard_size, k_loc = partition_ell_by_post(
-                    g.ell, D)
+                (gg, post, valid, delay, shard_size,
+                 k_loc) = partition_ell_by_post(g.ell, D)
                 assert shard_size == self._shard[g.post]
                 self._k_local[g.name] = k_loc
                 self._blocks[g.name] = {
@@ -108,9 +111,14 @@ class ShardedEngine:
                     "post": jax.device_put(post, sh_block),
                     "valid": jax.device_put(valid, sh_block),
                 }
+                if delay is not None:
+                    # per-synapse dendritic delays ride in the same
+                    # post-sharded layout as the weights they gate
+                    self._blocks[g.name]["delay"] = jax.device_put(
+                        delay, sh_block)
                 self._block_specs[g.name] = {
-                    k: P(self.axis, None, None) for k in ("g", "post",
-                                                          "valid")}
+                    k: P(self.axis, None, None)
+                    for k in self._blocks[g.name]}
 
         # --- per-neuron parameter arrays (scalars stay baked) -------------
         self._pn_params: Dict[str, Dict[str, jax.Array]] = {}
@@ -147,15 +155,18 @@ class ShardedEngine:
                 if pop.edge_spikes}
         syn = {}
         for g in net.synapses:
-            # spec twin of each SynapseState: same pytree nodes, P leaves
+            # spec twin of each SynapseState: same pytree nodes, P leaves.
+            # The dendritic ring is post-sized, so it shards on the neuron
+            # axis like every other post-side buffer — no per-group state
+            # is replicated across devices.
             syn[g.name] = SynapseState(
                 psm={k: P(ax) for k in g.psm.state},
                 wu_pre={k: P() for k in g.wum.pre_state},
                 wu_post={k: P(ax) for k in g.wum.post_state},
                 g=P(ax, None, None) if g.plastic else None,
                 syn={k: P(ax, None, None) for k in g.wum.syn_state},
-                spike_buffer=P() if g.delay_steps > 0 else None,
-                cursor=P() if g.delay_steps > 0 else None)
+                dendritic=P(None, ax) if g.needs_ring else None,
+                cursor=P() if g.needs_ring else None)
         return SimState(neurons=neurons, spikes=spikes, prev_above=prev,
                         syn=syn, t=P(), key=P(), finite=P())
 
@@ -194,15 +205,18 @@ class ShardedEngine:
                 k: put(jnp.full((D, n_pre, self._k_local[g.name]), v,
                                 jnp.float32), shb)
                 for k, v in g.wum.syn_state.items()}
-            if g.delay_steps > 0:
-                buf = put(jnp.zeros((g.delay_steps + 1, n_pre),
-                                    jnp.float32), shr)
+            if g.needs_ring:
+                # dendritic ring sharded along the post axis: each device
+                # holds [ring_slots, n_post_local], never a replicated
+                # pre-sized buffer
+                buf = put(jnp.zeros((g.ring_slots, npost_pad),
+                                    jnp.float32), self._sh["ring"])
                 cur = put(jnp.zeros((), jnp.int32), shr)
             else:
                 buf, cur = None, None
             syn[g.name] = SynapseState(psm=psm, wu_pre=wu_pre,
                                        wu_post=wu_post, g=gv, syn=syn_vars,
-                                       spike_buffer=buf, cursor=cur)
+                                       dendritic=buf, cursor=cur)
         return SimState(
             neurons=neurons, spikes=spikes, prev_above=prev, syn=syn,
             t=put(jnp.zeros((), jnp.float32), shr), key=put(key, shr),
@@ -222,7 +236,7 @@ class ShardedEngine:
                 psm=s.psm, wu_pre=s.wu_pre, wu_post=s.wu_post,
                 g=None if s.g is None else s.g[0],
                 syn={k: v[0] for k, v in s.syn.items()},
-                spike_buffer=s.spike_buffer, cursor=s.cursor)
+                dendritic=s.dendritic, cursor=s.cursor)
         return out
 
     def _unsqueeze_syn(self, syn):
@@ -232,7 +246,7 @@ class ShardedEngine:
                 psm=s.psm, wu_pre=s.wu_pre, wu_post=s.wu_post,
                 g=None if s.g is None else s.g[None],
                 syn={k: v[None] for k, v in s.syn.items()},
-                spike_buffer=s.spike_buffer, cursor=s.cursor)
+                dendritic=s.dendritic, cursor=s.cursor)
         return out
 
     def _local_step(self, state: SimState, blocks, pn_params,
@@ -273,7 +287,8 @@ class ShardedEngine:
             else:
                 ell_l = F.ELLSynapses(g=blk["g"], post_ind=blk["post"],
                                       valid=blk["valid"],
-                                      n_post=self._shard[g.post])
+                                      n_post=self._shard[g.post],
+                                      delay=blk.get("delay"))
                 dense_l = None
             v_post = state.neurons[g.post].get("V")
             s_new, cur = g.step(

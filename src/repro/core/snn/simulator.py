@@ -21,6 +21,12 @@ input_fn, and the serving engine's per-slot replay of a stimulus is
 bit-identical to the offline run (the exactness contract
 tests/test_serving.py pins down).
 
+Synaptic delays are *dendritic* (GeNN's per-synapse delay model): each
+group's weighted currents land in a post-side ring
+`[max_delay+1, n_post]` (`SynapseState.dendritic`) `delay` slots ahead of
+the cursor — see repro.core.snn.synapses.  The homogeneous `delay_steps=k`
+shorthand lowers onto the same ring.
+
 Streaming/serving (`init_stream_state` / `serve_chunk`): state gains a
 leading *stream* axis (vmap) — `max_streams` independent simulations
 resident on device, each slot carrying its own neuron/synapse/delay state

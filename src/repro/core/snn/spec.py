@@ -42,12 +42,22 @@ from repro.core.snn.simulator import RunResult, SimState, Simulator
 from repro.core.snn.synapses import Pulse, SynapseGroup
 from repro.sparse import formats as F
 
-__all__ = ["ModelSpec", "CompiledModel", "SweepResult", "SpecError"]
+__all__ = ["ModelSpec", "CompiledModel", "SweepResult", "SpecError",
+           "MAX_DELAY_STEPS"]
 
 # weight initialization: scalar, or (rng, shape) -> array
 WeightInit = Union[None, float, int, Callable[..., np.ndarray]]
 
+# delay initialization: steps (int), or a per-synapse DelaySnippet
+DelayInit = Union[None, int, F.DelaySnippet]
+
 _REPRESENTATIONS = ("auto", "sparse", "dense")
+
+# Dendritic ring capacity: every delayed group carries a
+# [max_delay+1, n_post] ring resident on device for the whole simulation, so
+# an unbounded delay would silently allocate an arbitrarily large ring.
+# Delays above this bound are almost certainly a unit error (steps vs ms).
+MAX_DELAY_STEPS = 1024
 
 
 class SpecError(ValueError):
@@ -74,6 +84,8 @@ class SynapsePopSpec:
     wum: Optional[WeightUpdateModel]
     psm: PostsynapticModel
     delay_steps: int
+    delay: Optional[F.DelaySnippet]
+    delay_ms: Optional[float]
     sign: float
     representation: str
 
@@ -149,9 +161,26 @@ class ModelSpec:
         weight: WeightInit = None,
         wum: Optional[WeightUpdateModel] = None,
         psm: Optional[PostsynapticModel] = None,
-        delay_steps: int = 0, sign: float = 1.0,
+        delay_steps: int = 0,
+        delay: DelayInit = None,
+        delay_ms: Optional[float] = None,
+        sign: float = 1.0,
         representation: str = "auto",
     ) -> SynapsePopSpec:
+        """Declare a synapse population.
+
+        Delays (dendritic: the weighted current is buffered on the post
+        side) come in three declaration forms, at most one of which may be
+        used per population:
+
+        - ``delay_steps=k``: every synapse delays by k dt steps
+          (homogeneous fast path — one ring slot written per step);
+        - ``delay=ConstantDelay(k) | UniformIntDelay(lo, hi) | int``: a
+          per-synapse delay slot resolved like a weight initializer
+          (heterogeneous path; an int means ConstantDelay);
+        - ``delay_ms=x``: homogeneous delay declared in milliseconds,
+          converted at build time — x must be an integer multiple of dt.
+        """
         if not name or not isinstance(name, str):
             raise SpecError(f"synapse population name must be a non-empty "
                             f"string, got {name!r}")
@@ -167,11 +196,17 @@ class ModelSpec:
         # would make scaling silently partial
         taken = {s.name for s in self.synapses}
         taken |= {n for s in self.synapses for n in s.group_names()}
+        if isinstance(delay, int) and not isinstance(delay, bool):
+            try:
+                delay = F.ConstantDelay(delay)
+            except ValueError as e:
+                raise SpecError(
+                    f"synapse population {name!r}: {e}") from None
         spec = SynapsePopSpec(
             name=name, pre=pre, post=post_t, connect=connect, weight=weight,
             wum=wum, psm=psm if psm is not None else Pulse(),
-            delay_steps=delay_steps, sign=sign,
-            representation=representation)
+            delay_steps=delay_steps, delay=delay, delay_ms=delay_ms,
+            sign=sign, representation=representation)
         new_names = spec.group_names()
         for gname in [name] + new_names:
             if gname in taken or new_names.count(gname) > 1:
@@ -210,6 +245,42 @@ class ModelSpec:
             raise SpecError(
                 f"synapse population {name!r}: delay_steps must be a "
                 f"non-negative int, got {delay_steps!r}")
+        declared = [d for d, used in [
+            ("delay_steps", delay_steps != 0), ("delay", delay is not None),
+            ("delay_ms", delay_ms is not None)] if used]
+        if len(declared) > 1:
+            raise SpecError(
+                f"synapse population {name!r}: {' and '.join(declared)} are "
+                "mutually exclusive; declare the delay exactly one way")
+        if delay_steps > MAX_DELAY_STEPS:
+            raise SpecError(
+                f"synapse population {name!r}: delay_steps={delay_steps} "
+                f"exceeds the dendritic ring capacity "
+                f"MAX_DELAY_STEPS={MAX_DELAY_STEPS} (the ring holds "
+                "max_delay+1 per-post-neuron slots on device; delays this "
+                "large are almost certainly a steps-vs-ms unit error)")
+        if delay is not None:
+            if not isinstance(delay, F.DelaySnippet):
+                raise SpecError(
+                    f"synapse population {name!r}: delay must be an int or "
+                    f"a DelaySnippet (ConstantDelay / UniformIntDelay), "
+                    f"got {type(delay).__name__}")
+            if delay.max_steps > MAX_DELAY_STEPS:
+                raise SpecError(
+                    f"synapse population {name!r}: "
+                    f"{type(delay).__name__} max delay {delay.max_steps} "
+                    f"exceeds the dendritic ring capacity "
+                    f"MAX_DELAY_STEPS={MAX_DELAY_STEPS}")
+            if representation == "dense":
+                raise SpecError(
+                    f"synapse population {name!r}: representation='dense' "
+                    "is incompatible with per-synapse delays (the dense "
+                    "mirror has no delay slot); use 'sparse' or 'auto'")
+        if delay_ms is not None:
+            if not isinstance(delay_ms, (int, float)) or delay_ms < 0:
+                raise SpecError(
+                    f"synapse population {name!r}: delay_ms must be a "
+                    f"non-negative number, got {delay_ms!r}")
         if spec.psm.needs_v:
             for p in post_t:
                 if "V" not in self.populations[p].model.state:
@@ -236,7 +307,9 @@ class ModelSpec:
         `repro.sparse.device_init` — jit-compiled, O(nnz) memory,
         counter-based (per-row key-split) so the graph is seed-deterministic
         and independent of device count.  Weights must be dual-backend
-        snippets (UniformWeight / NormalWeight / ConstantWeight) or scalars.
+        snippets (UniformWeight / NormalWeight / ConstantWeight) or scalars;
+        per-synapse delays are DelaySnippets (dual-backend already) and
+        generate on device through the same per-row key schedule.
 
         mesh: a 1-D jax.sharding mesh (see launch.mesh.make_snn_mesh) —
         populations are partitioned along the neuron axis and `run` /
@@ -261,12 +334,36 @@ class ModelSpec:
             n_post_total = int(sum(sizes))
             where = (f"synapse population {sp.name!r} "
                      f"({sp.pre} -> {'+'.join(sp.post)})")
+
+            # delay_ms -> steps, now that dt is known (dt-consistency: a
+            # delay that is not an integer number of simulation steps
+            # cannot be represented by the ring and would silently round)
+            delay_steps = sp.delay_steps
+            if sp.delay_ms is not None:
+                steps_f = sp.delay_ms / dt
+                steps = int(round(steps_f))
+                if abs(steps_f - steps) > 1e-6:
+                    raise SpecError(
+                        f"{where}: delay_ms={sp.delay_ms} is not an "
+                        f"integer multiple of dt={dt} "
+                        f"({steps_f:.6g} steps); dendritic delays are "
+                        "ring-buffered in whole dt steps")
+                if steps > MAX_DELAY_STEPS:
+                    raise SpecError(
+                        f"{where}: delay_ms={sp.delay_ms} is {steps} steps "
+                        f"at dt={dt}, exceeding the dendritic ring "
+                        f"capacity MAX_DELAY_STEPS={MAX_DELAY_STEPS}")
+                delay_steps = steps
+
             if init == "device":
                 from repro.sparse import device_init as DI
                 try:
                     post_ind, g, valid = DI.device_resolve(
                         sp.connect, jax.random.fold_in(base_key, sidx),
                         n_pre, n_post_total, sp.weight)
+                    dd = (None if sp.delay is None else DI.device_delays(
+                        jax.random.fold_in(base_key, sidx), n_pre,
+                        post_ind.shape[1], sp.delay))
                 except (ValueError, TypeError, NotImplementedError) as e:
                     # TypeError here is our own declaration check (numpy
                     # weight callables can't be traced), not a user bug
@@ -277,24 +374,39 @@ class ModelSpec:
                         rng, n_pre, n_post_total, _as_weight_fn(sp.weight))
                 except ValueError as e:
                     raise SpecError(f"{where}: {e}") from None
+                # delays draw from the same rng *after* connectivity and
+                # weights, so delay-free specs reproduce their pre-delay
+                # graphs bit for bit
+                dd = (None if sp.delay is None
+                      else sp.delay(rng, post_ind.shape))
 
             xp = jnp if init == "device" else np
+            # zero delay draws in invalid slots (the ELLSynapses contract:
+            # invalid slots -> 0), so a ring bound inferred from the slot
+            # array never sizes off invalid-slot noise
+            if dd is not None:
+                dd = xp.where(valid, dd, 0).astype(xp.int32)
             lo = 0
             for pname, n_p, gname in zip(sp.post, sizes, sp.group_names()):
                 hi = lo + n_p
                 if len(sp.post) == 1:
-                    idx, gg, vv = post_ind, g, valid
+                    idx, gg, vv, dv = post_ind, g, valid, dd
                 else:
                     mask = (post_ind >= lo) & (post_ind < hi) & valid
                     idx = xp.where(mask, post_ind - lo, 0).astype(xp.int32)
                     gg = xp.where(mask, g, 0.0).astype(xp.float32)
                     vv = mask
+                    dv = (None if dd is None
+                          else xp.where(mask, dd, 0).astype(xp.int32))
                 group = SynapseGroup(
                     name=gname, pre=sp.pre, post=pname,
-                    ell=F.triple_to_ell(idx, gg, vv, n_p),
+                    ell=F.triple_to_ell(idx, gg, vv, n_p, delay=dv),
                     representation=sp.representation,
                     wum=sp.wum, psm=sp.psm,
-                    delay_steps=sp.delay_steps, sign=sp.sign)
+                    delay_steps=delay_steps,
+                    max_delay=(None if sp.delay is None
+                               else sp.delay.max_steps),
+                    sign=sp.sign)
                 net.add_synapse(group)
                 lo = hi
 

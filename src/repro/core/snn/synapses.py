@@ -17,6 +17,13 @@ jit pipeline as neuron models (repro.core.codegen).  The built-ins `Pulse`,
 `gscale` is the paper's synaptic-conductance scaling factor — the quantity
 the whole scalability study is about.  It multiplies the stored conductances
 at propagation time so a single network build can be swept over gscale.
+
+Dendritic delays (GeNN's per-synapse delay model): every group may carry an
+integer delay per synapse (``ELLSynapses.delay``) or a homogeneous
+``delay_steps``; both land weighted currents in a post-side ring
+``[max_delay+1, n_post]`` (``SynapseState.dendritic``) read at the cursor —
+post-sized state that shards along the post axis, replacing the old
+replicated pre-side spike ring.
 """
 
 from __future__ import annotations
@@ -121,14 +128,22 @@ def STDP(lr: float = 0.005, tau_pre: float = 20.0, tau_post: float = 20.0,
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class SynapseState:
-    """Per-group dynamic state (pytree)."""
+    """Per-group dynamic state (pytree).
+
+    ``dendritic`` is the post-side dendritic-delay ring
+    [max_delay+1, n_post]: arriving weighted currents are scatter-added
+    ``delay`` slots ahead of the cursor and delivered when the cursor
+    reaches them.  It replaces the old pre-side spike ring
+    ([delay+1, n_pre]) — post-sized state shards along the post/neuron
+    axis, so no per-group buffer is replicated across devices.
+    """
 
     psm: Dict[str, jax.Array]          # postsynaptic model state   [n_post]
     wu_pre: Dict[str, jax.Array]       # presynaptic trace vars     [n_pre]
     wu_post: Dict[str, jax.Array]      # postsynaptic trace vars    [n_post]
     g: Optional[jax.Array]             # dynamic weights (plastic groups)
     syn: Dict[str, jax.Array]          # extra per-synapse vars [n_pre, K]
-    spike_buffer: Optional[jax.Array]  # delay ring [delay+1, n_pre]
+    dendritic: Optional[jax.Array]     # delay ring [max_delay+1, n_post]
     cursor: Optional[jax.Array]        # ring cursor, int32 scalar
 
     @property
@@ -138,7 +153,7 @@ class SynapseState:
 
     def tree_flatten(self):
         return (self.psm, self.wu_pre, self.wu_post, self.g, self.syn,
-                self.spike_buffer, self.cursor), ()
+                self.dendritic, self.cursor), ()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -155,7 +170,8 @@ class SynapseGroup:
     representation: str = "auto"            # 'auto' | 'sparse' | 'dense'
     wum: Optional[WeightUpdateModel] = None  # default StaticPulse()
     psm: Optional[PostsynapticModel] = None  # default from legacy `dynamics`
-    delay_steps: int = 0
+    delay_steps: int = 0                    # homogeneous dendritic delay
+    max_delay: Optional[int] = None         # static ring bound for ell.delay
     sign: float = 1.0                       # +1 excitatory / -1 inhibitory
     # legacy shorthand (pre-ModelSpec API); translated to a PostsynapticModel
     # in __post_init__ and kept for introspection.
@@ -178,6 +194,47 @@ class SynapseGroup:
         self.dynamics = self.psm.name
         if self.wum is None:
             self.wum = StaticPulse()
+
+        # --- dendritic delays ------------------------------------------
+        # delay_steps=k (homogeneous) and ell.delay (per-synapse slot) both
+        # lower onto the same post-side dendritic ring; the homogeneous case
+        # keeps the single full-matrix spmv per step (one ring slot written).
+        if not isinstance(self.delay_steps, int) or self.delay_steps < 0:
+            raise ValueError(
+                f"{self.name}: delay_steps must be a non-negative int, got "
+                f"{self.delay_steps!r}")
+        if self.ell.delay is not None:
+            if self.delay_steps:
+                raise ValueError(
+                    f"{self.name}: delay_steps={self.delay_steps} and a "
+                    "per-synapse delay slot are mutually exclusive; declare "
+                    "one of them")
+            if tuple(self.ell.delay.shape) != tuple(self.ell.g.shape):
+                raise ValueError(
+                    f"{self.name}: delay slot shape "
+                    f"{tuple(self.ell.delay.shape)} != synapse shape "
+                    f"{tuple(self.ell.g.shape)}")
+            if self.representation == "dense":
+                raise ValueError(
+                    f"synapse group {self.name!r}: representation='dense' "
+                    "is incompatible with per-synapse delays (the dense "
+                    "mirror has no delay slot; currents route through the "
+                    "ELL path); use 'sparse' or 'auto'")
+            self.representation = "sparse"
+            dvals = np.asarray(jax.device_get(self.ell.delay))
+            dmax = int(dvals.max()) if dvals.size else 0
+            if dvals.size and int(dvals.min()) < 0:
+                raise ValueError(
+                    f"{self.name}: negative per-synapse delay "
+                    f"{int(dvals.min())}")
+            if self.max_delay is None:
+                self.max_delay = dmax
+            elif dmax > self.max_delay:
+                raise ValueError(
+                    f"{self.name}: per-synapse delay {dmax} exceeds the "
+                    f"declared ring bound max_delay={self.max_delay}")
+        else:
+            self.max_delay = self.delay_steps
 
         # Any non-default weight-update model propagates through the ELL
         # effective-weight path (plastic g lives in state; custom spike_code
@@ -208,6 +265,16 @@ class SynapseGroup:
         """True when learn_code rewrites g during simulation."""
         return bool(self.wum.learn_code)
 
+    @property
+    def needs_ring(self) -> bool:
+        """True when this group carries a dendritic-delay ring (homogeneous
+        delay_steps > 0 or a per-synapse delay slot, even an all-zero one)."""
+        return self.max_delay > 0 or self.ell.delay is not None
+
+    @property
+    def ring_slots(self) -> int:
+        return self.max_delay + 1
+
     # -- state ------------------------------------------------------------
     def init_state(self) -> SynapseState:
         n_pre, n_post = self.ell.n_pre, self.ell.n_post
@@ -220,42 +287,55 @@ class SynapseGroup:
         syn = {k: jnp.full((n_pre, self.ell.max_conn), v, jnp.float32)
                for k, v in self.wum.syn_state.items()}
         g = jnp.asarray(self.ell.g) if self.plastic else None
-        if self.delay_steps > 0:
-            buf = jnp.zeros((self.delay_steps + 1, self.ell.n_pre),
-                            jnp.float32)
+        if self.needs_ring:
+            buf = jnp.zeros((self.ring_slots, n_post), jnp.float32)
             cur = jnp.zeros((), jnp.int32)
         else:
             buf, cur = None, None
         return SynapseState(psm=psm, wu_pre=wu_pre, wu_post=wu_post, g=g,
-                            syn=syn, spike_buffer=buf, cursor=cur)
+                            syn=syn, dendritic=buf, cursor=cur)
 
     # -- propagation -------------------------------------------------------
     def _raw_current(self, spikes: jax.Array, gscale: jax.Array,
                      g: Optional[jax.Array], syn: Dict[str, jax.Array],
                      externals: Dict[str, jax.Array],
                      ell: Optional[F.ELLSynapses] = None,
-                     dense: Optional[jax.Array] = None) -> jax.Array:
+                     dense: Optional[jax.Array] = None,
+                     delay_val: Optional[int] = None) -> jax.Array:
         """sum_i spike_i * w_eff_ij * gscale for this step's arriving spikes.
 
         `ell`/`dense` override the stored representation — the sharded
         engine passes each device's post-shard of the connectivity while
-        reusing this group's compiled dynamics unchanged."""
+        reusing this group's compiled dynamics unchanged.
+
+        `delay_val=d` restricts the accumulation to the synapses whose
+        per-synapse dendritic delay equals d (masking via the ELL valid
+        mask, so slot order — and therefore scatter order and bits — is
+        identical to the unmasked call; for a constant delay array the
+        d==constant pass IS the unmasked call, bit for bit)."""
         ell = self.ell if ell is None else ell
         dense = self.dense if dense is None else dense
         spk = jnp.asarray(spikes, jnp.float32)
+        valid = ell.valid
+        if delay_val is not None:
+            valid = valid & (ell.delay == delay_val)
         if self.wum.is_static_pulse and g is None:
             # static weights: use the prebuilt representation unmodified
             if self.representation == "dense":
                 out = sparse_ops.accumulate_dense(dense, spk)
-            else:
+            elif valid is ell.valid:
                 out = kops.ell_spmv(ell, spk)
+            else:
+                eff = F.ELLSynapses(g=ell.g, post_ind=ell.post_ind,
+                                    valid=valid, n_post=ell.n_post)
+                out = kops.ell_spmv(eff, spk)
         else:
             g_cur = ell.g if g is None else g
             w_eff = self._wu.effective_weight(g_cur, syn, self.wum.params,
                                               externals)
-            w_eff = jnp.where(ell.valid, w_eff, 0.0)
+            w_eff = jnp.where(valid, w_eff, 0.0)
             eff = F.ELLSynapses(g=w_eff, post_ind=ell.post_ind,
-                                valid=ell.valid, n_post=ell.n_post)
+                                valid=valid, n_post=ell.n_post)
             out = kops.ell_spmv(eff, spk)
         return self.sign * gscale * out
 
@@ -270,26 +350,59 @@ class SynapseGroup:
         """Advance one step; returns (new_state, current into post neurons).
 
         `ell`/`dense` override the stored connectivity (sharded engine path);
-        all shapes on the post side then follow the override."""
-        if self.delay_steps > 0:
-            buf = state.spike_buffer.at[state.cursor].set(
-                jnp.asarray(spikes, jnp.float32))
-            read = (state.cursor + 1) % (self.delay_steps + 1)
-            arriving = buf[read]
-            new_buf, new_cur = buf, read
-        else:
-            arriving = spikes
-            new_buf, new_cur = state.spike_buffer, state.cursor
+        all shapes on the post side then follow the override.
 
+        Dendritic delays: each synapse's weighted contribution is scatter-
+        added into the post-side ring ``delay`` slots ahead of the cursor
+        and delivered when the cursor reaches it.  The homogeneous
+        ``delay_steps=k`` case writes one ring slot with the same single
+        full-matrix accumulation as the delay-free path; heterogeneous
+        per-synapse delays make one masked accumulation per distinct delay
+        value (max_delay+1 passes, each reusing the same spmv kernel).
+        Weights (and gscale) are applied at *spike* time, GeNN's dendritic-
+        delay semantics — for plastic groups this reads g as of emission,
+        not delivery (the migration note in docs/API.md spells this out).
+        """
         lell = self.ell if ell is None else ell
         # dt/t are always present in the snippet environments: any model
         # code referencing them must work even when a legacy caller omits t
         wu_ext = {"dt": dt, "t": t if t is not None else jnp.float32(0.0)}
-        inj = self._raw_current(arriving, gscale, state.g, state.syn, wu_ext,
-                                ell=ell, dense=dense)
+        # the per-synapse delay slot is readable from spike_code/learn_code;
+        # homogeneous groups see their scalar delay_steps (keeping
+        # ConstantDelay(k) == delay_steps=k for delay-reading snippets) and
+        # delay-free groups see 0.0, so snippets stay portable
+        wu_ext["delay"] = (lell.delay.astype(jnp.float32)
+                           if lell.delay is not None
+                           else jnp.float32(self.delay_steps))
+
+        if not self.needs_ring:
+            inj = self._raw_current(spikes, gscale, state.g, state.syn,
+                                    wu_ext, ell=ell, dense=dense)
+            new_buf, new_cur = state.dendritic, state.cursor
+        else:
+            S = self.ring_slots
+            cur = state.cursor
+            ring = state.dendritic
+            if lell.delay is None:
+                # homogeneous: one full accumulation, one slot written
+                contrib = self._raw_current(spikes, gscale, state.g,
+                                            state.syn, wu_ext, ell=ell,
+                                            dense=dense)
+                ring = ring.at[(cur + self.delay_steps) % S].add(contrib)
+            else:
+                for d in range(S):
+                    contrib = self._raw_current(spikes, gscale, state.g,
+                                                state.syn, wu_ext, ell=ell,
+                                                dense=dense, delay_val=d)
+                    ring = ring.at[(cur + d) % S].add(contrib)
+            inj = ring[cur]
+            new_buf = ring.at[cur].set(0.0)
+            new_cur = (cur + 1) % S
 
         # -- learning (generated weight-update code) -----------------------
-        pre_spk = jnp.asarray(arriving, jnp.float32)
+        # pre traces and learning fire at spike (emission) time — the
+        # dendritic delay buffers the *current*, not the spike event
+        pre_spk = jnp.asarray(spikes, jnp.float32)
         post_spk = (jnp.asarray(post_spikes, jnp.float32)
                     if post_spikes is not None
                     else jnp.zeros((lell.n_post,), jnp.float32))
@@ -327,7 +440,7 @@ class SynapseGroup:
 
         new_state = SynapseState(psm=new_psm, wu_pre=new_pre,
                                  wu_post=new_post, g=new_g, syn=new_syn,
-                                 spike_buffer=new_buf, cursor=new_cur)
+                                 dendritic=new_buf, cursor=new_cur)
         return new_state, current
 
     # -- memory accounting (paper eqs 1/2) ----------------------------------
@@ -340,6 +453,9 @@ class SynapseGroup:
                 nnz, self.ell.n_pre, self.ell.n_post),
             "dense_elements": F.dense_memory_elements(
                 self.ell.n_pre, self.ell.n_post),
+            "max_delay": self.max_delay,
+            "dendritic_ring_elements": (
+                self.ring_slots * self.ell.n_post if self.needs_ring else 0),
         }
 
 

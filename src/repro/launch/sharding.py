@@ -179,13 +179,16 @@ def pad_neuron_axis(x, n_pad: int, axis: int = 0):
 
 
 def snn_shardings(mesh, axis: str):
-    """The three placements SNN engine state uses: per-neuron arrays split on
-    `axis`, replicated scalars/full-pre vectors, and [D, n_pre, K] per-shard
-    connectivity blocks split on their leading device dim."""
+    """The placements SNN engine state uses: per-neuron arrays split on
+    `axis`, replicated scalars/full-pre vectors, [D, n_pre, K] per-shard
+    connectivity blocks split on their leading device dim, and
+    [max_delay+1, n_post] dendritic-delay rings split on their post
+    (trailing) dim — each device holds only its own post shard's ring."""
     return {
         "neuron": NamedSharding(mesh, P(axis)),
         "replicated": NamedSharding(mesh, P()),
         "block": NamedSharding(mesh, P(axis, None, None)),
+        "ring": NamedSharding(mesh, P(None, axis)),
     }
 
 

@@ -5,8 +5,9 @@ sequences and KV caches, the device-resident resource is *simulation state*.
 An SNNServer owns one compiled spiking network (host Simulator or sharded
 ShardedEngine build — same code path) whose state carries a leading
 **stream axis** of `max_streams` preallocated slots: each slot is an
-independent simulation with its own neuron/synapse/delay/STDP state and
-PRNG key, all resident on device between requests.
+independent simulation with its own neuron/synapse/STDP state, dendritic-
+delay rings (post-sharded `[max_delay+1, n_post_local]` on engine builds)
+and PRNG key, all resident on device between requests.
 
 Clients submit stimulus streams (per-population injected-current arrays,
 one row per dt step).  The slot scheduler (launch/scheduling.py, shared

@@ -47,7 +47,7 @@ from repro.sparse import formats as F
 __all__ = [
     "device_resolve", "device_fixed_fanout", "device_fixed_probability",
     "device_one_to_one", "device_dense", "partition_ell_by_post",
-    "as_device_weight",
+    "as_device_weight", "as_device_delay", "device_delays",
 ]
 
 _JTriple = Tuple[jax.Array, jax.Array, jax.Array]  # post_ind, g, valid
@@ -79,6 +79,23 @@ def as_device_weight(weight) -> F.WeightSnippet:
         "declare the weight as a WeightSnippet or build with init='host'")
 
 
+def as_device_delay(delay) -> F.DelaySnippet:
+    """Normalize a delay declaration to a device-capable snippet.
+
+    Ints -> ConstantDelay(x); DelaySnippet passes through.  Raw numpy
+    callables cannot be traced under jit — raise with the fix spelled out.
+    """
+    if isinstance(delay, F.DelaySnippet):
+        return delay
+    if isinstance(delay, int) and not isinstance(delay, bool):
+        return F.ConstantDelay(delay)
+    raise TypeError(
+        f"device-side construction needs a dual-backend delay initializer "
+        f"(ConstantDelay / UniformIntDelay, or an int), got {delay!r}; "
+        "host-only numpy callables cannot run under jit — declare the delay "
+        "as a DelaySnippet or build with init='host'")
+
+
 def _row_keys(key: jax.Array, rows: jax.Array) -> jax.Array:
     return jax.vmap(lambda r: jax.random.fold_in(key, r))(rows)
 
@@ -88,6 +105,20 @@ def _row_weights(weight: F.WeightSnippet, key: jax.Array, rows: jax.Array,
     """Per-row keyed weight draws: w[r] depends only on (seed, global row)."""
     wkey = jax.random.fold_in(key, 0x5EED)
     return jax.vmap(lambda rk: weight.device(rk, (k,)))(_row_keys(wkey, rows))
+
+
+def device_delays(key: jax.Array, n_pre: int, k: int, delay,
+                  rows: Optional[jax.Array] = None) -> jax.Array:
+    """[len(rows), k] int32 per-synapse dendritic delays, generated on
+    device with the same counter-based key schedule as connectivity and
+    weights: row r draws from fold_in(fold_in(key, 0xDE1A), r), a pure
+    function of (seed, global row) — so the delay matrix is seed-
+    deterministic and independent of device count or row chunking."""
+    snip = as_device_delay(delay)
+    rows = _rows_or_default(rows, n_pre)
+    dkey = jax.random.fold_in(key, 0xDE1A)
+    return jax.vmap(lambda rk: snip.device(rk, (k,)))(
+        _row_keys(dkey, rows)).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -254,16 +285,19 @@ def device_resolve(connect: F.ConnectivityInit, key: jax.Array, n_pre: int,
 
 def partition_ell_by_post(
     ell: F.ELLSynapses, n_shards: int,
-) -> Tuple[jax.Array, jax.Array, jax.Array, int, int]:
+) -> Tuple[jax.Array, jax.Array, jax.Array, Optional[jax.Array], int, int]:
     """Split an ELL column-wise into `n_shards` post-neuron shards.
 
-    Returns (g, post_local, valid, shard_size, k_local) with the first three
-    shaped [n_shards, n_pre, k_local]: shard d holds, for every pre row, the
-    slots whose post neuron lives in [d*shard_size, (d+1)*shard_size),
-    compacted left and re-indexed to shard-local post ids.  The within-row
-    slot order is preserved (stable sort), so per-post-neuron scatter
-    accumulation order — and hence bit-exact currents — matches the global
-    ELL.  Total memory across shards ~= nnz (k_local ~= K / n_shards).
+    Returns (g, post_local, valid, delay_local, shard_size, k_local) with
+    the array outputs shaped [n_shards, n_pre, k_local]: shard d holds, for
+    every pre row, the slots whose post neuron lives in
+    [d*shard_size, (d+1)*shard_size), compacted left and re-indexed to
+    shard-local post ids.  The within-row slot order is preserved (stable
+    sort), so per-post-neuron scatter accumulation order — and hence
+    bit-exact currents — matches the global ELL.  The per-synapse dendritic
+    delay slot (when present) rides along through the identical permutation;
+    delay_local is None for delay-free ELLs.  Total memory across shards
+    ~= nnz (k_local ~= K / n_shards).
     """
     n_pre, k = ell.g.shape
     n_post = ell.n_post
@@ -274,6 +308,8 @@ def partition_ell_by_post(
     post_s = jnp.take_along_axis(ell.post_ind, order, axis=1)
     g_s = jnp.take_along_axis(jnp.where(ell.valid, ell.g, 0.0), order,
                               axis=1)
+    delay_s = (None if ell.delay is None else jnp.take_along_axis(
+        jnp.where(ell.valid, ell.delay, 0), order, axis=1))
     # per-row per-shard slot counts from the sorted shard ids via
     # searchsorted boundaries: O(n_pre * D log K), never an [n_pre, K, D]
     # one-hot temporary (which would be O(nnz * D) — the very blowup this
@@ -298,4 +334,7 @@ def partition_ell_by_post(
         (post_s - d_idx * shard_size).astype(jnp.int32), mode="drop")
     valid_out = jnp.zeros(shape, bool).at[d_idx, row, slot].set(
         shard_s < n_shards, mode="drop")
-    return g_out, post_out, valid_out, shard_size, k_local
+    delay_out = (None if delay_s is None
+                 else jnp.zeros(shape, jnp.int32).at[d_idx, row, slot].set(
+                     delay_s.astype(jnp.int32), mode="drop"))
+    return g_out, post_out, valid_out, delay_out, shard_size, k_local

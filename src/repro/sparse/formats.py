@@ -14,7 +14,7 @@ All containers are registered pytrees so they flow through jit/scan/vmap.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,7 @@ __all__ = [
     "ConnectivityInit", "FixedFanout", "FixedProbability", "OneToOne",
     "DenseInit", "triple_to_ell",
     "WeightSnippet", "ConstantWeight", "UniformWeight", "NormalWeight",
+    "DelaySnippet", "ConstantDelay", "UniformIntDelay",
 ]
 
 
@@ -75,12 +76,16 @@ class ELLSynapses:
     g:        conductances                      [nPre, max_conn]
     post_ind: post indices (invalid slots -> 0) [nPre, max_conn]
     valid:    slot mask                         [nPre, max_conn]
+    delay:    per-synapse dendritic delay in dt steps (int32, invalid
+              slots -> 0), or None for delay-free / homogeneous groups
+              (GeNN's dendritic-delay model)  [nPre, max_conn]
     """
 
     g: jax.Array
     post_ind: jax.Array
     valid: jax.Array
     n_post: int
+    delay: Optional[jax.Array] = None
 
     @property
     def n_pre(self) -> int:
@@ -91,11 +96,13 @@ class ELLSynapses:
         return self.g.shape[1]
 
     def tree_flatten(self):
-        return (self.g, self.post_ind, self.valid), (self.n_post,)
+        return (self.g, self.post_ind, self.valid, self.delay), (self.n_post,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, n_post=aux[0])
+        g, post_ind, valid, delay = children
+        return cls(g=g, post_ind=post_ind, valid=valid, n_post=aux[0],
+                   delay=delay)
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +260,85 @@ class NormalWeight(WeightSnippet):
                                                         jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# Backend-dual per-synapse delay initializers (GeNN's dendritic-delay model:
+# each synapse carries an integer delay in dt steps; the spike's weighted
+# current lands in the post neuron's dendritic ring `delay` slots ahead).
+# Same dual protocol as WeightSnippet: host `__call__(rng, shape)` and jax
+# `device(key, shape)`, so one declaration resolves on either backend.
+# `max_steps` is the *static* ring-sizing bound — known at declaration time
+# so graphs never need a device round-trip to size their delay state.
+# ---------------------------------------------------------------------------
+
+class DelaySnippet:
+    """Base class for dual-backend per-synapse delay initializers (steps)."""
+
+    @property
+    def max_steps(self) -> int:
+        """Largest delay this snippet can emit (sizes the dendritic ring)."""
+        raise NotImplementedError
+
+    def __call__(self, rng: np.random.Generator, shape) -> np.ndarray:
+        raise NotImplementedError
+
+    def device(self, key: jax.Array, shape) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantDelay(DelaySnippet):
+    """Every synapse delays its current by the same number of dt steps.
+
+    Semantically identical to the homogeneous ``delay_steps`` shorthand, but
+    materialized as a per-synapse slot — the bit-exactness bridge between the
+    homogeneous fast path and heterogeneous delay initializers.
+    """
+
+    steps: int = 0
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.steps, int) or self.steps < 0:
+            raise ValueError(
+                f"ConstantDelay steps must be a non-negative int, got "
+                f"{self.steps!r}")
+
+    @property
+    def max_steps(self) -> int:
+        return self.steps
+
+    def __call__(self, rng, shape) -> np.ndarray:
+        return np.full(shape, self.steps, np.int32)
+
+    def device(self, key, shape) -> jax.Array:
+        return jnp.full(shape, self.steps, jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformIntDelay(DelaySnippet):
+    """Per-synapse delay drawn uniformly from {lo, ..., hi} (inclusive)."""
+
+    lo: int = 0
+    hi: int = 0
+
+    def __post_init__(self) -> None:
+        if (not isinstance(self.lo, int) or not isinstance(self.hi, int)
+                or self.lo < 0 or self.hi < self.lo):
+            raise ValueError(
+                f"UniformIntDelay requires 0 <= lo <= hi (ints), got "
+                f"lo={self.lo!r} hi={self.hi!r}")
+
+    @property
+    def max_steps(self) -> int:
+        return self.hi
+
+    def __call__(self, rng, shape) -> np.ndarray:
+        return rng.integers(self.lo, self.hi + 1, size=shape).astype(np.int32)
+
+    def device(self, key, shape) -> jax.Array:
+        return jax.random.randint(key, shape, self.lo, self.hi + 1,
+                                  jnp.int32)
+
+
 def _weights(rng: np.random.Generator, shape, weight_fn) -> np.ndarray:
     if weight_fn is None:
         return np.ones(shape, np.float32)
@@ -340,12 +426,15 @@ class DenseInit(ConnectivityInit):
 
 
 def triple_to_ell(post_ind: np.ndarray, g: np.ndarray, valid: np.ndarray,
-                  n_post: int) -> ELLSynapses:
-    """Device-side ELL container from a resolved connectivity triple."""
+                  n_post: int, delay: Optional[np.ndarray] = None,
+                  ) -> ELLSynapses:
+    """Device-side ELL container from a resolved connectivity triple
+    (plus an optional per-synapse dendritic-delay slot)."""
     return ELLSynapses(
         g=jnp.asarray(g, jnp.float32),
         post_ind=jnp.asarray(post_ind, jnp.int32),
-        valid=jnp.asarray(valid, bool), n_post=n_post)
+        valid=jnp.asarray(valid, bool), n_post=n_post,
+        delay=None if delay is None else jnp.asarray(delay, jnp.int32))
 
 
 def fixed_fanout_connectivity(

@@ -1,0 +1,441 @@
+"""Heterogeneous dendritic delays: the delay-equivalence property suite.
+
+Four property families (this PR's acceptance contract):
+  1. lowering: a constant per-synapse delay k is bit-exact against the
+     homogeneous ``delay_steps=k`` path (and ConstantDelay(0) against the
+     delay-free path) — the heterogeneous masked-accumulation code and the
+     single-spmv fast path are the same reduction;
+  2. semantics: heterogeneous delays match a pure-numpy event-queue oracle
+     (integer-valued weights, so float32 accumulation is order-free and the
+     comparison is exact);
+  3. construction: device-generated delay slots are seed-deterministic,
+     independent of row chunking, and identical across device counts;
+  4. distribution: host vs device init agree end to end, and the 1-device
+     Simulator, the N-device ShardedEngine and the serving path (partial
+     chunks) agree bit for bit — including STDP groups.
+
+Plus the declaration-time validation contract: ring-capacity and
+dt-consistency violations raise named SpecErrors.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.codegen import WeightUpdateModel
+from repro.core.snn.spec import MAX_DELAY_STEPS, ModelSpec, SpecError
+from repro.core.snn.synapses import STDP, ExpDecay, SynapseGroup
+from repro.launch.mesh import make_snn_mesh
+from repro.launch.snn_serve import SNNServer, StreamRequest
+from repro.sparse import device_init as DI
+from repro.sparse import formats as F
+
+
+def _n_dev() -> int:
+    return min(jax.device_count(), 8)
+
+
+def _drive(scale=8.0):
+    return lambda k, t, n: scale * jax.random.normal(k, (n,))
+
+
+def _two_pop_spec(delay_kw, w_hi=9.0, stdp=False):
+    """a -> b with the given delay declaration; strong weights so b spikes
+    (a silent post population would make bit-exactness checks vacuous)."""
+    s = ModelSpec("delays")
+    s.add_neuron_population("a", 32, "izhikevich", input_fn=_drive())
+    s.add_neuron_population("b", 16, "izhikevich")
+    s.add_synapse_population("ab", "a", "b", connect=F.FixedFanout(6),
+                             weight=F.UniformWeight(0, w_hi),
+                             psm=ExpDecay(4.0), **delay_kw)
+    if stdp:
+        s.add_synapse_population("aa", "a", "a", connect=F.FixedFanout(5),
+                                 weight=F.UniformWeight(0, 0.4),
+                                 wum=STDP(0.01))
+    return s
+
+
+def _assert_runs_equal(r1, r2, what=""):
+    for k in r1.spike_counts:
+        assert np.array_equal(np.asarray(r1.spike_counts[k]),
+                              np.asarray(r2.spike_counts[k])), (what, k)
+        if r1.raster is not None:
+            assert np.array_equal(np.asarray(r1.raster[k]),
+                                  np.asarray(r2.raster[k])), (what, k)
+
+
+# ---------------------------------------------------------------------------
+# 1. lowering equivalence: constant per-synapse delay == homogeneous path
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(k=st.integers(0, 5), seed=st.integers(0, 3))
+def test_constant_delay_bitexact_vs_delay_steps(k, seed):
+    r_hom = _two_pop_spec(dict(delay_steps=k)).build(
+        dt=1.0, seed=seed).run(60, record_raster=True)
+    r_het = _two_pop_spec(dict(delay=F.ConstantDelay(k))).build(
+        dt=1.0, seed=seed).run(60, record_raster=True)
+    _assert_runs_equal(r_hom, r_het, f"k={k}")
+    assert int(np.asarray(r_hom.spike_counts["b"]).sum()) > 0  # non-vacuous
+
+
+def test_constant_delay_bitexact_with_stdp_and_int_shorthand():
+    """delay=int is ConstantDelay shorthand; equivalence must also hold
+    when a plastic group shares the network (state layouts differ)."""
+    r_hom = _two_pop_spec(dict(delay_steps=3), stdp=True).build(
+        dt=1.0, seed=2).run(50, record_raster=True)
+    r_het = _two_pop_spec(dict(delay=3), stdp=True).build(
+        dt=1.0, seed=2).run(50, record_raster=True)
+    _assert_runs_equal(r_hom, r_het)
+
+
+def test_delay_ms_lowering_and_zero_delay_identity():
+    r_ms = _two_pop_spec(dict(delay_ms=2.0)).build(
+        dt=0.5, seed=1).run(60, record_raster=True)
+    r_steps = _two_pop_spec(dict(delay_steps=4)).build(
+        dt=0.5, seed=1).run(60, record_raster=True)
+    _assert_runs_equal(r_ms, r_steps, "delay_ms")
+    # ConstantDelay(0) rides the ring; the delay-free path has none — the
+    # delivered currents must still be identical
+    r_none = _two_pop_spec({}).build(dt=1.0, seed=4).run(
+        50, record_raster=True)
+    r_c0 = _two_pop_spec(dict(delay=F.ConstantDelay(0))).build(
+        dt=1.0, seed=4).run(50, record_raster=True)
+    _assert_runs_equal(r_none, r_c0, "zero-delay")
+
+
+# ---------------------------------------------------------------------------
+# 2. heterogeneous semantics vs a pure-numpy event-queue oracle
+# ---------------------------------------------------------------------------
+
+def _event_queue_oracle(post_ind, g, valid, delay, spikes_seq, n_post):
+    """Delivery schedule of the dendritic-delay model: the weighted
+    contribution of a spike arriving at step t lands on the post neuron at
+    step t + delay.  Integer weights -> exact float32 comparison."""
+    T = len(spikes_seq)
+    dmax = int(delay.max()) if delay.size else 0
+    deliver = np.zeros((T + dmax + 1, n_post), np.float64)
+    n_pre, K = post_ind.shape
+    for t, spk in enumerate(spikes_seq):
+        for i in range(n_pre):
+            if spk[i]:
+                for k in range(K):
+                    if valid[i, k]:
+                        deliver[t + delay[i, k], post_ind[i, k]] += g[i, k]
+    return deliver
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_pre=st.integers(2, 12), n_post=st.integers(2, 10),
+       dmax=st.integers(0, 6), seed=st.integers(0, 5))
+def test_heterogeneous_delays_match_event_queue_oracle(n_pre, n_post, dmax,
+                                                       seed):
+    rng = np.random.default_rng(seed)
+    K = int(rng.integers(1, n_post + 1))
+    post_ind = np.stack([rng.choice(n_post, K, replace=False)
+                         for _ in range(n_pre)]).astype(np.int32)
+    g = rng.integers(1, 8, size=(n_pre, K)).astype(np.float32)
+    valid = rng.random((n_pre, K)) < 0.8
+    delay = rng.integers(0, dmax + 1, size=(n_pre, K)).astype(np.int32)
+    T = 14
+    spikes_seq = (rng.random((T, n_pre)) < 0.4)
+
+    grp = SynapseGroup(name="g", pre="a", post="b",
+                       ell=F.triple_to_ell(post_ind, np.where(valid, g, 0),
+                                           valid, n_post, delay=delay))
+    oracle = _event_queue_oracle(post_ind, g, valid, delay, spikes_seq,
+                                 n_post)
+    st_ = grp.init_state()
+    step = jax.jit(lambda s, spk: grp.step(s, spk, jnp.float32(1.0), 1.0))
+    for t in range(T):
+        st_, cur = step(st_, jnp.asarray(spikes_seq[t]))
+        # Pulse psm: the delivered current IS the ring slot
+        assert np.array_equal(np.asarray(cur), oracle[t].astype(np.float32)), t
+
+
+def test_delayed_currents_not_delivered_early():
+    """No contribution may leak out before its delay elapses (the classic
+    off-by-one a ring cursor invites)."""
+    post = np.zeros((1, 1), np.int32)
+    grp = SynapseGroup(name="g", pre="a", post="b",
+                       ell=F.triple_to_ell(post, np.ones((1, 1)),
+                                           np.ones((1, 1), bool), 1,
+                                           delay=np.full((1, 1), 3,
+                                                         np.int32)))
+    st_ = grp.init_state()
+    outs = []
+    for t in range(6):
+        spk = jnp.asarray([t == 0])          # single spike at t=0
+        st_, cur = grp.step(st_, spk, jnp.float32(1.0), 1.0)
+        outs.append(float(cur[0]))
+    assert outs == [0.0, 0.0, 0.0, 1.0, 0.0, 0.0]
+
+
+# ---------------------------------------------------------------------------
+# 3. construction: device-side delay generation
+# ---------------------------------------------------------------------------
+
+def test_device_delays_deterministic_and_chunking_invariant():
+    key = jax.random.PRNGKey(3)
+    snip = F.UniformIntDelay(1, 7)
+    full = DI.device_delays(key, 24, 5, snip)
+    again = DI.device_delays(key, 24, 5, snip)
+    assert np.array_equal(np.asarray(full), np.asarray(again))
+    d = np.asarray(full)
+    assert full.dtype == jnp.int32 and d.min() >= 1 and d.max() <= 7
+    # row chunking must not change any row's draws (device-count freedom)
+    parts = [DI.device_delays(key, 24, 5, snip,
+                              rows=jnp.arange(lo, hi, dtype=jnp.int32))
+             for lo, hi in [(0, 9), (9, 24)]]
+    assert np.array_equal(np.concatenate([np.asarray(p) for p in parts]), d)
+
+
+def test_as_device_delay_rejects_host_callables():
+    with pytest.raises(TypeError, match="DelaySnippet"):
+        DI.as_device_delay(lambda rng, shape: np.zeros(shape, np.int32))
+    assert DI.as_device_delay(4) == F.ConstantDelay(4)
+
+
+def test_host_and_device_delay_snippets_in_range():
+    rng = np.random.default_rng(0)
+    h = F.UniformIntDelay(2, 5)(rng, (40, 6))
+    assert h.dtype == np.int32 and h.min() >= 2 and h.max() <= 5
+    c = F.ConstantDelay(3)(rng, (4, 2))
+    assert (c == 3).all()
+
+
+# ---------------------------------------------------------------------------
+# 4. end-to-end agreement: host/device init, 1 vs N devices, serving
+# ---------------------------------------------------------------------------
+
+def _het_spec(stdp=True):
+    s = ModelSpec("het")
+    s.add_neuron_population("a", 40, "izhikevich", input_fn=_drive())
+    s.add_neuron_population("b", 16, "izhikevich")
+    s.add_synapse_population("ab", "a", "b", connect=F.FixedFanout(6),
+                             weight=F.UniformWeight(0, 9.0),
+                             psm=ExpDecay(4.0),
+                             delay=F.UniformIntDelay(0, 4))
+    if stdp:
+        s.add_synapse_population("aa", "a", "a", connect=F.FixedFanout(5),
+                                 weight=F.UniformWeight(0, 0.4),
+                                 wum=STDP(0.01))
+    return s
+
+
+@pytest.mark.parametrize("init", ["host", "device"])
+def test_engine_matches_simulator_with_het_delays(init):
+    r1 = _het_spec().build(dt=1.0, seed=11, init=init).run(
+        40, record_raster=True)
+    r2 = _het_spec().build(dt=1.0, seed=11, init=init,
+                           mesh=make_snn_mesh(_n_dev())).run(
+        40, record_raster=True)
+    _assert_runs_equal(r1, r2, init)
+    assert int(np.asarray(r1.spike_counts["b"]).sum()) > 0
+
+
+def test_device_init_delay_graph_is_device_count_free():
+    g1 = _het_spec(stdp=False).build(dt=1.0, seed=3,
+                                     init="device").network.synapses[0]
+    g2 = _het_spec(stdp=False).build(
+        dt=1.0, seed=3, init="device",
+        mesh=make_snn_mesh(_n_dev())).network.synapses[0]
+    assert np.array_equal(np.asarray(g1.ell.delay), np.asarray(g2.ell.delay))
+    assert np.array_equal(np.asarray(g1.ell.post_ind),
+                          np.asarray(g2.ell.post_ind))
+
+
+@pytest.mark.parametrize("mesh_devs", [0, -1])  # 0: host build, -1: sharded
+def test_served_streams_with_delays_partial_chunks(mesh_devs):
+    """Partial chunks (chunk does not divide stream lengths) over a model
+    with heterogeneous delays + STDP: served output bit-exact vs offline."""
+    mesh = make_snn_mesh(_n_dev()) if mesh_devs else None
+    model = _het_spec().build(dt=1.0, seed=7, mesh=mesh)
+    srv = SNNServer(model, max_streams=2, chunk=5, stim_pops=("a",),
+                    record_raster=True)
+    rng = np.random.default_rng(0)
+    for i, T in enumerate([12, 9, 11]):       # none divisible by chunk=5
+        stim = {"a": (2.0 * rng.normal(size=(T, 40))).astype(np.float32)}
+        srv.submit(StreamRequest(rid=i, n_steps=T, stim=stim, seed=100 + i))
+    finished = srv.run()
+    assert len(finished) == 3
+    for r in finished:
+        res = model.run(r.n_steps, stim=r.stim, record_raster=True,
+                        state=model.init_state(jax.random.PRNGKey(r.seed)))
+        for k, v in res.spike_counts.items():
+            assert np.array_equal(np.asarray(v), r.spike_counts[k]), (
+                r.rid, k)
+            assert np.array_equal(np.asarray(res.raster[k]), r.raster[k]), (
+                r.rid, k)
+
+
+def test_dense_representation_homogeneous_delay_engine_exact():
+    """delay_steps composes with the dense matmul path (the ring buffers
+    post-sized currents, so the representation is orthogonal); the engine
+    must stay bit-exact for it too."""
+    def mk():
+        s = ModelSpec("dense_delay")
+        s.add_neuron_population("a", 24, "izhikevich", input_fn=_drive())
+        s.add_neuron_population("b", 12, "izhikevich")
+        s.add_synapse_population("ab", "a", "b", connect=F.DenseInit(),
+                                 weight=F.UniformWeight(0, 3.0),
+                                 psm=ExpDecay(4.0),
+                                 representation="dense", delay_steps=2)
+        return s
+    r1 = mk().build(dt=1.0, seed=2).run(40, record_raster=True)
+    r2 = mk().build(dt=1.0, seed=2, mesh=make_snn_mesh(_n_dev())).run(
+        40, record_raster=True)
+    _assert_runs_equal(r1, r2, "dense+delay")
+    assert int(np.asarray(r1.spike_counts["b"]).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# codegen: weight-update snippets can address the delay slot
+# ---------------------------------------------------------------------------
+
+def test_spike_code_reads_delay_slot():
+    """A distance-attenuating weight-update model: contribution decays with
+    the synapse's dendritic delay."""
+    wum = WeightUpdateModel(name="atten", params={"lam": 2.0},
+                            spike_code="g * exp(-delay / lam)")
+    post = np.zeros((1, 2), np.int32)
+    g = np.ones((1, 2), np.float32)
+    delay = np.asarray([[0, 2]], np.int32)
+    grp = SynapseGroup(name="g", pre="a", post="b",
+                       ell=F.triple_to_ell(post, g, np.ones((1, 2), bool),
+                                           1, delay=delay), wum=wum)
+    st_ = grp.init_state()
+    outs = []
+    for t in range(4):
+        st_, cur = grp.step(st_, jnp.asarray([t == 0]), jnp.float32(1.0),
+                            1.0)
+        outs.append(float(cur[0]))
+    # slot 0: weight 1*exp(0) now; slot 1: exp(-1) two steps later
+    np.testing.assert_allclose(outs, [1.0, 0.0, float(np.exp(-1.0)), 0.0],
+                               rtol=1e-6)
+
+
+def test_delay_external_consistent_across_declaration_forms():
+    """A delay-reading snippet must see the same values under delay_steps=k
+    (scalar k) and ConstantDelay(k) (per-synapse k) — the documented
+    interchangeability of the two forms."""
+    wum = WeightUpdateModel(name="atten", params={"lam": 2.0},
+                            spike_code="g * exp(-delay / lam)")
+    outs = {}
+    for label, kw in [("hom", dict(delay_steps=2)),
+                      ("het", dict(max_delay=2,
+                                   delay=np.full((1, 1), 2, np.int32)))]:
+        delay = kw.pop("delay", None)
+        grp = SynapseGroup(
+            name="g", pre="a", post="b", wum=wum,
+            ell=F.triple_to_ell(np.zeros((1, 1), np.int32),
+                                np.ones((1, 1)), np.ones((1, 1), bool), 1,
+                                delay=delay), **kw)
+        st_ = grp.init_state()
+        seq = []
+        for t in range(4):
+            st_, cur = grp.step(st_, jnp.asarray([t == 0]),
+                                jnp.float32(1.0), 1.0)
+            seq.append(float(cur[0]))
+        outs[label] = seq
+    assert outs["hom"] == outs["het"]
+    np.testing.assert_allclose(outs["hom"],
+                               [0.0, 0.0, float(np.exp(-1.0)), 0.0],
+                               rtol=1e-6)
+
+
+def test_delay_slot_zeroed_in_invalid_slots():
+    """The ELLSynapses contract (invalid slots -> 0) must hold for built
+    delay slots, so ring bounds inferred from the array never size off
+    invalid-slot noise."""
+    s = ModelSpec("inv")
+    s.add_neuron_population("a", 10, "izhikevich")
+    s.add_synapse_population("ab", "a", "a",
+                             connect=F.FixedProbability(0.3),
+                             delay=F.UniformIntDelay(1, 6))
+    for init in ("host", "device"):
+        g = s.build(dt=1.0, seed=0, init=init).network.synapses[0]
+        d, v = np.asarray(g.ell.delay), np.asarray(g.ell.valid)
+        if not v.all():
+            assert (d[~v] == 0).all(), init
+        assert d[v].min() >= 1 and d[v].max() <= 6
+
+
+def test_delay_is_reserved_in_weight_update_models():
+    from repro.core.codegen import CodegenError
+    with pytest.raises(CodegenError, match="delay"):
+        WeightUpdateModel(name="bad", params={"delay": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# validation: ring capacity, dt-consistency, mutual exclusion
+# ---------------------------------------------------------------------------
+
+def _decl(spec_fn):
+    s = ModelSpec("v")
+    s.add_neuron_population("a", 4, "izhikevich")
+    spec_fn(s)
+    return s
+
+
+def test_delay_steps_ring_capacity_bound():
+    with pytest.raises(SpecError, match="ring capacity"):
+        _decl(lambda s: s.add_synapse_population(
+            "aa", "a", "a", connect=F.OneToOne(),
+            delay_steps=MAX_DELAY_STEPS + 1))
+    with pytest.raises(SpecError, match="ring capacity"):
+        _decl(lambda s: s.add_synapse_population(
+            "aa", "a", "a", connect=F.OneToOne(),
+            delay=F.UniformIntDelay(0, MAX_DELAY_STEPS + 1)))
+    # the bound itself is accepted at declaration time
+    _decl(lambda s: s.add_synapse_population(
+        "aa", "a", "a", connect=F.OneToOne(),
+        delay_steps=MAX_DELAY_STEPS))
+
+
+def test_delay_ms_dt_consistency():
+    s = _decl(lambda s: s.add_synapse_population(
+        "aa", "a", "a", connect=F.OneToOne(), delay_ms=1.2))
+    with pytest.raises(SpecError, match="integer multiple of dt"):
+        s.build(dt=0.5, seed=0)
+    with pytest.raises(SpecError, match="ring capacity"):
+        _decl(lambda s: s.add_synapse_population(
+            "aa", "a", "a", connect=F.OneToOne(),
+            delay_ms=10.0)).build(dt=0.001, seed=0)
+    assert _decl(lambda s: s.add_synapse_population(
+        "aa", "a", "a", connect=F.OneToOne(),
+        delay_ms=1.5)).build(dt=0.5, seed=0) is not None
+
+
+def test_delay_declarations_mutually_exclusive_and_typed():
+    with pytest.raises(SpecError, match="mutually exclusive"):
+        _decl(lambda s: s.add_synapse_population(
+            "aa", "a", "a", connect=F.OneToOne(), delay_steps=2,
+            delay=F.ConstantDelay(1)))
+    with pytest.raises(SpecError, match="mutually exclusive"):
+        _decl(lambda s: s.add_synapse_population(
+            "aa", "a", "a", connect=F.OneToOne(), delay_ms=1.0,
+            delay_steps=2))
+    with pytest.raises(SpecError, match="DelaySnippet"):
+        _decl(lambda s: s.add_synapse_population(
+            "aa", "a", "a", connect=F.OneToOne(), delay="3"))
+    with pytest.raises(SpecError, match="non-negative"):
+        _decl(lambda s: s.add_synapse_population(
+            "aa", "a", "a", connect=F.OneToOne(), delay=-1))
+    with pytest.raises(SpecError, match="dense"):
+        _decl(lambda s: s.add_synapse_population(
+            "aa", "a", "a", connect=F.OneToOne(),
+            representation="dense", delay=F.ConstantDelay(1)))
+
+
+def test_snippet_constructor_validation():
+    with pytest.raises(ValueError, match="non-negative"):
+        F.ConstantDelay(-2)
+    with pytest.raises(ValueError, match="lo <= hi"):
+        F.UniformIntDelay(3, 1)
+    assert F.UniformIntDelay(0, 5).max_steps == 5
+    assert F.ConstantDelay(2).max_steps == 2

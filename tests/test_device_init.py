@@ -212,7 +212,8 @@ def test_partition_ell_by_post_reconstructs(n_shards):
                                                  F.UniformWeight(0, 1))
     ell = F.ELLSynapses(g=jnp.where(valid, g, 0.0), post_ind=post,
                         valid=valid, n_post=53)
-    G, PL, V, S, KL = DI.partition_ell_by_post(ell, n_shards)
+    G, PL, V, DL, S, KL = DI.partition_ell_by_post(ell, n_shards)
+    assert DL is None                     # delay-free ELL -> no delay block
     assert G.shape == (n_shards, 30, KL)
     # slot conservation and exact dense reconstruction
     assert int(np.asarray(V).sum()) == int(np.asarray(valid).sum())
@@ -233,7 +234,7 @@ def test_partition_preserves_slot_order():
     g = jnp.asarray([[1., 2., 3., 4., 5.]])
     valid = jnp.ones((1, 5), bool)
     ell = F.ELLSynapses(g=g, post_ind=post, valid=valid, n_post=10)
-    G, PL, V, S, KL = DI.partition_ell_by_post(ell, 2)
+    G, PL, V, _, S, KL = DI.partition_ell_by_post(ell, 2)
     # shard 0 owns post 0..4: slots (0->g2, 2->g4) in original order
     g0 = np.asarray(G[0])[0][np.asarray(V[0])[0]]
     assert g0.tolist() == [2.0, 4.0]

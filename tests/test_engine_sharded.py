@@ -124,6 +124,50 @@ def test_engine_full_feature_model_exact():
                               np.asarray(r2.raster[k])), k
 
 
+def test_dendritic_ring_sharded_along_post_axis():
+    """Acceptance contract: no replicated [delay+1, n_pre] buffer remains.
+    Per-device delay state is the post-sharded dendritic ring
+    [max_delay+1, n_post_local] — asserted on the engine's sharding specs
+    and on the actual device-local shards — and per-synapse delay slots
+    are partitioned with the connectivity blocks, never replicated."""
+    import dataclasses
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.snn.synapses import SynapseState
+    from repro.sparse.formats import UniformIntDelay
+
+    # the old pre-side spike ring is gone from the state pytree itself
+    assert "spike_buffer" not in {f.name
+                                  for f in dataclasses.fields(SynapseState)}
+
+    s = ModelSpec("ring")
+    s.add_neuron_population(
+        "a", 48, "izhikevich",
+        input_fn=lambda k, t, n: 6.0 * jax.random.normal(k, (n,)))
+    s.add_neuron_population("b", 24, "izhikevich")
+    s.add_synapse_population("ab", "a", "b", connect=FixedFanout(6),
+                             weight=UniformWeight(0, 0.8),
+                             delay=UniformIntDelay(0, 3))
+    s.add_synapse_population("bb", "b", "b", connect=OneToOne(),
+                             weight=0.2, delay_steps=2)
+    eng = s.build(dt=1.0, seed=0, mesh=make_snn_mesh(_n_dev())).engine
+    D = _n_dev()
+    st = eng.init_state()
+    for gname, dmax in [("ab", 3), ("bb", 2)]:
+        assert eng._state_specs.syn[gname].dendritic == P(None, eng.axis)
+        g = next(g for g in eng.net.synapses if g.name == gname)
+        ring = st.syn[gname].dendritic
+        npad = eng._npad[g.post]
+        assert ring.shape == (dmax + 1, npad)           # post-sized, global
+        assert ring.sharding.spec == P(None, eng.axis)
+        shard_shapes = {sh.data.shape for sh in ring.addressable_shards}
+        assert shard_shapes == {(dmax + 1, npad // D)}  # local post shard
+    # heterogeneous delay slots ride the partitioned connectivity blocks
+    assert eng._block_specs["ab"]["delay"] == P(eng.axis, None, None)
+    assert "delay" not in eng._block_specs["bb"]        # homogeneous: none
+
+
 def test_engine_gscale_validation_and_memory_report():
     cfg = IzhikevichNetConfig(n_total=64, n_conn=8, seed=0)
     _, eng = _pair(cfg)

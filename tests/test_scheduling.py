@@ -1,0 +1,144 @@
+"""SlotScheduler / RequestTiming unit tests.
+
+The slot scheduler is the shared continuous-batching core of both serving
+front-ends (launch/serve.py and launch/snn_serve.py); until now it was only
+covered indirectly through tests/test_serving.py.  These tests pin down the
+direct contract: FIFO admission under contention, slot reuse after release,
+and the per-request wall-clock accounting.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.launch.scheduling import RequestTiming, SlotScheduler
+
+
+@dataclasses.dataclass
+class Req:
+    rid: int
+
+
+def test_constructor_rejects_nonpositive_slot_counts():
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="max_slots"):
+            SlotScheduler(bad)
+
+
+def test_fifo_admission_under_contention():
+    """More queued requests than slots: admission is FIFO, fills exactly
+    the free slots (lowest slot first), and leaves the rest queued."""
+    sched = SlotScheduler(2)
+    reqs = [Req(i) for i in range(5)]
+    for r in reqs:
+        sched.submit(r)
+    assigned = sched.admit()
+    assert [(s, r.rid) for s, r in assigned] == [(0, 0), (1, 1)]
+    assert [r.rid for r in sched.queue] == [2, 3, 4]
+    assert sched.admit() == []                  # no free slots -> no-op
+    assert sched.free_slots == []
+    assert sched.has_work()
+
+
+def test_release_frees_slot_and_next_admit_refills_it():
+    """Continuous batching: a finishing request frees its slot for the
+    head of the queue while other slots keep running."""
+    sched = SlotScheduler(2)
+    for i in range(4):
+        sched.submit(Req(i))
+    sched.admit()
+    done = sched.release(0)                     # rid 0 finishes first
+    assert done.rid == 0
+    assert sched.free_slots == [0]
+    assert sched.active[1].rid == 1             # slot 1 untouched
+    assigned = sched.admit()
+    assert [(s, r.rid) for s, r in assigned] == [(0, 2)]
+    # eviction order follows completion order, not slot order
+    assert sched.release(1).rid == 1
+    assert sched.release(0).rid == 2
+    assigned = sched.admit()                    # one request, two free slots
+    assert [(s, r.rid) for s, r in assigned] == [(0, 3)]
+    sched.release(0)
+    assert not sched.has_work()
+
+
+def test_release_of_free_slot_raises():
+    sched = SlotScheduler(1)
+    with pytest.raises(KeyError):
+        sched.release(0)
+
+
+def test_duplicate_rid_rejected_until_forgotten():
+    sched = SlotScheduler(1)
+    sched.submit(Req(7))
+    with pytest.raises(ValueError, match="duplicate request rid"):
+        sched.submit(Req(7))
+    sched.admit()
+    sched.release(0)
+    sched.forget(7)
+    sched.submit(Req(7))                        # recycled after forget
+    assert [r.rid for r in sched.queue] == [7]
+
+
+def test_forget_keeps_unfinished_timings():
+    """forget() must not drop accounting for queued/in-flight requests —
+    only finished ones (their latency has been fully measured)."""
+    sched = SlotScheduler(1)
+    sched.submit(Req(0))
+    sched.forget(0)                             # queued: kept
+    assert 0 in sched.timings
+    sched.admit()
+    sched.forget(0)                             # in flight: kept
+    assert 0 in sched.timings
+    sched.release(0)
+    sched.forget(0)                             # finished: dropped
+    assert 0 not in sched.timings
+
+
+def test_request_timing_milestones_and_accounting():
+    sched = SlotScheduler(1)
+    sched.submit(Req(0))
+    sched.submit(Req(1))
+    t0 = sched.timings[0]
+    assert t0.admitted_at is None and t0.queue_wait_s is None
+    assert t0.service_s is None and t0.total_s is None
+
+    sched.admit()                               # rid 0 enters the slot
+    t1 = sched.timings[1]
+    assert t0.admitted_at is not None and t1.admitted_at is None
+    assert t0.queue_wait_s >= 0.0
+
+    sched.release(0)
+    sched.admit()                               # rid 1 waited one service
+    sched.release(0)
+    for t in (sched.timings[0], sched.timings[1]):
+        assert t.finished_at is not None
+        assert t.service_s >= 0.0
+        assert t.total_s >= t.service_s          # total includes queue wait
+        assert abs(t.total_s - (t.queue_wait_s + t.service_s)) < 1e-9
+    # rid 1 could not be admitted before rid 0 finished
+    assert sched.timings[1].admitted_at >= sched.timings[0].finished_at
+
+    summary = sched.latency_summary()
+    assert summary["finished"] == 2
+    assert summary["max_total_s"] >= summary["mean_total_s"] >= 0.0
+    assert summary["mean_queue_wait_s"] >= 0.0
+
+
+def test_latency_summary_empty_and_partial():
+    sched = SlotScheduler(2)
+    assert sched.latency_summary() == {"finished": 0}
+    sched.submit(Req(0))
+    sched.submit(Req(1))
+    sched.admit()
+    sched.release(0)                            # only rid 0 finished
+    assert sched.latency_summary()["finished"] == 1
+
+
+def test_timing_dataclass_properties_standalone():
+    t = RequestTiming(submitted_at=10.0)
+    assert t.queue_wait_s is None and t.service_s is None
+    t.admitted_at = 12.5
+    assert t.queue_wait_s == 2.5 and t.service_s is None
+    t.finished_at = 20.0
+    assert t.service_s == 7.5 and t.total_s == 10.0
