@@ -9,8 +9,11 @@ are also uploaded as workflow artifacts so the trajectory stays inspectable.
 
 Gated metrics (matched row-by-row on their key fields):
 
-  BENCH_snn_scaling.json  weak_scaling[].us_per_step   (lower is better)
-  BENCH_snn_serving.json  streams[].steps_per_sec      (higher is better)
+  BENCH_snn_scaling.json  weak_scaling[].us_per_step    (lower is better)
+  BENCH_snn_serving.json  streams[].steps_per_sec       (higher is better)
+  BENCH_snn_probes.json   probe_overhead[].us_per_step  (lower is better;
+                          the probes=0 row is the recording-off-the-hot-
+                          path guarantee, probed rows bound the cost)
 
 Construction times and other fields are reported but never gate (first-call
 jit noise dominates them at CI sizes).  A missing fresh file or baseline is
@@ -44,6 +47,9 @@ GATES = [
     ("BENCH_snn_serving.json", "streams",
      ("devices", "n_total"),
      ("streams", "chunk", "n_steps", "requests"), "steps_per_sec", "higher"),
+    ("BENCH_snn_probes.json", "probe_overhead",
+     ("n_total", "n_conn", "n_steps"),
+     ("probes",), "us_per_step", "lower"),
 ]
 
 

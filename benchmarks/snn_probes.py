@@ -1,0 +1,106 @@
+"""Probe-overhead benchmark: step time with 0 / 1 / 4 declared probes.
+
+Probes write device-resident ring buffers inside the simulation scan; the
+design constraint is that recording stays **off the hot path when unused**
+(0-probe step time is the gated metric — benchmarks/check_regression.py
+compares it against the committed baseline) and costs roughly one masked
+row-write per probe per step when used (the 1- and 4-probe rows are
+reported for the trajectory).
+
+Emits ``experiments/bench/BENCH_snn_probes.json`` and prints harness CSV
+rows.
+
+    PYTHONPATH=src python -m benchmarks.snn_probes
+
+Env knobs (kept small in CI): SNN_PROBE_BENCH_N (neurons, default 500),
+SNN_PROBE_BENCH_NCONN (fanout, default 64), SNN_PROBE_BENCH_STEPS
+(default 200), SNN_PROBE_BENCH_REPS (default 3).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+OUT_NAME = "BENCH_snn_probes.json"
+
+PROBE_SETS = {
+    0: [],
+    1: [("v", "exc", "V", {"every": 1})],
+    4: [("v", "exc", "V", {"every": 1}),
+        ("spk", "exc", "spikes", {"every": 1}),
+        ("u", "exc", "U", {"every": 4}),
+        ("v_mean", "exc", "V", {"reduce": "mean"})],
+}
+
+
+def _build(n_total: int, n_conn: int, n_probes: int):
+    from repro.core.models.izhikevich_net import IzhikevichNetConfig, spec
+
+    cfg = IzhikevichNetConfig(n_total=n_total, n_conn=n_conn, seed=0)
+    ms = spec(cfg)
+    for name, target, var, kw in PROBE_SETS[n_probes]:
+        ms.probe(name, target, var, **kw)
+    return ms.build(dt=cfg.dt, seed=cfg.seed)
+
+
+def _time_run(model, n_steps: int, reps: int) -> float:
+    import jax
+
+    state = model.init_state()
+    model.run(n_steps, state=state)                 # warm the executable
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = model.run(n_steps, state=state)
+        jax.block_until_ready(res.spike_counts)
+        if res.recordings:
+            jax.block_until_ready(res.recordings.data)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    import jax
+
+    n_total = int(os.environ.get("SNN_PROBE_BENCH_N", 500))
+    n_conn = int(os.environ.get("SNN_PROBE_BENCH_NCONN", 64))
+    n_steps = int(os.environ.get("SNN_PROBE_BENCH_STEPS", 200))
+    reps = int(os.environ.get("SNN_PROBE_BENCH_REPS", 3))
+    n_conn = min(n_conn, n_total)
+
+    rows = []
+    base_us = None
+    for n_probes in sorted(PROBE_SETS):
+        model = _build(n_total, n_conn, n_probes)
+        wall = _time_run(model, n_steps, reps)
+        us_per_step = wall / n_steps * 1e6
+        if n_probes == 0:
+            base_us = us_per_step
+        rows.append({
+            "probes": n_probes, "n_steps": n_steps, "wall_s": wall,
+            "us_per_step": us_per_step,
+            "overhead_vs_unprobed": (us_per_step / base_us
+                                     if base_us else 1.0),
+        })
+        print(f"probe_overhead={n_probes},{us_per_step:.1f},us_per_step "
+              f"x{rows[-1]['overhead_vs_unprobed']:.2f}", flush=True)
+
+    payload = {
+        "backend": jax.default_backend(),
+        "n_total": n_total,
+        "n_conn": n_conn,
+        "n_steps": n_steps,
+        "probe_overhead": rows,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / OUT_NAME).write_text(json.dumps(payload, indent=1,
+                                               default=float))
+    print(f"wrote {RESULTS / OUT_NAME}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,11 @@ PN->KC conductance is over-scaled (the paper's float-overflow discussion).
 
 The network is declared through ModelSpec (see repro.core.models.
 mushroom_body.spec) and the gScale table below is ONE vmapped compile via
-CompiledModel.sweep_gscale — no hand-rolled jit(vmap(...)).
+CompiledModel.sweep_gscale — no hand-rolled jit(vmap(...)).  The config
+also declares the observation/intervention surface: a KC membrane-voltage
+probe (device-resident recording, returned per sweep candidate) and the
+KC->DN incoming-weight normalization as a custom update, applied on demand
+without rebuilding.
 
   PYTHONPATH=src python examples/mushroom_body.py
 """
@@ -14,12 +18,15 @@ import numpy as np
 
 from repro.core.models.mushroom_body import MushroomBodyConfig, compile_model
 
-cfg = MushroomBodyConfig(n_pn=24, n_lhi=6, n_kc=150, n_dn=12)
+cfg = MushroomBodyConfig(n_pn=24, n_lhi=6, n_kc=150, n_dn=12,
+                         kc_probe_every=25, kc_dn_normalize=True)
 model = compile_model(cfg)
 
 print(model)
 print("synapse representations:")
 for rep in model.memory_report():
+    if rep.get("kind", "synapse_group") != "synapse_group":
+        continue
     print(f"  {rep['name']}: {rep['representation']}")
 
 sweep = model.sweep_gscale("PN_KC", [0.5, 1.0, 2.0, 8.0, 50.0], n_steps=2500)
@@ -40,3 +47,33 @@ duty = min(kc_rate * 5e-3, 1.0)
 print(f"  mean KC rate {kc_rate:.1f} Hz vs PN drive {pn_rate:.1f} Hz "
       f"(each KC spikes in ~{100 * duty:.0f}% of 5 ms windows); "
       f"{np.mean(counts > 0):.2f} of KCs fired at least once")
+
+# --- probes: the KC membrane voltage, recorded per sweep candidate --------
+kc_v = np.asarray(sweep.recordings["kc_v"])       # [cand, samples, n_kc]
+n_samp = int(np.asarray(sweep.recordings.counts["kc_v"])[0])
+print(f"\nKC V probe ('kc_v', every {cfg.kc_probe_every} steps): "
+      f"{n_samp} samples x {kc_v.shape[-1]} KCs per candidate")
+print("  mean KC V (last sample) per gScale: "
+      + str(kc_v[:, n_samp - 1].mean(axis=1).round(1)))
+
+# --- custom update: KC->DN weight normalization on demand -----------------
+grp = next(g for g in model.network.synapses if g.name == "KC_DN")
+valid = np.asarray(grp.ell.valid)
+post = np.asarray(grp.ell.post_ind)
+
+
+def dn_totals(g):
+    tot = np.zeros(cfg.n_dn, np.float32)
+    np.add.at(tot, post[valid], np.asarray(g)[valid])
+    return tot
+
+
+state = model.init_state()
+before = dn_totals(state.syn["KC_DN"].g)
+state = model.custom_update("normalize_kc_dn", state)
+after = dn_totals(state.syn["KC_DN"].g)
+print("\nKC->DN normalization (custom update 'normalize_kc_dn'):")
+print(f"  per-DN incoming conductance before: "
+      f"{before.min():.3f}..{before.max():.3f} uS")
+print(f"  after: {after.min():.3f}..{after.max():.3f} uS "
+      f"(target {cfg.n_kc * cfg.g_kc_dn / 2.0:.3f})")

@@ -51,6 +51,11 @@ spec.add_synapse_population("ie", "inh", "exc", connect=FixedFanout(40),
                             weight=lambda r, s: -r.random(s),
                             psm=ExpDecay(tau_ms=3.0))
 
+# Probes: device-resident recording of ANY declared state variable (the
+# old record_raster flag is a special case: a "spikes" probe).
+spec.probe("exc_raster", "exc", "spikes")
+spec.probe("exc_v_mean", "exc", "V", reduce="mean")
+
 # 3. Build: eager validation, seeded connectivity, representation choice ---
 model = spec.build(dt=1.0, seed=0)
 print("\n=== compiled model ===")
@@ -58,19 +63,24 @@ print(model)
 
 print("\n=== representation choice (paper eq 1/2) ===")
 for rep in model.memory_report():
+    if rep.get("kind", "synapse_group") != "synapse_group":
+        continue
     print(f"  {rep['name']}: {rep['representation']} "
           f"(sparse {rep['sparse_elements']} vs dense "
           f"{rep['dense_elements']} elements)")
 
-# 4. Run (the step function is generated + jitted) --------------------------
-res = model.run(400, record_raster=True)
+# 4. Run (the step function is generated + jitted); probes come back in a
+#    Recordings pytree keyed by probe name ---------------------------------
+res = model.run(400)
 
 print("\n=== results (400 ms) ===")
 for pop, rate in res.rates_hz.items():
     print(f"  {pop}: {float(rate):.1f} Hz, finite={bool(res.finite)}")
+vmean = np.asarray(res.recordings["exc_v_mean"])
+print(f"  exc mean V over the last 5 samples: {vmean[-5:].round(1)}")
 
-print("\n=== exc raster (first 40 neurons x 80 ms) ===")
-raster = np.asarray(res.raster["exc"])[:80, :40]
+print("\n=== exc raster (first 40 neurons x 80 ms, probe 'exc_raster') ===")
+raster = np.asarray(res.recordings["exc_raster"])[:80, :40]
 for t in range(0, 80, 2):
     print("  " + "".join("|" if raster[t, i] else "." for i in range(40)))
 

@@ -40,6 +40,9 @@ class IzhikevichNetConfig:
     dt: float = 1.0                # 1 ms, two half-steps on V (as Izhikevich)
     seed: int = 1234
     input_scale: float = 1.0
+    # declare an excitatory membrane-voltage probe sampled every
+    # `probe_v_every` steps (0 = none) — see docs/API.md "Probes"
+    probe_v_every: int = 0
 
 
 def spec(cfg: IzhikevichNetConfig) -> ModelSpec:
@@ -80,6 +83,8 @@ def spec(cfg: IzhikevichNetConfig) -> ModelSpec:
         "inh", "inh", ["exc", "inh"], connect=FixedFanout(cfg.n_conn),
         weight=UniformWeight(0.0, -1.0),
         representation=cfg.representation)
+    if cfg.probe_v_every:
+        ms.probe("exc_v", "exc", "V", every=cfg.probe_v_every)
     return ms
 
 

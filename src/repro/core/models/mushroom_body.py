@@ -69,6 +69,17 @@ class MushroomBodyConfig:
     g_lhi_kc: float = 0.40
     g_kc_dn: float = 0.02
     g_dn_dn: float = 0.01
+    # Observation / intervention (the runtime API the gscale calibration
+    # loop uses): a KC membrane-voltage probe sampled every `kc_probe_every`
+    # steps (0 = no probe), and the KC->DN ("KC->EN" in the MBody papers)
+    # incoming-weight normalization as a declared custom update — per-DN
+    # total conductance rescaled to its expected build value, runnable on
+    # demand (model.custom_update("normalize_kc_dn", state)) without
+    # rebuilding.  Normalization makes KC_DN's g state-resident (mutable),
+    # which routes it through the sparse/ELL path; both default off so the
+    # seed dynamics of existing configs stay bit-identical.
+    kc_probe_every: int = 0
+    kc_dn_normalize: bool = False
 
 
 def spec(cfg: MushroomBodyConfig) -> ModelSpec:
@@ -107,6 +118,17 @@ def spec(cfg: MushroomBodyConfig) -> ModelSpec:
         "DN_DN", "DN", "DN", connect=FixedFanout(cfg.n_dn),
         weight=cfg.g_dn_dn, representation="dense",
         psm=ExpCond(tau_ms=10.0, e_rev=-92.0))
+
+    if cfg.kc_probe_every:
+        ms.probe("kc_v", "KC", "V", every=cfg.kc_probe_every)
+    if cfg.kc_dn_normalize:
+        # hold each DN's total incoming conductance at its expected build
+        # value (n_kc synapses, weights ~ U(0, g_kc_dn) -> mean g_kc_dn/2)
+        ms.add_custom_update(
+            "normalize_kc_dn", "KC_DN",
+            update_code="g = g * g_total / maximum(w_sum, eps)",
+            params={"g_total": cfg.n_kc * cfg.g_kc_dn / 2.0, "eps": 1e-9},
+            reduce={"w_sum": ("sum", "g", "post")})
     return ms
 
 

@@ -1,0 +1,283 @@
+"""Custom updates: codegen'd on-demand / scheduled state rewrites.
+
+GeNN 4's CustomUpdate, adapted: a snippet of update code targeting one
+neuron population or synapse group, compiled through the same AST
+whitelist as every other model snippet (`repro.core.codegen`), runnable
+*on demand* (`CompiledModel.custom_update(name, state)`) or *scheduled*
+every ``n`` steps inside the simulation scan — weight normalization,
+homeostatic scaling, state resets, all without rebuilding the model:
+
+    spec.add_custom_update(
+        "normalize", "KC_DN",
+        update_code="g = g * g_target / maximum(w_sum, 1e-9)",
+        params={"g_target": 1.0},
+        reduce={"w_sum": ("sum", "g", "post")})
+
+Reductions are declared as data and computed *before* the update code runs,
+from the pre-update state:
+
+- synapse-group targets take ``(op, var, axis)`` with axis ``"post"``
+  (per-post-neuron, gathered back to synapse shape — the normalization
+  axis), ``"pre"`` (per-row, broadcast back), or ``"all"`` (scalar);
+- population targets take ``(op, var)`` — a scalar over the neuron axis.
+
+``op`` is one of sum / mean / max / min.  On sharded builds, "post"
+reductions are device-local (each device owns its post shard — no
+communication), while "pre"/"all"/population reductions combine per-device
+partials with ``psum``/``pmax``/``pmin`` inside ``shard_map``.
+
+A custom update that *writes* ``g`` makes the target group's conductances
+state-resident (``mutable_g``), which forces the sparse/ELL propagation
+path exactly like a learning rule does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import codegen
+from repro.core.snn.errors import SpecError
+from repro.core.snn.probes import REDUCE_OPS, reduce_neutral
+
+__all__ = ["CustomUpdateSpec", "ResolvedCustomUpdate",
+           "resolve_custom_updates", "group_reduce_host", "pop_reduce",
+           "gather_post", "GROUP_AXES"]
+
+GROUP_AXES = ("pre", "post", "all")
+
+
+@dataclasses.dataclass(frozen=True)
+class CustomUpdateSpec:
+    """A custom update as declared on the ModelSpec (unresolved)."""
+
+    name: str
+    target: str
+    update_code: str
+    params: Mapping[str, float]
+    reduce: Mapping[str, tuple]
+    every: Optional[int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedCustomUpdate:
+    """A custom update bound to a built Network.
+
+    kind:   "population" | "group"
+    writes: target state vars the update code assigns
+    reduce: reduction name -> (op, var, axis); axis is "pop" for
+            population targets
+    fn:     compiled apply(vars, params, reductions, externals)
+    """
+
+    name: str
+    kind: str
+    target: str
+    update_code: str
+    params: Dict[str, object]
+    reduce: Dict[str, Tuple[str, str, str]]
+    every: Optional[int]
+    writes: frozenset
+    denom_all: float
+    fn: object
+
+
+def validate_update_scalars(name: str, every) -> None:
+    """Shared name/every validation — single source of truth for the
+    eager ModelSpec.add_custom_update check and resolve_custom_updates."""
+    if not name or not isinstance(name, str):
+        raise SpecError(f"custom update name must be a non-empty "
+                        f"string, got {name!r}")
+    if every is not None and (not isinstance(every, int)
+                              or isinstance(every, bool) or every <= 0):
+        raise SpecError(
+            f"custom update {name!r}: every must be a positive int or "
+            f"None (on-demand), got {every!r}")
+
+
+def written_targets(spec: CustomUpdateSpec) -> frozenset:
+    """Names the update code assigns (superset: includes temporaries)."""
+    try:
+        return frozenset(codegen.assigned_names(spec.update_code))
+    except SyntaxError:
+        return frozenset()
+
+
+def resolve_custom_updates(specs, net) -> Tuple[ResolvedCustomUpdate, ...]:
+    """Validate custom-update declarations against a built Network."""
+    groups = {g.name: g for g in net.synapses}
+    seen = set()
+    out = []
+    for cu in specs:
+        validate_update_scalars(cu.name, cu.every)
+        if cu.name in seen:
+            raise SpecError(f"duplicate custom update name {cu.name!r}")
+        seen.add(cu.name)
+        where = f"custom update {cu.name!r}"
+        if cu.target in net.populations:
+            kind = "population"
+            pop = net.populations[cu.target]
+            var_keys = tuple(pop.model.state)
+            param_keys = dict(pop.params)
+            denom_all = float(pop.n)
+        elif cu.target in groups:
+            kind = "group"
+            grp = groups[cu.target]
+            var_keys = ("g",) + tuple(grp.wum.syn_state)
+            param_keys = {}
+            denom_all = float(jnp.asarray(grp.ell.valid).sum())
+        else:
+            raise SpecError(
+                f"{where}: unknown target {cu.target!r}; valid targets: "
+                f"populations {sorted(net.populations)}, synapse groups "
+                f"{sorted(groups)}")
+        for k in list(cu.params) + list(dict(cu.reduce or {})):
+            if k in ("dt", "t"):
+                raise SpecError(
+                    f"{where}: name {k!r} is reserved (the dt/t externals "
+                    "are always visible to update code)")
+        for k in cu.params:
+            if k in var_keys or k in param_keys:
+                raise SpecError(
+                    f"{where}: parameter {k!r} shadows a state variable or "
+                    f"model parameter of target {cu.target!r}")
+        merged_params = {**param_keys, **dict(cu.params)}
+
+        reduce_norm: Dict[str, Tuple[str, str, str]] = {}
+        for rname, rspec in dict(cu.reduce or {}).items():
+            if rname in var_keys or rname in merged_params:
+                raise SpecError(
+                    f"{where}: reduction name {rname!r} shadows a state "
+                    f"variable or parameter of target {cu.target!r}")
+            rspec = tuple(rspec) if isinstance(rspec, (tuple, list)) else (rspec,)
+            if kind == "population":
+                if len(rspec) != 2:
+                    raise SpecError(
+                        f"{where}: population reductions are declared as "
+                        f"(op, var); got {rspec!r}")
+                op, var = rspec
+                axis = "pop"
+            else:
+                if len(rspec) != 3:
+                    raise SpecError(
+                        f"{where}: synapse-group reductions are declared "
+                        f"as (op, var, axis) with axis in {GROUP_AXES}; "
+                        f"got {rspec!r}")
+                op, var, axis = rspec
+                if axis not in GROUP_AXES:
+                    raise SpecError(
+                        f"{where}: unknown reduction axis {axis!r}; valid "
+                        f"axes: {list(GROUP_AXES)}")
+            if op not in REDUCE_OPS:
+                raise SpecError(
+                    f"{where}: unknown reduction op {op!r}; valid ops: "
+                    f"{list(REDUCE_OPS)}")
+            if var not in var_keys:
+                raise SpecError(
+                    f"{where}: reduction {rname!r} reads unknown state "
+                    f"variable {var!r} of target {cu.target!r}; valid "
+                    f"variables: {sorted(var_keys)}")
+            reduce_norm[rname] = (op, var, axis)
+
+        try:
+            fn = codegen.compile_custom_update(
+                cu.name, cu.update_code, var_keys, tuple(merged_params),
+                tuple(reduce_norm))
+        except (codegen.CodegenError, SyntaxError) as e:
+            raise SpecError(f"{where}: {e}") from None
+        writes = written_targets(cu) & set(var_keys)
+        if not writes:
+            raise SpecError(
+                f"{where}: update_code assigns none of target "
+                f"{cu.target!r}'s state variables {sorted(var_keys)} — the "
+                "update would be a no-op")
+        if kind == "group" and "g" in writes and not groups[cu.target].plastic:
+            raise SpecError(
+                f"{where}: writes 'g' of synapse group {cu.target!r} but "
+                "the group's conductances are not state-resident; build "
+                "through ModelSpec (which marks the group mutable) or use "
+                "a plastic weight-update model")
+        out.append(ResolvedCustomUpdate(
+            name=cu.name, kind=kind, target=cu.target,
+            update_code=cu.update_code, params=merged_params,
+            reduce=reduce_norm, every=cu.every, writes=writes,
+            denom_all=denom_all, fn=fn))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# reduction execution (host path; the sharded engine has local variants)
+# ---------------------------------------------------------------------------
+
+def _scatter_post(val, post_ind, valid, n_post: int, op: str):
+    """Per-post-neuron reduction of a [n_pre, K] per-synapse array."""
+    masked = jnp.where(valid, jnp.asarray(val, jnp.float32),
+                       reduce_neutral(op))
+    flat_i = post_ind.reshape(-1)
+    flat_v = masked.reshape(-1)
+    if op in ("sum", "mean"):
+        tot = jnp.zeros((n_post,), jnp.float32).at[flat_i].add(flat_v)
+        if op == "sum":
+            return tot
+        deg = jnp.zeros((n_post,), jnp.float32).at[flat_i].add(
+            valid.reshape(-1).astype(jnp.float32))
+        return jnp.where(deg > 0, tot / jnp.maximum(deg, 1.0), 0.0)
+    if op == "max":
+        return jnp.full((n_post,), -jnp.inf, jnp.float32).at[flat_i].max(
+            flat_v)
+    return jnp.full((n_post,), jnp.inf, jnp.float32).at[flat_i].min(flat_v)
+
+
+def gather_post(per_post, post_ind):
+    """Broadcast a per-post-neuron reduction back to synapse shape."""
+    return per_post[post_ind]
+
+
+def _row_reduce(val, valid, op: str):
+    """Per-pre-row reduction of a [n_pre, K] per-synapse array."""
+    masked = jnp.where(valid, jnp.asarray(val, jnp.float32),
+                       reduce_neutral(op))
+    if op == "sum":
+        return jnp.sum(masked, axis=1)
+    if op == "mean":
+        cnt = jnp.sum(valid.astype(jnp.float32), axis=1)
+        return jnp.where(cnt > 0, jnp.sum(masked, axis=1)
+                         / jnp.maximum(cnt, 1.0), 0.0)
+    if op == "max":
+        return jnp.max(masked, axis=1)
+    return jnp.min(masked, axis=1)
+
+
+def group_reduce_host(op: str, val, ell, axis: str, denom_all: float):
+    """One declared reduction on the host path, already broadcast to the
+    shape the update environment expects (synapse shape for 'post',
+    [n_pre, 1] for 'pre', scalar for 'all')."""
+    if axis == "post":
+        per_post = _scatter_post(val, ell.post_ind, ell.valid, ell.n_post,
+                                 op)
+        return gather_post(per_post, ell.post_ind)
+    if axis == "pre":
+        return _row_reduce(val, ell.valid, op)[:, None]
+    masked = jnp.where(ell.valid, jnp.asarray(val, jnp.float32),
+                       reduce_neutral(op))
+    if op == "sum":
+        return jnp.sum(masked)
+    if op == "mean":
+        return jnp.sum(masked) / jnp.float32(denom_all)
+    if op == "max":
+        return jnp.max(masked)
+    return jnp.min(masked)
+
+
+def pop_reduce(op: str, val, denom: float):
+    """Population-axis reduction to a scalar (full-size val)."""
+    val = jnp.asarray(val, jnp.float32)
+    if op == "sum":
+        return jnp.sum(val)
+    if op == "mean":
+        return jnp.sum(val) / jnp.float32(denom)
+    if op == "max":
+        return jnp.max(val)
+    return jnp.min(val)

@@ -49,7 +49,10 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import codegen
+from repro.core.snn import custom_updates as CU
+from repro.core.snn import probes as PR
 from repro.core.snn.network import Network
+from repro.core.snn.probes import Recordings
 from repro.core.snn.simulator import RunResult, SimState
 from repro.core.snn.synapses import SynapseState
 from repro.launch.mesh import snn_axis
@@ -63,7 +66,8 @@ __all__ = ["ShardedEngine"]
 class ShardedEngine:
     """Runs a built Network partitioned over a 1-D device mesh."""
 
-    def __init__(self, net: Network, mesh, dt: float = 0.5, seed: int = 0):
+    def __init__(self, net: Network, mesh, dt: float = 0.5, seed: int = 0,
+                 probes=(), custom_updates=()):
         self.net = net
         self.mesh = mesh
         self.axis = snn_axis(mesh)
@@ -75,6 +79,11 @@ class ShardedEngine:
             for name, pop in net.populations.items()
         }
         self._group_names = {g.name for g in net.synapses}
+        self._groups = {g.name: g for g in net.synapses}
+        self.probes = tuple(probes)
+        self.custom_updates = {cu.name: cu for cu in custom_updates}
+        self._scheduled = [cu for cu in custom_updates
+                           if cu.every is not None]
         D = self.n_shards
         self._npad = {name: neuron_pad(pop.n, D)
                       for name, pop in net.populations.items()}
@@ -142,6 +151,7 @@ class ShardedEngine:
         self._sweep_cache: Dict[tuple, Callable] = {}
         self._step_cache: Dict[tuple, Callable] = {}
         self._serve_cache: Dict[tuple, Callable] = {}
+        self._custom_cache: Dict[str, Callable] = {}
 
     # ------------------------------------------------------------------
     # state layout
@@ -338,12 +348,261 @@ class ShardedEngine:
                 finite = finite & jnp.all(
                     jnp.isfinite(jnp.where(lane_valid, arr, 0.0)))
 
-        return SimState(
+        new_state = SimState(
             neurons=new_neurons, spikes=new_spikes, prev_above=new_prev,
-            syn=new_syn, t=state.t + dt, key=key, finite=finite), new_spikes
+            syn=new_syn, t=state.t + dt, key=key, finite=finite)
+        new_state = self._run_scheduled_local(new_state, blocks, pn_params)
+        return new_state, new_spikes
 
     def _combine_finite(self, finite):
         return jax.lax.pmin(finite.astype(jnp.int32), self.axis) == 1
+
+    # ------------------------------------------------------------------
+    # custom updates on the local shard (mirrors Simulator._apply_custom;
+    # cross-device reductions via psum/pmax/pmin, per-post reductions are
+    # device-local because each device owns its post shard)
+    # ------------------------------------------------------------------
+    def _run_scheduled_local(self, state: SimState, blocks,
+                             pn_params) -> SimState:
+        if not self._scheduled:
+            return state
+        elapsed = jnp.int32(jnp.round(state.t / jnp.float32(self.dt)))
+        for cu in self._scheduled:
+            trig = (elapsed % cu.every) == 0
+            state = self._apply_custom_local(state, cu, trig, blocks,
+                                             pn_params)
+        return state
+
+    def _group_reduce_local(self, op, val, blk, axis, denom_all: float,
+                            n_post_local: int):
+        """One declared group reduction on this device's connectivity
+        block.  'post' needs no communication (the device owns every
+        synapse targeting its post shard); 'pre'/'all' combine per-device
+        partials with psum/pmax/pmin."""
+        ax = self.axis
+        valid = blk["valid"]
+        neutral = PR.reduce_neutral(op)
+        masked = jnp.where(valid, jnp.asarray(val, jnp.float32), neutral)
+        if axis == "post":
+            per_post = CU._scatter_post(val, blk["post"], valid,
+                                        n_post_local, op)
+            return CU.gather_post(per_post, blk["post"])
+        if axis == "pre":
+            if op in ("sum", "mean"):
+                rs = jax.lax.psum(jnp.sum(
+                    jnp.where(valid, jnp.asarray(val, jnp.float32), 0.0),
+                    axis=1), ax)
+                if op == "sum":
+                    return rs[:, None]
+                cnt = jax.lax.psum(
+                    jnp.sum(valid.astype(jnp.float32), axis=1), ax)
+                return jnp.where(cnt > 0, rs / jnp.maximum(cnt, 1.0),
+                                 0.0)[:, None]
+            part = (jnp.max(masked, axis=1) if op == "max"
+                    else jnp.min(masked, axis=1))
+            comb = jax.lax.pmax if op == "max" else jax.lax.pmin
+            return comb(part, ax)[:, None]
+        # axis == "all": scalar over the whole matrix
+        if op in ("sum", "mean"):
+            tot = jax.lax.psum(jnp.sum(
+                jnp.where(valid, jnp.asarray(val, jnp.float32), 0.0)), ax)
+            return tot / jnp.float32(denom_all) if op == "mean" else tot
+        part = jnp.max(masked) if op == "max" else jnp.min(masked)
+        comb = jax.lax.pmax if op == "max" else jax.lax.pmin
+        return comb(part, ax)
+
+    def _pop_reduce_local(self, op, val, lane_valid, denom: float):
+        """Population-axis reduction over the local shard, combined
+        across devices (padded lanes neutral-masked)."""
+        ax = self.axis
+        neutral = PR.reduce_neutral(op)
+        masked = jnp.where(lane_valid, jnp.asarray(val, jnp.float32),
+                           neutral)
+        if op in ("sum", "mean"):
+            tot = jax.lax.psum(jnp.sum(
+                jnp.where(lane_valid, jnp.asarray(val, jnp.float32),
+                          0.0)), ax)
+            return tot / jnp.float32(denom) if op == "mean" else tot
+        part = jnp.max(masked) if op == "max" else jnp.min(masked)
+        comb = jax.lax.pmax if op == "max" else jax.lax.pmin
+        return comb(part, ax)
+
+    def _apply_custom_local(self, state: SimState, cu, trig, blocks,
+                            pn_params) -> SimState:
+        ext = {"dt": jnp.float32(self.dt), "t": state.t}
+        if cu.kind == "group":
+            grp = self._groups[cu.target]
+            blk = blocks[cu.target]
+            st = state.syn[cu.target]
+            g_arr = st.g if st.g is not None else blk["g"]
+            cu_vars = {"g": g_arr, **st.syn}
+            red = {
+                rname: self._group_reduce_local(
+                    op, cu_vars[var], blk, axis, cu.denom_all,
+                    self._shard[grp.post])
+                for rname, (op, var, axis) in cu.reduce.items()}
+            new = cu.fn(cu_vars, cu.params, red, ext)
+            valid = blk["valid"]
+
+            def sel(name, old):
+                if name not in cu.writes:
+                    return old
+                return jnp.where(trig, jnp.where(valid, new[name], old),
+                                 old)
+
+            # NaN guard: the update's writes must trip `finite` exactly
+            # like an over-scaled conductance would (local check; the
+            # run/step wrappers pmin-combine across devices)
+            ok = jnp.ones((), bool)
+            for name in cu.writes:
+                ok = ok & jnp.all(jnp.isfinite(
+                    jnp.where(valid, new[name], 0.0)))
+            finite = state.finite & jnp.where(trig, ok, True)
+            new_syn = dict(state.syn)
+            new_syn[cu.target] = SynapseState(
+                psm=st.psm, wu_pre=st.wu_pre, wu_post=st.wu_post,
+                g=(sel("g", g_arr) if st.g is not None else None),
+                syn={k: sel(k, v) for k, v in st.syn.items()},
+                dendritic=st.dendritic, cursor=st.cursor)
+            return SimState(neurons=state.neurons, spikes=state.spikes,
+                            prev_above=state.prev_above, syn=new_syn,
+                            t=state.t, key=state.key, finite=finite)
+        # population target
+        pop = self.net.populations[cu.target]
+        d = jax.lax.axis_index(self.axis)
+        S = self._shard[cu.target]
+        lane_valid = d * S + jnp.arange(S) < pop.n
+        cu_vars = dict(state.neurons[cu.target])
+        red = {rname: self._pop_reduce_local(op, cu_vars[var], lane_valid,
+                                             cu.denom_all)
+               for rname, (op, var, _axis) in cu.reduce.items()}
+        # cu.params carries the resolve-time merge (update params + full
+        # pop params); re-overlay the population params with their local
+        # shard / baked-scalar forms
+        params = dict(cu.params)
+        params.update(self._scalar_params[cu.target])
+        params.update(pn_params[cu.target])
+        new = cu.fn(cu_vars, params, red, ext)
+        ok = jnp.ones((), bool)
+        for name in cu.writes:
+            ok = ok & jnp.all(jnp.isfinite(
+                jnp.where(lane_valid, new[name], 0.0)))
+        finite = state.finite & jnp.where(trig, ok, True)
+        new_neurons = dict(state.neurons)
+        new_neurons[cu.target] = {
+            k: (jnp.where(trig, new[k], v) if k in cu.writes else v)
+            for k, v in state.neurons[cu.target].items()}
+        return SimState(neurons=new_neurons, spikes=state.spikes,
+                        prev_above=state.prev_above, syn=state.syn,
+                        t=state.t, key=state.key, finite=finite)
+
+    # ------------------------------------------------------------------
+    # probes on the local shard.  Per-neuron-shaped probes store local
+    # rows (the buffer shards along the neuron axis, gathered on exit);
+    # reduced per-neuron probes all-gather the full vector and apply the
+    # identical reduction (bit-exact vs the host build); synapse-matrix
+    # reductions combine per-device partials with psum/pmax/pmin.
+    # ------------------------------------------------------------------
+    def _probe_sharded(self, p) -> bool:
+        """True when the probe's buffer rows shard along the neuron axis."""
+        return p.reduce is None and p.varkind != "wu_pre"
+
+    def _probe_local_shape(self, p, cap: int):
+        if p.reduce is not None:
+            return (cap,)
+        if p.varkind == "wu_pre":
+            return (cap, p.n)
+        if p.kind == "population":
+            return (cap, self._shard[p.target])
+        return (cap, self._shard[self._groups[p.target].post])
+
+    def _probe_init_local(self, n_steps: int, serving: bool = False):
+        bufs, caps = {}, {}
+        for p in self.probes:
+            cap = PR.capacity(p, n_steps, serving=serving)
+            caps[p.name] = cap
+            bufs[p.name] = jnp.zeros(self._probe_local_shape(p, cap),
+                                     p.dtype)
+        return bufs, caps
+
+    def _probe_local_value(self, p, state, spikes, blocks):
+        ax = self.axis
+        if p.varkind == "wu_pre":
+            val = state.syn[p.target].wu_pre[p.var]   # replicated, full
+            if p.reduce is None:
+                return val
+            return PR.vector_reduce(val, p.reduce, p.denom)
+        if p.varkind in ("g", "syn"):
+            blk = blocks[p.target]
+            st = state.syn[p.target]
+            val = st.g if p.varkind == "g" else st.syn[p.var]
+            op = p.reduce
+            masked = jnp.where(blk["valid"], jnp.asarray(val, jnp.float32),
+                               PR.reduce_neutral(op))
+            if op in ("sum", "mean"):
+                tot = jax.lax.psum(jnp.sum(
+                    jnp.where(blk["valid"],
+                              jnp.asarray(val, jnp.float32), 0.0)), ax)
+                return tot / jnp.float32(p.denom) if op == "mean" else tot
+            part = jnp.max(masked) if op == "max" else jnp.min(masked)
+            comb = jax.lax.pmax if op == "max" else jax.lax.pmin
+            return comb(part, ax)
+        if p.varkind == "neuron":
+            val = state.neurons[p.target][p.var]
+        elif p.varkind == "spikes":
+            val = spikes[p.target]
+        elif p.varkind == "psm":
+            val = state.syn[p.target].psm[p.var]
+        else:  # wu_post
+            val = state.syn[p.target].wu_post[p.var]
+        if p.reduce is None:
+            return val                              # local shard rows
+        full = jax.lax.all_gather(val, ax, tiled=True)[: p.n]
+        return PR.vector_reduce(full, p.reduce, p.denom)
+
+    def _probe_write_local(self, bufs, caps, start, i, state, spikes,
+                           blocks, gate=None):
+        out = dict(bufs)
+        for p in self.probes:
+            base = PR.probe_base(p, start)
+            active, slot = PR.sample_slot(p, start, base, i, caps[p.name])
+            if gate is not None:
+                active = active & gate
+            val = self._probe_local_value(p, state, spikes, blocks)
+            out[p.name] = PR.write_sample(bufs[p.name], slot, active, val)
+        return out
+
+    def _probe_finalize_local(self, bufs, caps, start, n_eff,
+                              serving: bool = False):
+        data, counts = {}, {}
+        for p in self.probes:
+            data[p.name], counts[p.name] = PR.finalize(
+                bufs[p.name], start, n_eff, p, caps[p.name],
+                use_window=not serving)
+        return data, counts
+
+    def _probe_out_specs(self, lead=()):
+        """(data specs, count specs) keyed by probe name; `lead` prefixes
+        extra unsharded axes (sweep candidates / serving streams)."""
+        data, counts = {}, {}
+        for p in self.probes:
+            if self._probe_sharded(p):
+                data[p.name] = P(*lead, None, self.axis)
+            elif p.reduce is None:
+                data[p.name] = P(*lead, None, None)
+            else:
+                data[p.name] = P(*lead, None)
+            counts[p.name] = P(*lead)
+        return data, counts
+
+    def _crop_probe_data(self, data):
+        """Gathered neuron-sharded buffers carry padded lanes; crop them."""
+        return {p.name: (data[p.name][..., : p.n]
+                         if self._probe_sharded(p) else data[p.name])
+                for p in self.probes}
+
+    def _step_count(self, state: SimState) -> jax.Array:
+        return jnp.int32(jnp.round(state.t / jnp.float32(self.dt)))
 
     # ------------------------------------------------------------------
     # compiled entry points (cached like CompiledModel)
@@ -383,35 +642,45 @@ class ShardedEngine:
                 syn=self._squeeze_syn(state.syn), t=state.t, key=state.key,
                 finite=state.finite)
             gs = dict(zip(keys, vals))
+            start = self._step_count(state)
+            bufs0, caps = self._probe_init_local(n_steps)
 
-            def body(carry, stim_t):
-                st, counts = carry
+            def body(carry, xs):
+                i, stim_t = xs
+                st, counts, bufs = carry
                 st2, spk = self._local_step(st, blocks, pn_params, gs,
                                             stim=stim_t)
                 counts = {k: counts[k] + spk[k] for k in counts}
-                return (st2, counts), (spk if record_raster else None)
+                bufs = self._probe_write_local(bufs, caps, start, i, st2,
+                                               spk, blocks)
+                return (st2, counts, bufs), (spk if record_raster else None)
 
             counts0 = {name: jnp.zeros((self._shard[name],), jnp.int32)
                        for name in self.net.populations}
-            (st2, counts), raster = jax.lax.scan(
-                body, (state, counts0), stim if stim_keys else None,
-                length=n_steps)
+            xs = (jnp.arange(n_steps, dtype=jnp.int32),
+                  stim if stim_keys else None)
+            (st2, counts, bufs), raster = jax.lax.scan(
+                body, (state, counts0, bufs0), xs, length=n_steps)
+            pdata, pcounts = self._probe_finalize_local(bufs, caps, start,
+                                                        n_steps)
             st2 = st2.__class__(
                 neurons=st2.neurons, spikes=st2.spikes,
                 prev_above=st2.prev_above,
                 syn=self._unsqueeze_syn(st2.syn), t=st2.t, key=st2.key,
                 finite=self._combine_finite(st2.finite))
-            return st2, counts, raster
+            return st2, counts, raster, pdata, pcounts
 
         ax = self.axis
         counts_specs = {name: P(ax) for name in self.net.populations}
         raster_specs = ({name: P(None, ax) for name in self.net.populations}
                         if record_raster else None)
+        pdata_specs, pcount_specs = self._probe_out_specs()
         return self._shard_map(
             local_fn,
             in_specs=(*self._in_specs(), tuple(P() for _ in keys),
                       {k: P() for k in stim_keys}),
-            out_specs=(self._state_specs, counts_specs, raster_specs))
+            out_specs=(self._state_specs, counts_specs, raster_specs,
+                       pdata_specs, pcount_specs))
 
     def run(self, n_steps: int,
             gscales: Optional[Mapping[str, jax.Array]] = None,
@@ -436,7 +705,7 @@ class ShardedEngine:
                                                         record_raster,
                                                         stim_keys)
         vals = tuple(jnp.asarray(gscales[k], jnp.float32) for k in keys)
-        st2, counts, raster = self._run_cache[cache_key](
+        st2, counts, raster, pdata, pcounts = self._run_cache[cache_key](
             state, self._blocks, self._pn_params, vals, stim)
         pops = self.net.populations
         counts = {k: v[: pops[k].n] for k, v in counts.items()}
@@ -444,9 +713,11 @@ class ShardedEngine:
         rates = {k: jnp.mean(v) / t_sec for k, v in counts.items()}
         if record_raster:
             raster = {k: v[:, : pops[k].n] for k, v in raster.items()}
+        rec = Recordings(data=self._crop_probe_data(pdata), counts=pcounts)
         return RunResult(state=st2, spike_counts=counts, rates_hz=rates,
                          finite=st2.finite,
-                         raster=raster if record_raster else None)
+                         raster=raster if record_raster else None,
+                         recordings=rec)
 
     def _make_step(self, keys: Tuple[str, ...],
                    stim_keys: Tuple[str, ...] = ()):
@@ -504,36 +775,47 @@ class ShardedEngine:
                 syn=self._squeeze_syn(state.syn), t=state.t, key=state.key,
                 finite=state.finite)
 
+            start = self._step_count(state)
+
             def one(v):
                 gs = {n: v for n in names}
+                bufs0, caps = self._probe_init_local(n_steps)
 
-                def body(carry, _):
-                    st, counts = carry
+                def body(carry, i):
+                    st, counts, bufs = carry
                     st2, spk = self._local_step(st, blocks, pn_params, gs)
                     counts = {k: counts[k] + spk[k] for k in counts}
-                    return (st2, counts), None
+                    bufs = self._probe_write_local(bufs, caps, start, i,
+                                                   st2, spk, blocks)
+                    return (st2, counts, bufs), None
 
                 counts0 = {name: jnp.zeros((self._shard[name],), jnp.int32)
                            for name in self.net.populations}
-                (st2, counts), _ = jax.lax.scan(
-                    body, (state, counts0), None, length=n_steps)
-                return counts, st2.finite
+                (st2, counts, bufs), _ = jax.lax.scan(
+                    body, (state, counts0, bufs0),
+                    jnp.arange(n_steps, dtype=jnp.int32), length=n_steps)
+                pdata, pcounts = self._probe_finalize_local(
+                    bufs, caps, start, n_steps)
+                return counts, st2.finite, pdata, pcounts
 
-            counts, finite = jax.vmap(one)(vals)
-            return counts, self._combine_finite(finite)
+            counts, finite, pdata, pcounts = jax.vmap(one)(vals)
+            return counts, self._combine_finite(finite), pdata, pcounts
 
         ax = self.axis
+        pdata_specs, pcount_specs = self._probe_out_specs(lead=(None,))
         return self._shard_map(
             local_fn,
             in_specs=(*self._in_specs(), P()),
             out_specs=({name: P(None, ax)
-                        for name in self.net.populations}, P()))
+                        for name in self.net.populations}, P(),
+                       pdata_specs, pcount_specs))
 
     def sweep_gscale(self, names: Sequence[str], values, n_steps: int,
                      state: Optional[SimState] = None):
         """Vmapped gscale sweep inside shard_map: candidates on the batch
         dimension, neurons on the mesh.  Returns (values, rates, finite,
-        counts) matching CompiledModel.sweep_gscale semantics."""
+        counts, recordings) matching CompiledModel.sweep_gscale
+        semantics (recordings leaves carry a leading candidate axis)."""
         names = tuple(names)
         self._validate_gscales({n: 1.0 for n in names})
         if state is None:
@@ -542,13 +824,14 @@ class ShardedEngine:
         cache_key = (tuple(names), n_steps)
         if cache_key not in self._sweep_cache:
             self._sweep_cache[cache_key] = self._make_sweep(n_steps, names)
-        counts, finite = self._sweep_cache[cache_key](
+        counts, finite, pdata, pcounts = self._sweep_cache[cache_key](
             state, self._blocks, self._pn_params, values)
         pops = self.net.populations
         counts = {k: v[:, : pops[k].n] for k, v in counts.items()}
         t_sec = n_steps * self.dt * 1e-3
         rates = {k: jnp.mean(v, axis=1) / t_sec for k, v in counts.items()}
-        return values, rates, finite, counts
+        rec = Recordings(data=self._crop_probe_data(pdata), counts=pcounts)
+        return values, rates, finite, counts, rec
 
     # ------------------------------------------------------------------
     # streaming / serving: a leading stream axis over independent sims
@@ -593,10 +876,12 @@ class ShardedEngine:
                     prev_above=st.prev_above,
                     syn=self._squeeze_syn(st.syn), t=st.t, key=st.key,
                     finite=st.finite)
+                start = self._step_count(st)
+                bufs0, caps = self._probe_init_local(n_steps, serving=True)
 
                 def body(carry, xs):
                     t_idx, stim_t = xs
-                    st, counts = carry
+                    st, counts, bufs = carry
                     st2, spk = self._local_step(st, blocks, pn_params, gs,
                                                 stim=stim_t)
                     act = t_idx < left
@@ -604,28 +889,35 @@ class ShardedEngine:
                                        st2, st)
                     spk = {k: v & act for k, v in spk.items()}
                     counts = {k: counts[k] + spk[k] for k in counts}
-                    return (st2, counts), (spk if record_raster else None)
+                    bufs = self._probe_write_local(bufs, caps, start,
+                                                   t_idx, st2, spk,
+                                                   blocks, gate=act)
+                    return (st2, counts, bufs), (spk if record_raster
+                                                 else None)
 
                 counts0 = {name: jnp.zeros((self._shard[name],), jnp.int32)
                            for name in self.net.populations}
                 xs = (jnp.arange(n_steps, dtype=jnp.int32),
                       st_stim if stim_keys else None)
-                (st2, counts), raster = jax.lax.scan(
-                    body, (st, counts0), xs, length=n_steps)
+                (st2, counts, bufs), raster = jax.lax.scan(
+                    body, (st, counts0, bufs0), xs, length=n_steps)
+                pdata, pcounts = self._probe_finalize_local(
+                    bufs, caps, start, jnp.minimum(left, n_steps),
+                    serving=True)
                 st2 = st2.__class__(
                     neurons=st2.neurons, spikes=st2.spikes,
                     prev_above=st2.prev_above,
                     syn=self._unsqueeze_syn(st2.syn), t=st2.t, key=st2.key,
                     finite=st2.finite)
-                return st2, counts, raster
+                return st2, counts, raster, pdata, pcounts
 
-            st2, counts, raster = jax.vmap(one_stream)(state, stim,
-                                                       steps_left)
+            st2, counts, raster, pdata, pcounts = jax.vmap(one_stream)(
+                state, stim, steps_left)
             st2 = st2.__class__(
                 neurons=st2.neurons, spikes=st2.spikes,
                 prev_above=st2.prev_above, syn=st2.syn, t=st2.t,
                 key=st2.key, finite=self._combine_finite(st2.finite))
-            return st2, counts, raster
+            return st2, counts, raster, pdata, pcounts
 
         ax = self.axis
         stream_specs = self._stream_state_specs()
@@ -633,12 +925,14 @@ class ShardedEngine:
         raster_specs = ({name: P(None, None, ax)
                          for name in self.net.populations}
                         if record_raster else None)
+        pdata_specs, pcount_specs = self._probe_out_specs(lead=(None,))
         return self._shard_map(
             local_fn,
             in_specs=(stream_specs, self._block_specs, self._pn_specs,
                       tuple(P() for _ in keys), {k: P() for k in stim_keys},
                       P()),
-            out_specs=(stream_specs, counts_specs, raster_specs))
+            out_specs=(stream_specs, counts_specs, raster_specs,
+                       pdata_specs, pcount_specs))
 
     def serve_chunk(self, state: SimState, stim: Mapping[str, jax.Array],
                     steps_left: jax.Array, n_steps: int,
@@ -647,7 +941,9 @@ class ShardedEngine:
         """Advance every stream slot by up to n_steps under shard_map:
         streams on the vmap axis, neurons on the mesh.  Semantics match
         Simulator.serve_chunk (per-slot steps_left masking, masked lanes
-        exact no-ops); outputs are cropped to real neurons."""
+        exact no-ops); outputs are cropped to real neurons.  Returns
+        (state, counts, raster, recordings) with a leading stream axis on
+        every recordings leaf."""
         gscales = dict(gscales or {})
         self._validate_gscales(gscales)
         self._validate_stim(stim)
@@ -660,17 +956,56 @@ class ShardedEngine:
             self._serve_cache[cache_key] = self._make_serve(
                 n_steps, keys, stim_keys, record_raster)
         vals = tuple(jnp.asarray(gscales[k], jnp.float32) for k in keys)
-        st2, counts, raster = self._serve_cache[cache_key](
+        st2, counts, raster, pdata, pcounts = self._serve_cache[cache_key](
             state, self._blocks, self._pn_params, vals, stim, steps_left)
         pops = self.net.populations
         counts = {k: v[:, : pops[k].n] for k, v in counts.items()}
         if record_raster:
             raster = {k: v[:, :, : pops[k].n] for k, v in raster.items()}
-        return st2, counts, (raster if record_raster else None)
+        rec = Recordings(data=self._crop_probe_data(pdata), counts=pcounts)
+        return st2, counts, (raster if record_raster else None), rec
+
+    # ------------------------------------------------------------------
+    # on-demand custom updates (one shard_map'd program per update name)
+    # ------------------------------------------------------------------
+    def custom_update(self, state: SimState, name: str) -> SimState:
+        """Run one declared custom update on demand against a sharded
+        state; reductions execute inside shard_map (psum/pmax across the
+        mesh, per-post reductions device-local)."""
+        if name not in self.custom_updates:
+            raise ValueError(
+                f"unknown custom update {name!r}; declared updates: "
+                f"{sorted(self.custom_updates)}")
+        if name not in self._custom_cache:
+            cu = self.custom_updates[name]
+
+            def local_fn(state, blocks, pn_params):
+                blocks = {k: self._squeeze_blocks(v)
+                          for k, v in blocks.items()}
+                st = state.__class__(
+                    neurons=state.neurons, spikes=state.spikes,
+                    prev_above=state.prev_above,
+                    syn=self._squeeze_syn(state.syn), t=state.t,
+                    key=state.key, finite=state.finite)
+                st2 = self._apply_custom_local(st, cu, jnp.bool_(True),
+                                               blocks, pn_params)
+                return st2.__class__(
+                    neurons=st2.neurons, spikes=st2.spikes,
+                    prev_above=st2.prev_above,
+                    syn=self._unsqueeze_syn(st2.syn), t=st2.t, key=st2.key,
+                    finite=self._combine_finite(st2.finite))
+
+            self._custom_cache[name] = self._shard_map(
+                local_fn, in_specs=self._in_specs(),
+                out_specs=self._state_specs)
+        return self._custom_cache[name](state, self._blocks,
+                                        self._pn_params)
 
     def memory_report(self) -> List[dict]:
         """Per-group sharded footprint next to the paper's eq-(1)/(2)
-        elements: what one device actually holds."""
+        elements: what one device actually holds (connectivity block,
+        dendritic-ring shard, dynamic state)."""
+        D = self.n_shards
         out = []
         for g in self.net.synapses:
             rep = g.memory_report()
@@ -680,6 +1015,9 @@ class ShardedEngine:
             else:
                 local = int(blk["g"].shape[1] * blk["g"].shape[2])
             rep["local_elements_per_device"] = local
-            rep["n_shards"] = self.n_shards
+            rep["ring_elements_per_device"] = (
+                g.ring_slots * (self._npad[g.post] // D)
+                if g.needs_ring else 0)
+            rep["n_shards"] = D
             out.append(rep)
         return out

@@ -1,0 +1,15 @@
+"""Named declaration/build-time errors for the SNN front-end.
+
+`SpecError` historically lived in `repro.core.snn.spec` (which re-exports it
+for compatibility); it sits in its own leaf module so the probe and
+custom-update machinery (imported *by* spec) can raise it without an import
+cycle.
+"""
+
+from __future__ import annotations
+
+__all__ = ["SpecError"]
+
+
+class SpecError(ValueError):
+    """A ModelSpec declaration or build-time validation failure."""

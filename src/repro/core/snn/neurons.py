@@ -8,6 +8,12 @@ the same way (that is the point of the code-generation approach).
 
 Units follow GeNN: time in ms, voltages in mV, conductances in uS, currents
 in nA, capacitance in nF.
+
+Every state variable declared here (e.g. Izhikevich's ``V``/``U``, the HH
+gates ``m``/``h``/``n``, Poisson's ``timeToSpike``) is recordable with a
+probe — ``spec.probe(name, population, var, ...)`` — as are spike events
+via the reserved variable name ``"spikes"``; population custom updates may
+rewrite them (``spec.add_custom_update``).  See docs/API.md "Probes".
 """
 
 from __future__ import annotations

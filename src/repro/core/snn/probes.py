@@ -1,0 +1,351 @@
+"""Probes: first-class device-resident recording of simulation state.
+
+A probe declares that one state variable (any neuron / postsynaptic /
+weight-update state var, the plastic conductance matrix, or spike events)
+is sampled into a device-resident strided ring buffer while the simulation
+scans — GeNN's spike/variable recording, generalized:
+
+    spec.probe("kc_v", "KC", "V", every=5)            # strided
+    spec.probe("kc_last", "KC", "V", window=100)      # last 100 samples
+    spec.probe("kc_peak", "KC", "V", reduce="max")    # scalar per sample
+    spec.probe("raster", "KC", "spikes")              # the old record_raster
+
+`run` / `sweep_gscale` / `serve_chunk` all return a unified `Recordings`
+pytree keyed by probe name (replacing the ad-hoc ``record_raster`` flag,
+which survives as a deprecation shim).  Sampling happens *after* each step
+(so a spike probe with ``every=1`` reproduces the legacy raster bit for
+bit) and is scheduled on the simulation's global step counter
+(``round(t/dt)``), so a served stream's samples line up with the offline
+oracle across chunk boundaries.
+
+Buffer contract: a probe's buffer holds ``capacity`` sample rows
+(``window`` when set, else ``ceil(n_steps/every)``); samples are written
+round-robin and `finalize` returns them in chronological order with the
+number of valid rows (`Recordings.counts`).  Unfilled tail rows are zeros.
+
+Sharding: per-neuron-shaped probes store shard-local rows that are gathered
+on exit (the buffer shards along the neuron axis like the dendritic ring);
+*reduced* probes gather the full vector first and apply the identical
+reduction, so reduced samples are bit-exact against the host build.
+Synapse-matrix reductions combine per-device partials with psum/pmax —
+exact for max/min, correct to float rounding for sum/mean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.snn.errors import SpecError
+
+__all__ = ["ProbeSpec", "ResolvedProbe", "Recordings", "REDUCE_OPS",
+           "resolve_probes", "validate_probe_scalars", "capacity",
+           "probe_base", "write_sample", "finalize", "vector_reduce",
+           "masked_reduce"]
+
+REDUCE_OPS = ("sum", "mean", "max", "min")
+
+# variable kinds a probe can target; "matrix" kinds are per-synapse shaped
+# and must declare a reduction (there is no canonical cross-device layout
+# for raw [n_pre, max_conn] blocks)
+_MATRIX_KINDS = ("g", "syn")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSpec:
+    """A probe as declared on the ModelSpec (unresolved)."""
+
+    name: str
+    target: str
+    var: str
+    every: int = 1
+    window: Optional[int] = None
+    reduce: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedProbe:
+    """A probe bound to a built Network.
+
+    kind:    "population" | "group"
+    varkind: "neuron" | "spikes" | "psm" | "wu_pre" | "wu_post" | "g" | "syn"
+    n:       full sample length for vector-shaped probes (None for matrix)
+    denom:   mean denominator (population size / valid synapse count)
+    """
+
+    name: str
+    kind: str
+    target: str
+    var: str
+    varkind: str
+    every: int
+    window: Optional[int]
+    reduce: Optional[str]
+    n: Optional[int]
+    denom: float
+
+    @property
+    def dtype(self):
+        if self.reduce is None and self.varkind == "spikes":
+            return jnp.bool_
+        return jnp.float32
+
+    def sample_shape(self) -> Tuple[int, ...]:
+        """Full (unsharded) shape of one sample row."""
+        return () if self.reduce is not None else (self.n,)
+
+    def elements_per_sample(self) -> int:
+        return 1 if self.reduce is not None else int(self.n)
+
+
+def _group_vars(group) -> Dict[str, str]:
+    """var name -> varkind for everything probe-able on a synapse group."""
+    out = {k: "psm" for k in group.psm.state}
+    out.update({k: "wu_pre" for k in group.wum.pre_state})
+    out.update({k: "wu_post" for k in group.wum.post_state})
+    out.update({k: "syn" for k in group.wum.syn_state})
+    out["g"] = "g"
+    return out
+
+
+def validate_probe_scalars(name: str, every, window, reduce) -> None:
+    """Shared name/every/window/reduce validation — the single source of
+    truth for both the eager ModelSpec.probe check and resolve_probes
+    (direct Simulator/engine construction), so the rules cannot drift."""
+    if not name or not isinstance(name, str):
+        raise SpecError(
+            f"probe name must be a non-empty string, got {name!r}")
+    where = f"probe {name!r}"
+    if not isinstance(every, int) or isinstance(every, bool) or every <= 0:
+        raise SpecError(f"{where}: every must be a positive int, got "
+                        f"{every!r}")
+    if window is not None and (not isinstance(window, int)
+                               or isinstance(window, bool) or window <= 0):
+        raise SpecError(f"{where}: window must be a positive int or "
+                        f"None, got {window!r}")
+    if reduce is not None and reduce not in REDUCE_OPS:
+        raise SpecError(f"{where}: unknown reduce {reduce!r}; valid "
+                        f"reductions: {list(REDUCE_OPS)}")
+
+
+def resolve_probes(specs, net) -> Tuple[ResolvedProbe, ...]:
+    """Validate probe declarations against a built Network (SpecError)."""
+    groups = {g.name: g for g in net.synapses}
+    seen = set()
+    out = []
+    for p in specs:
+        validate_probe_scalars(p.name, p.every, p.window, p.reduce)
+        if p.name in seen:
+            raise SpecError(f"duplicate probe name {p.name!r}")
+        seen.add(p.name)
+        where = f"probe {p.name!r}"
+        if p.target in net.populations:
+            pop = net.populations[p.target]
+            valid = sorted(pop.model.state) + ["spikes"]
+            if p.var == "spikes":
+                varkind = "spikes"
+            elif p.var in pop.model.state:
+                varkind = "neuron"
+            else:
+                raise SpecError(
+                    f"{where}: population {p.target!r} (model "
+                    f"{pop.model.name!r}) has no state variable {p.var!r}; "
+                    f"valid variables: {valid}")
+            out.append(ResolvedProbe(
+                name=p.name, kind="population", target=p.target, var=p.var,
+                varkind=varkind, every=p.every, window=p.window,
+                reduce=p.reduce, n=pop.n, denom=float(pop.n)))
+            continue
+        if p.target in groups:
+            g = groups[p.target]
+            gvars = _group_vars(g)
+            if p.var not in gvars:
+                raise SpecError(
+                    f"{where}: synapse group {p.target!r} has no state "
+                    f"variable {p.var!r}; valid variables: "
+                    f"{sorted(gvars)}")
+            varkind = gvars[p.var]
+            if varkind == "g" and not g.plastic:
+                raise SpecError(
+                    f"{where}: 'g' on synapse group {p.target!r} is "
+                    "constant (no learn_code and no custom update writes "
+                    "it); probe a plastic group or declare a custom "
+                    "update first")
+            if varkind in _MATRIX_KINDS:
+                if p.reduce is None:
+                    raise SpecError(
+                        f"{where}: {p.var!r} is per-synapse shaped "
+                        f"[n_pre, max_conn]; synapse-matrix probes must "
+                        f"declare reduce= one of {list(REDUCE_OPS)}")
+                n = None
+                denom = float(
+                    jax.device_get(g.ell.valid).sum())
+            else:
+                n = (g.ell.n_pre if varkind == "wu_pre" else g.ell.n_post)
+                denom = float(n)
+            out.append(ResolvedProbe(
+                name=p.name, kind="group", target=p.target, var=p.var,
+                varkind=varkind, every=p.every, window=p.window,
+                reduce=p.reduce, n=n, denom=denom))
+            continue
+        raise SpecError(
+            f"{where}: unknown target {p.target!r}; valid targets: "
+            f"populations {sorted(net.populations)}, synapse groups "
+            f"{sorted(groups)}")
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# scheduling / buffer arithmetic (shared by Simulator and ShardedEngine)
+# ---------------------------------------------------------------------------
+
+def capacity(probe: ResolvedProbe, n_steps: int, serving: bool = False) -> int:
+    """Static buffer row count for an up-to-n_steps scan.  The serving
+    path streams every sample per chunk, so `window` does not cap it
+    (clients window the stitched stream)."""
+    cap = int(math.ceil(n_steps / probe.every))
+    if probe.window is not None and not serving:
+        cap = probe.window
+    return max(cap, 1)
+
+
+def probe_base(probe: ResolvedProbe, start):
+    """Samples already taken before this scan (global schedule: a sample
+    fires after a step when round(t/dt) % every == 0)."""
+    return start // probe.every
+
+
+def sample_slot(probe: ResolvedProbe, start, base, i, cap: int):
+    """(active, slot) for scan step i (0-based within this scan)."""
+    elapsed = start + i + 1
+    active = (elapsed % probe.every) == 0
+    idx = elapsed // probe.every - 1 - base
+    return active, idx % cap
+
+
+def write_sample(buf, slot, active, val):
+    """Masked ring write: one row read + one row write per step."""
+    prev = buf[slot]
+    return buf.at[slot].set(jnp.where(active, val, prev))
+
+
+def finalize(buf, start, n_eff, probe: ResolvedProbe, cap: int,
+             use_window: bool = True):
+    """(chronological buffer, valid row count) after a scan of n_eff steps
+    (n_eff may be traced — the serving path clamps per slot).  The serving
+    path passes use_window=False: chunk buffers are plain strided runs."""
+    base = probe_base(probe, start)
+    total = (start + n_eff) // probe.every - base
+    count = jnp.minimum(total, cap).astype(jnp.int32)
+    if probe.window is None or not use_window:
+        return buf, count
+    shift = jnp.where(total >= cap, total % cap, 0)
+    idx = (jnp.arange(cap) + shift) % cap
+    return jnp.take(buf, idx, axis=0), count
+
+
+# ---------------------------------------------------------------------------
+# reductions
+# ---------------------------------------------------------------------------
+
+def vector_reduce(val, op: str, denom: float):
+    """Reduce a full-size vector sample to a scalar (identical op on host
+    and sharded paths — the engine gathers the full vector first, so the
+    result is bit-exact across device counts)."""
+    val = jnp.asarray(val, jnp.float32)
+    if op == "sum":
+        return jnp.sum(val)
+    if op == "mean":
+        return jnp.sum(val) / jnp.float32(denom)
+    if op == "max":
+        return jnp.max(val)
+    return jnp.min(val)
+
+
+def reduce_neutral(op: str):
+    return {"sum": 0.0, "mean": 0.0, "max": -jnp.inf, "min": jnp.inf}[op]
+
+
+def masked_reduce(val, mask, op: str, denom: float):
+    """Reduce a masked synapse matrix to a scalar (invalid slots neutral)."""
+    val = jnp.where(mask, jnp.asarray(val, jnp.float32),
+                    reduce_neutral(op))
+    if op == "sum":
+        return jnp.sum(val)
+    if op == "mean":
+        return jnp.sum(val) / jnp.float32(denom)
+    if op == "max":
+        return jnp.max(val)
+    return jnp.min(val)
+
+
+def host_sample(probe: ResolvedProbe, groups, state, spikes):
+    """Extract one (possibly reduced) sample from a post-step SimState on
+    the single-device path."""
+    if probe.varkind == "neuron":
+        val = state.neurons[probe.target][probe.var]
+    elif probe.varkind == "spikes":
+        val = spikes[probe.target]
+    elif probe.varkind == "psm":
+        val = state.syn[probe.target].psm[probe.var]
+    elif probe.varkind == "wu_pre":
+        val = state.syn[probe.target].wu_pre[probe.var]
+    elif probe.varkind == "wu_post":
+        val = state.syn[probe.target].wu_post[probe.var]
+    elif probe.varkind == "g":
+        val = state.syn[probe.target].g
+    else:  # syn
+        val = state.syn[probe.target].syn[probe.var]
+    if probe.reduce is None:
+        return val
+    if probe.varkind in _MATRIX_KINDS:
+        return masked_reduce(val, groups[probe.target].ell.valid,
+                             probe.reduce, probe.denom)
+    return vector_reduce(val, probe.reduce, probe.denom)
+
+
+# ---------------------------------------------------------------------------
+# the unified result container
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Recordings:
+    """Probe outputs, keyed by probe name.
+
+    data[name]:   [capacity, ...sample shape] (chronological; a leading
+                  candidate/stream axis on sweep/serving paths)
+    counts[name]: int32 valid-row count (same leading axes)
+    """
+
+    data: Dict[str, jax.Array]
+    counts: Dict[str, jax.Array]
+
+    def __getitem__(self, name):
+        return self.data[name]
+
+    def __contains__(self, name):
+        return name in self.data
+
+    def __bool__(self):
+        return bool(self.data)
+
+    def keys(self):
+        return self.data.keys()
+
+    def items(self):
+        return self.data.items()
+
+    def count(self, name):
+        return self.counts[name]
+
+    def tree_flatten(self):
+        return ((self.data, self.counts), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)

@@ -49,7 +49,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import codegen
+from repro.core.snn import custom_updates as CU
+from repro.core.snn import probes as PR
 from repro.core.snn.network import Network
+from repro.core.snn.probes import Recordings
+from repro.core.snn.synapses import SynapseState
 
 __all__ = ["Simulator", "SimState", "RunResult"]
 
@@ -81,11 +85,12 @@ class RunResult:
     spike_counts: Dict[str, jax.Array]   # per-neuron spike totals
     rates_hz: Dict[str, jax.Array]       # population mean rate
     finite: jax.Array
-    raster: object = None                # optional [steps, n] bool per pop
+    raster: object = None                # legacy [steps, n] bool per pop
+    recordings: object = None            # Recordings keyed by probe name
 
     def tree_flatten(self):
         return ((self.state, self.spike_counts, self.rates_hz, self.finite,
-                 self.raster), ())
+                 self.raster, self.recordings), ())
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -93,7 +98,8 @@ class RunResult:
 
 
 class Simulator:
-    def __init__(self, net: Network, dt: float = 0.5, seed: int = 0):
+    def __init__(self, net: Network, dt: float = 0.5, seed: int = 0,
+                 probes=(), custom_updates=()):
         self.net = net
         self.dt = float(dt)
         self.seed = seed
@@ -107,7 +113,13 @@ class Simulator:
             for name in net.populations
         }
         self._group_names = {g.name for g in net.synapses}
+        self._groups = {g.name: g for g in net.synapses}
         self._run_jit_cache: Dict[tuple, object] = {}
+        # --- probes + custom updates (ModelSpec passes these resolved) ---
+        self.probes = tuple(probes)
+        self.custom_updates = {cu.name: cu for cu in custom_updates}
+        self._scheduled = [cu for cu in custom_updates
+                           if cu.every is not None]
 
     def _validate_gscales(
             self, gscales: Optional[Mapping[str, jax.Array]]) -> None:
@@ -209,7 +221,126 @@ class Simulator:
         new_state = SimState(
             neurons=new_neurons, spikes=new_spikes, prev_above=new_prev,
             syn=new_syn, t=state.t + dt, key=key, finite=finite)
+        new_state = self._run_scheduled_updates(new_state)
         return new_state, new_spikes
+
+    # ------------------------------------------------------------------
+    # custom updates (on-demand + scheduled)
+    # ------------------------------------------------------------------
+    def _run_scheduled_updates(self, state: SimState) -> SimState:
+        """Apply every `every=n` custom update whose step count is due.
+        The trigger is the global step counter round(t/dt), so scheduling
+        is consistent across run/step/serving (a served stream fires at
+        the same absolute steps as the offline oracle)."""
+        if not self._scheduled:
+            return state
+        elapsed = jnp.int32(jnp.round(state.t / jnp.float32(self.dt)))
+        for cu in self._scheduled:
+            trig = (elapsed % cu.every) == 0
+            state = self._apply_custom(state, cu, trig)
+        return state
+
+    def _apply_custom(self, state: SimState, cu, trig) -> SimState:
+        """Apply one custom update, masked by the (scalar bool) trigger.
+        Written arrays are folded into the carried NaN-guard flag (an
+        update that divides by a zero reduction must trip `finite` just
+        like an over-scaled conductance does)."""
+        ext = {"dt": jnp.float32(self.dt), "t": state.t}
+        if cu.kind == "group":
+            grp = self._groups[cu.target]
+            st = state.syn[cu.target]
+            g_arr = st.g if st.g is not None else jnp.asarray(grp.ell.g)
+            cu_vars = {"g": g_arr, **st.syn}
+            red = {
+                rname: CU.group_reduce_host(op, cu_vars[var], grp.ell,
+                                            axis, cu.denom_all)
+                for rname, (op, var, axis) in cu.reduce.items()}
+            new = cu.fn(cu_vars, cu.params, red, ext)
+            valid = grp.ell.valid
+
+            def sel(name, old):
+                if name not in cu.writes:
+                    return old
+                return jnp.where(trig, jnp.where(valid, new[name], old),
+                                 old)
+
+            ok = jnp.ones((), bool)
+            for name in cu.writes:
+                ok = ok & jnp.all(jnp.isfinite(
+                    jnp.where(valid, new[name], 0.0)))
+            finite = state.finite & jnp.where(trig, ok, True)
+            new_syn = dict(state.syn)
+            new_syn[cu.target] = SynapseState(
+                psm=st.psm, wu_pre=st.wu_pre, wu_post=st.wu_post,
+                g=(sel("g", g_arr) if st.g is not None else None),
+                syn={k: sel(k, v) for k, v in st.syn.items()},
+                dendritic=st.dendritic, cursor=st.cursor)
+            return SimState(neurons=state.neurons, spikes=state.spikes,
+                            prev_above=state.prev_above, syn=new_syn,
+                            t=state.t, key=state.key, finite=finite)
+        # population target
+        cu_vars = dict(state.neurons[cu.target])
+        red = {rname: CU.pop_reduce(op, cu_vars[var], cu.denom_all)
+               for rname, (op, var, _axis) in cu.reduce.items()}
+        new = cu.fn(cu_vars, cu.params, red, ext)
+        ok = jnp.ones((), bool)
+        for name in cu.writes:
+            ok = ok & jnp.all(jnp.isfinite(new[name]))
+        finite = state.finite & jnp.where(trig, ok, True)
+        new_neurons = dict(state.neurons)
+        new_neurons[cu.target] = {
+            k: (jnp.where(trig, new[k], v) if k in cu.writes else v)
+            for k, v in state.neurons[cu.target].items()}
+        return SimState(neurons=new_neurons, spikes=state.spikes,
+                        prev_above=state.prev_above, syn=state.syn,
+                        t=state.t, key=state.key, finite=finite)
+
+    def custom_update(self, state: SimState, name: str) -> SimState:
+        """Run one declared custom update on demand (any `every`)."""
+        if name not in self.custom_updates:
+            raise ValueError(
+                f"unknown custom update {name!r}; declared updates: "
+                f"{sorted(self.custom_updates)}")
+        return self._apply_custom(state, self.custom_updates[name],
+                                  jnp.bool_(True))
+
+    # ------------------------------------------------------------------
+    # probe plumbing (shared by run and serve_chunk)
+    # ------------------------------------------------------------------
+    def _probe_init(self, n_steps: int, serving: bool = False):
+        """Preallocated device-resident ring buffers, one per probe."""
+        bufs, caps = {}, {}
+        for p in self.probes:
+            cap = PR.capacity(p, n_steps, serving=serving)
+            caps[p.name] = cap
+            bufs[p.name] = jnp.zeros((cap,) + p.sample_shape(), p.dtype)
+        return bufs, caps
+
+    def _probe_write(self, bufs, caps, start, i, state, spikes, gate=None):
+        """One post-step sampling pass (strided ring write per probe)."""
+        out = dict(bufs)
+        for p in self.probes:
+            base = PR.probe_base(p, start)
+            active, slot = PR.sample_slot(p, start, base, i, caps[p.name])
+            if gate is not None:
+                active = active & gate
+            val = PR.host_sample(p, self._groups, state, spikes)
+            out[p.name] = PR.write_sample(bufs[p.name], slot, active, val)
+        return out
+
+    def _probe_finalize(self, bufs, caps, start, n_eff,
+                        serving: bool = False) -> Recordings:
+        data, counts = {}, {}
+        for p in self.probes:
+            data[p.name], counts[p.name] = PR.finalize(
+                bufs[p.name], start, n_eff, p, caps[p.name],
+                use_window=not serving)
+        return Recordings(data=data, counts=counts)
+
+    def _step_count(self, state: SimState) -> jax.Array:
+        """Global step counter: probes and scheduled custom updates key
+        their schedule off it so serving chunks line up with offline runs."""
+        return jnp.int32(jnp.round(state.t / jnp.float32(self.dt)))
 
     # ------------------------------------------------------------------
     def run(
@@ -218,30 +349,39 @@ class Simulator:
         record_raster: bool = False,
         stim: Optional[Mapping[str, jax.Array]] = None,
     ) -> RunResult:
-        """Scan n_steps; returns spike statistics (and optionally rasters).
-        stim: population name -> [n_steps, n] external currents, one row
-        injected per step (the serving path's offline oracle)."""
+        """Scan n_steps; returns spike statistics, probe recordings (and
+        legacy rasters).  stim: population name -> [n_steps, n] external
+        currents, one row injected per step (the serving path's offline
+        oracle)."""
         self._validate_gscales(gscales)
         self._validate_stim(stim)
         stim = {k: jnp.asarray(v, jnp.float32) for k, v in (stim or {}).items()}
+        start = self._step_count(state)
+        bufs0, caps = self._probe_init(n_steps)
 
-        def body(carry, stim_t):
-            st, counts = carry
+        def body(carry, xs):
+            i, stim_t = xs
+            st, counts, bufs = carry
             st2, spk = self.step(st, gscales, stim=stim_t)
             counts = {k: counts[k] + spk[k] for k in counts}
+            bufs = self._probe_write(bufs, caps, start, i, st2, spk)
             out = spk if record_raster else None
-            return (st2, counts), out
+            return (st2, counts, bufs), out
 
         counts0 = {name: jnp.zeros((pop.n,), jnp.int32)
                    for name, pop in self.net.populations.items()}
-        (state2, counts), raster = jax.lax.scan(
-            body, (state, counts0), stim if stim else None, length=n_steps)
+        xs = (jnp.arange(n_steps, dtype=jnp.int32),
+              stim if stim else None)
+        (state2, counts, bufs), raster = jax.lax.scan(
+            body, (state, counts0, bufs0), xs, length=n_steps)
+        rec = self._probe_finalize(bufs, caps, start, n_steps)
 
         t_sec = n_steps * self.dt * 1e-3
         rates = {k: jnp.mean(v) / t_sec for k, v in counts.items()}
         return RunResult(state=state2, spike_counts=counts, rates_hz=rates,
                          finite=state2.finite,
-                         raster=raster if record_raster else None)
+                         raster=raster if record_raster else None,
+                         recordings=rec)
 
     # jit-compiled convenience wrapper (step count static) --------------
     def run_jit(self, n_steps: int, record_raster: bool = False):
@@ -284,10 +424,15 @@ class Simulator:
         min(steps_left[s], n_steps) steps; lanes at or past their budget are
         select-restored so idle/finished slots are exact no-ops.
 
-        Returns (new_state, counts, raster): counts maps population ->
-        [max_streams, n] spikes within the chunk (masked steps contribute
-        zero); raster maps population -> [max_streams, n_steps, n] when
-        record_raster (masked steps all-False), else None.
+        Returns (new_state, counts, raster, recordings): counts maps
+        population -> [max_streams, n] spikes within the chunk (masked
+        steps contribute zero); raster maps population ->
+        [max_streams, n_steps, n] when record_raster (masked steps
+        all-False), else None; recordings is a Recordings whose leaves
+        carry a leading stream axis (per-slot sample counts in
+        `.counts` — masked lanes take no samples).  Probe sampling keys
+        off each slot's global step counter, so stitched chunks are
+        bit-identical to the offline run's recordings.
         """
         self._validate_gscales(gscales)
         self._validate_stim(stim)
@@ -295,23 +440,31 @@ class Simulator:
         steps_left = jnp.asarray(steps_left, jnp.int32)
 
         def one_stream(st, st_stim, left):
+            start = self._step_count(st)
+            bufs0, caps = self._probe_init(n_steps, serving=True)
+
             def body(carry, xs):
                 t_idx, stim_t = xs
-                st, counts = carry
+                st, counts, bufs = carry
                 st2, spk = self.step(st, gscales, stim=stim_t)
                 act = t_idx < left
                 st2 = jax.tree.map(lambda a, b: jnp.where(act, a, b),
                                    st2, st)
                 spk = {k: v & act for k, v in spk.items()}
                 counts = {k: counts[k] + spk[k] for k in counts}
-                return (st2, counts), (spk if record_raster else None)
+                bufs = self._probe_write(bufs, caps, start, t_idx, st2,
+                                         spk, gate=act)
+                return (st2, counts, bufs), (spk if record_raster else None)
 
             counts0 = {name: jnp.zeros((pop.n,), jnp.int32)
                        for name, pop in self.net.populations.items()}
             xs = (jnp.arange(n_steps, dtype=jnp.int32),
                   st_stim if st_stim else None)
-            (st2, counts), raster = jax.lax.scan(
-                body, (st, counts0), xs, length=n_steps)
-            return st2, counts, raster
+            (st2, counts, bufs), raster = jax.lax.scan(
+                body, (st, counts0, bufs0), xs, length=n_steps)
+            rec = self._probe_finalize(bufs, caps, start,
+                                       jnp.minimum(left, n_steps),
+                                       serving=True)
+            return st2, counts, raster, rec
 
         return jax.vmap(one_stream)(state, stim, steps_left)

@@ -29,6 +29,7 @@ out (SpecError), not at first jit trace.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
@@ -36,14 +37,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codegen import (NeuronModel, PostsynapticModel,
-                                WeightUpdateModel)
+                                WeightUpdateModel, assigned_names)
+from repro.core.snn import custom_updates as CU
+from repro.core.snn import probes as PR
+from repro.core.snn.errors import SpecError
 from repro.core.snn.network import InputFn, Network
+from repro.core.snn.probes import ProbeSpec, Recordings
+from repro.core.snn.custom_updates import CustomUpdateSpec
 from repro.core.snn.simulator import RunResult, SimState, Simulator
 from repro.core.snn.synapses import Pulse, SynapseGroup
 from repro.sparse import formats as F
 
 __all__ = ["ModelSpec", "CompiledModel", "SweepResult", "SpecError",
-           "MAX_DELAY_STEPS"]
+           "Recordings", "MAX_DELAY_STEPS"]
 
 # weight initialization: scalar, or (rng, shape) -> array
 WeightInit = Union[None, float, int, Callable[..., np.ndarray]]
@@ -58,10 +64,6 @@ _REPRESENTATIONS = ("auto", "sparse", "dense")
 # an unbounded delay would silently allocate an arbitrarily large ring.
 # Delays above this bound are almost certainly a unit error (steps vs ms).
 MAX_DELAY_STEPS = 1024
-
-
-class SpecError(ValueError):
-    """A ModelSpec declaration or build-time validation failure."""
 
 
 @dataclasses.dataclass
@@ -111,6 +113,14 @@ class ModelSpec:
         self.name = name
         self.populations: Dict[str, NeuronPopSpec] = {}
         self.synapses: List[SynapsePopSpec] = []
+        self.probes: List[ProbeSpec] = []
+        self.custom_updates: List[CustomUpdateSpec] = []
+
+    def _declared_targets(self) -> Tuple[set, set]:
+        """(population names, concrete synapse group names) declared so
+        far — the namespace probes and custom updates address."""
+        groups = {n for s in self.synapses for n in s.group_names()}
+        return set(self.populations), groups
 
     # -- declaration ------------------------------------------------------
     def add_neuron_population(
@@ -293,6 +303,97 @@ class ModelSpec:
         self.synapses.append(spec)
         return spec
 
+    # -- observation / intervention ---------------------------------------
+    def probe(self, name: str, target: str, var: str, every: int = 1,
+              window: Optional[int] = None,
+              reduce: Optional[str] = None) -> ProbeSpec:
+        """Declare a recording probe on a population or synapse group.
+
+        target: a population name or a concrete synapse group name
+                (declare it first);
+        var:    any state variable of the target — a neuron state var or
+                ``"spikes"`` for populations; a postsynaptic /
+                weight-update trace var, ``"g"`` (plastic groups) or a
+                per-synapse var for groups;
+        every:  sample every k-th dt step (after the step);
+        window: keep only the last `window` samples (device-resident ring);
+        reduce: "sum" | "mean" | "max" | "min" — reduce each sample over
+                the neuron axis (mandatory for per-synapse-shaped vars).
+
+        `run`/`sweep_gscale`/`serve_chunk` return the samples in a
+        `Recordings` pytree keyed by probe name.
+        """
+        PR.validate_probe_scalars(name, every, window, reduce)
+        if any(p.name == name for p in self.probes):
+            raise SpecError(f"duplicate probe name {name!r}")
+        pops, groups = self._declared_targets()
+        if target not in pops and target not in groups:
+            multi = {s.name for s in self.synapses
+                     if len(s.post) > 1 and s.name == target}
+            hint = (f"; {target!r} is a multi-post synapse population — "
+                    f"probe one of its concrete groups "
+                    f"{[n for s in self.synapses if s.name == target for n in s.group_names()]}"
+                    if multi else "")
+            raise SpecError(
+                f"probe {name!r}: unknown target {target!r}; declared "
+                f"populations: {sorted(pops)}, synapse groups: "
+                f"{sorted(groups)}{hint}")
+        p = ProbeSpec(name=name, target=target, var=var, every=every,
+                      window=window, reduce=reduce)
+        self.probes.append(p)
+        return p
+
+    def add_custom_update(self, name: str, group: str, update_code: str,
+                          params: Optional[Mapping[str, float]] = None,
+                          reduce: Optional[Mapping[str, tuple]] = None,
+                          every: Optional[int] = None) -> CustomUpdateSpec:
+        """Declare a codegen'd custom update on a population or synapse
+        group (GeNN 4's CustomUpdate).
+
+        group:       target population or concrete synapse group name;
+        update_code: statements rewriting the target's state vars (``g`` /
+                     per-synapse vars for groups; model state vars for
+                     populations), AST-validated like every other snippet;
+        params:      update parameters (populations also read their model
+                     params);
+        reduce:      reductions computed before the code runs —
+                     ``{"w_sum": ("sum", "g", "post")}`` for groups
+                     (axis "pre" | "post" | "all"),
+                     ``{"v_max": ("max", "V")}`` for populations;
+        every:       run every n steps inside the scan; None = on demand
+                     only (``CompiledModel.custom_update(name, state)``).
+        """
+        CU.validate_update_scalars(name, every)
+        if any(cu.name == name for cu in self.custom_updates):
+            raise SpecError(f"duplicate custom update name {name!r}")
+        pops, groups = self._declared_targets()
+        if group not in pops and group not in groups:
+            raise SpecError(
+                f"custom update {name!r}: unknown target {group!r}; "
+                f"declared populations: {sorted(pops)}, synapse groups: "
+                f"{sorted(groups)}")
+        cu = CustomUpdateSpec(name=name, target=group,
+                              update_code=update_code,
+                              params=dict(params or {}),
+                              reduce=dict(reduce or {}), every=every)
+        self.custom_updates.append(cu)
+        return cu
+
+    def _mutable_groups(self) -> set:
+        """Synapse groups whose g a declared custom update writes (their
+        conductances must be state-resident)."""
+        _, groups = self._declared_targets()
+        out = set()
+        for cu in self.custom_updates:
+            if cu.target in groups:
+                try:
+                    writes = assigned_names(cu.update_code)
+                except SyntaxError:
+                    writes = set()
+                if "g" in writes:
+                    out.add(cu.target)
+        return out
+
     # -- build ------------------------------------------------------------
     def build(self, dt: float = 0.5, seed: int = 0, mesh=None,
               init: str = "host") -> "CompiledModel":
@@ -322,6 +423,7 @@ class ModelSpec:
             raise SpecError(f"model {self.name!r} declares no populations")
         rng = np.random.default_rng(seed)
         base_key = jax.random.PRNGKey(seed) if init == "device" else None
+        mutable = self._mutable_groups()
         net = Network(name=self.name)
         for pop in self.populations.values():
             net.add_population(pop.name, pop.model, pop.n,
@@ -398,25 +500,39 @@ class ModelSpec:
                     vv = mask
                     dv = (None if dd is None
                           else xp.where(mask, dd, 0).astype(xp.int32))
-                group = SynapseGroup(
-                    name=gname, pre=sp.pre, post=pname,
-                    ell=F.triple_to_ell(idx, gg, vv, n_p, delay=dv),
-                    representation=sp.representation,
-                    wum=sp.wum, psm=sp.psm,
-                    delay_steps=delay_steps,
-                    max_delay=(None if sp.delay is None
-                               else sp.delay.max_steps),
-                    sign=sp.sign)
+                try:
+                    # SynapseGroup owns the representation conflict rules
+                    # (incl. dense vs a custom update writing g)
+                    group = SynapseGroup(
+                        name=gname, pre=sp.pre, post=pname,
+                        ell=F.triple_to_ell(idx, gg, vv, n_p, delay=dv),
+                        representation=sp.representation,
+                        wum=sp.wum, psm=sp.psm,
+                        delay_steps=delay_steps,
+                        max_delay=(None if sp.delay is None
+                                   else sp.delay.max_steps),
+                        sign=sp.sign,
+                        mutable_g=gname in mutable)
+                except ValueError as e:
+                    raise SpecError(f"{where}: {e}") from None
                 net.add_synapse(group)
                 lo = hi
+
+        # resolve the observation/intervention surface against the built
+        # network (deep validation: vars, reductions, writability)
+        probes = PR.resolve_probes(self.probes, net)
+        custom = CU.resolve_custom_updates(self.custom_updates, net)
 
         engine = None
         if mesh is not None:
             from repro.core.snn.engine import ShardedEngine
-            engine = ShardedEngine(net, mesh, dt=dt, seed=seed)
-        return CompiledModel(spec=self, network=net,
-                             simulator=Simulator(net, dt=dt, seed=seed),
-                             engine=engine)
+            engine = ShardedEngine(net, mesh, dt=dt, seed=seed,
+                                   probes=probes, custom_updates=custom)
+        return CompiledModel(
+            spec=self, network=net,
+            simulator=Simulator(net, dt=dt, seed=seed, probes=probes,
+                                custom_updates=custom),
+            engine=engine)
 
 
 @dataclasses.dataclass
@@ -427,6 +543,7 @@ class SweepResult:
     rates_hz: Dict[str, jax.Array]         # pop -> [n_candidates]
     finite: jax.Array                      # [n_candidates] bool
     spike_counts: Dict[str, jax.Array]     # pop -> [n_candidates, n]
+    recordings: object = None              # Recordings, leading cand. axis
 
 
 class CompiledModel:
@@ -506,6 +623,14 @@ class CompiledModel:
         self.simulator._validate_gscales(out)
         return out
 
+    def _warn_record_raster(self) -> None:
+        warnings.warn(
+            "record_raster is deprecated: declare a probe instead "
+            "(spec.probe(name, population, 'spikes') reproduces the "
+            "raster bit for bit via run(...).recordings) — see the "
+            "migration table in docs/API.md",
+            DeprecationWarning, stacklevel=3)
+
     def run(self, n_steps: int,
             gscales: Optional[Mapping[str, jax.Array]] = None,
             state: Optional[SimState] = None,
@@ -516,7 +641,10 @@ class CompiledModel:
         keys, record_raster); gscale/stim *values* are traced, so sweeping
         values reuses one executable.  stim: population -> [n_steps, n]
         external currents injected one row per step — the offline oracle a
-        served stream is bit-exact against."""
+        served stream is bit-exact against.  Declared probes come back in
+        `RunResult.recordings`."""
+        if record_raster:
+            self._warn_record_raster()
         gscales = self._norm_gscales(gscales)
         stim = self._norm_stim(stim)
         if self.engine is not None:
@@ -548,10 +676,10 @@ class CompiledModel:
         requested = [group] if isinstance(group, str) else list(group)
         names = [g for r in requested for g in self._expand_group(r)]
         if self.engine is not None:
-            vals, rates, finite, counts = self.engine.sweep_gscale(
+            vals, rates, finite, counts, rec = self.engine.sweep_gscale(
                 names, values, n_steps, state)
             return SweepResult(values=vals, rates_hz=rates, finite=finite,
-                               spike_counts=counts)
+                               spike_counts=counts, recordings=rec)
         if state is None:
             state = self.init_state()
         values = jnp.atleast_1d(jnp.asarray(values, jnp.float32))
@@ -563,13 +691,15 @@ class CompiledModel:
             def _sweep(st, vals):
                 def one(gval):
                     res = sim.run(st, n_steps, {n: gval for n in names})
-                    return res.rates_hz, res.finite, res.spike_counts
+                    return (res.rates_hz, res.finite, res.spike_counts,
+                            res.recordings)
                 return jax.vmap(one)(vals)
 
             self._sweep_cache[cache_key] = _sweep
-        rates, finite, counts = self._sweep_cache[cache_key](state, values)
+        rates, finite, counts, rec = self._sweep_cache[cache_key](state,
+                                                                  values)
         return SweepResult(values=values, rates_hz=rates, finite=finite,
-                           spike_counts=counts)
+                           spike_counts=counts, recordings=rec)
 
     # -- streaming / serving ----------------------------------------------
     def init_stream_state(self, keys) -> SimState:
@@ -585,8 +715,11 @@ class CompiledModel:
                     record_raster: bool = False):
         """Advance every stream slot by up to n_steps (one serving chunk),
         jit-compiled and cached per (n_steps, gscale keys, stim pops,
-        record_raster).  See Simulator.serve_chunk for the masking
-        contract; SNNServer (repro.launch.snn_serve) drives this."""
+        record_raster).  Returns (state, counts, raster, recordings) —
+        see Simulator.serve_chunk for the masking contract; SNNServer
+        (repro.launch.snn_serve) drives this."""
+        if record_raster:
+            self._warn_record_raster()
         gscales = self._norm_gscales(gscales)
         stim = self._norm_stim(stim)
         steps_left = jnp.asarray(steps_left, jnp.int32)
@@ -617,8 +750,78 @@ class CompiledModel:
         return SNNServer(self, max_streams=max_streams, chunk=chunk,
                          **kwargs)
 
-    def memory_report(self) -> List[dict]:
-        return self.network.memory_report()
+    # -- custom updates ----------------------------------------------------
+    @property
+    def probes(self) -> Tuple:
+        """Resolved probes (declaration order)."""
+        return self.simulator.probes
+
+    @property
+    def custom_update_names(self) -> List[str]:
+        return sorted(self.simulator.custom_updates)
+
+    def custom_update(self, name: str,
+                      state: Optional[SimState] = None) -> SimState:
+        """Run one declared custom update on demand against `state`
+        (jit-compiled, cached per update name).  Scheduled (`every=n`)
+        updates also fire automatically inside run/sweep/serve scans;
+        this entry point is the in-loop intervention hook — e.g. weight
+        normalization between sweep rounds without rebuilding."""
+        if name not in self.simulator.custom_updates:
+            raise SpecError(
+                f"unknown custom update {name!r}; declared updates: "
+                f"{sorted(self.simulator.custom_updates)}")
+        if state is None:
+            state = self.init_state()
+        if self.engine is not None:
+            return self.engine.custom_update(state, name)
+        cache_key = ("custom_update", name)
+        if cache_key not in self._run_cache:
+            sim = self.simulator
+            self._run_cache[cache_key] = jax.jit(
+                lambda st: sim.custom_update(st, name))
+        return self._run_cache[cache_key](state)
+
+    def memory_report(self, n_steps: Optional[int] = None,
+                      max_streams: int = 1) -> List[dict]:
+        """Live-usage memory accounting: the paper's eq-(1)/(2) elements
+        per synapse group *plus* everything the runtime actually holds —
+        per-group dynamic state including the dendritic-delay ring,
+        per-population neuron state, probe buffers (pass `n_steps` to size
+        strided buffers), and the per-stream serving multiplier
+        (`max_streams` slots each carry a full copy of the dynamic
+        state)."""
+        out = [dict(rep) for rep in self.network.memory_report()]
+        stream_state = 0
+        for rep in out:
+            rep["kind"] = "synapse_group"
+            stream_state += rep["state_elements"]
+        for name, pop in self.network.populations.items():
+            n_state = (len(pop.model.state) + 1
+                       + (1 if pop.edge_spikes else 0)) * pop.n
+            stream_state += n_state
+            out.append({"name": name, "kind": "population",
+                        "n": pop.n, "state_elements": n_state})
+        for p in self.simulator.probes:
+            entry = {"name": p.name, "kind": "probe", "target": p.target,
+                     "var": p.var, "every": p.every,
+                     "elements_per_sample": p.elements_per_sample()}
+            if p.window is not None:
+                entry["buffer_elements"] = (p.window
+                                            * p.elements_per_sample())
+            elif n_steps is not None:
+                entry["buffer_elements"] = (
+                    PR.capacity(p, n_steps) * p.elements_per_sample())
+            out.append(entry)
+        for name, cu in sorted(self.simulator.custom_updates.items()):
+            out.append({"name": name, "kind": "custom_update",
+                        "target": cu.target, "every": cu.every,
+                        "n_reductions": len(cu.reduce)})
+        out.append({"name": "streams", "kind": "serving",
+                    "max_streams": max_streams,
+                    "state_elements_per_stream": stream_state,
+                    "stream_state_elements": stream_state * max_streams})
+        return out
 
     def __repr__(self) -> str:
         pops = {p.name: p.n for p in self.spec.populations.values()}

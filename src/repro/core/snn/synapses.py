@@ -173,6 +173,9 @@ class SynapseGroup:
     delay_steps: int = 0                    # homogeneous dendritic delay
     max_delay: Optional[int] = None         # static ring bound for ell.delay
     sign: float = 1.0                       # +1 excitatory / -1 inhibitory
+    # a custom update writes g: conductances become state-resident even
+    # without a learning rule (ModelSpec.build sets this)
+    mutable_g: bool = False
     # legacy shorthand (pre-ModelSpec API); translated to a PostsynapticModel
     # in __post_init__ and kept for introspection.
     dynamics: Optional[str] = None          # 'pulse' | 'exp_decay'
@@ -236,18 +239,21 @@ class SynapseGroup:
         else:
             self.max_delay = self.delay_steps
 
-        # Any non-default weight-update model propagates through the ELL
-        # effective-weight path (plastic g lives in state; custom spike_code
-        # rewrites weights per step), so a dense mirror would go stale or
-        # sit unused: an explicit 'dense' request is a conflict, and 'auto'
-        # resolves to sparse.
-        if not self.wum.is_static_pulse:
+        # Any non-default weight-update model — or a custom update writing
+        # g — propagates through the ELL effective-weight path (plastic /
+        # mutable g lives in state; custom spike_code rewrites weights per
+        # step), so a dense mirror would go stale or sit unused: an
+        # explicit 'dense' request is a conflict, and 'auto' resolves to
+        # sparse.
+        if not self.wum.is_static_pulse or self.mutable_g:
             if self.representation == "dense":
+                what = ("a custom update writing g" if self.mutable_g
+                        and self.wum.is_static_pulse
+                        else f"weight-update model {self.wum.name!r}")
                 raise ValueError(
                     f"synapse group {self.name!r}: representation='dense' "
-                    f"is incompatible with weight-update model "
-                    f"{self.wum.name!r} (dynamic weights propagate via the "
-                    "ELL path); use 'sparse' or 'auto'")
+                    f"is incompatible with {what} (dynamic weights "
+                    "propagate via the ELL path); use 'sparse' or 'auto'")
             self.representation = "sparse"
         elif self.representation == "auto":
             nnz = self.ell.n_pre * self.ell.max_conn
@@ -262,8 +268,9 @@ class SynapseGroup:
 
     @property
     def plastic(self) -> bool:
-        """True when learn_code rewrites g during simulation."""
-        return bool(self.wum.learn_code)
+        """True when g is state-resident: a learn_code rewrites it during
+        simulation, or a custom update may rewrite it on demand."""
+        return bool(self.wum.learn_code) or self.mutable_g
 
     @property
     def needs_ring(self) -> bool:
@@ -444,6 +451,23 @@ class SynapseGroup:
         return new_state, current
 
     # -- memory accounting (paper eqs 1/2) ----------------------------------
+    def state_elements(self) -> int:
+        """Per-simulation dynamic state this group carries (one stream
+        slot's worth): postsynaptic/trace/synapse vars, state-resident g,
+        and the dendritic-delay ring + cursor.  Serving multiplies this by
+        max_streams (each slot is an independent simulation)."""
+        n_pre, n_post = self.ell.n_pre, self.ell.n_post
+        nnz = n_pre * self.ell.max_conn
+        total = (len(self.psm.state) * n_post
+                 + len(self.wum.pre_state) * n_pre
+                 + len(self.wum.post_state) * n_post
+                 + len(self.wum.syn_state) * nnz)
+        if self.plastic:
+            total += nnz
+        if self.needs_ring:
+            total += self.ring_slots * n_post + 1
+        return total
+
     def memory_report(self) -> dict:
         nnz = self.ell.n_pre * self.ell.max_conn
         return {
@@ -456,6 +480,7 @@ class SynapseGroup:
             "max_delay": self.max_delay,
             "dendritic_ring_elements": (
                 self.ring_slots * self.ell.n_post if self.needs_ring else 0),
+            "state_elements": self.state_elements(),
         }
 
 

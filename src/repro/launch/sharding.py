@@ -181,14 +181,18 @@ def pad_neuron_axis(x, n_pad: int, axis: int = 0):
 def snn_shardings(mesh, axis: str):
     """The placements SNN engine state uses: per-neuron arrays split on
     `axis`, replicated scalars/full-pre vectors, [D, n_pre, K] per-shard
-    connectivity blocks split on their leading device dim, and
+    connectivity blocks split on their leading device dim,
     [max_delay+1, n_post] dendritic-delay rings split on their post
-    (trailing) dim — each device holds only its own post shard's ring."""
+    (trailing) dim — each device holds only its own post shard's ring —
+    and [capacity, n] probe recording buffers, which shard their sample
+    rows along the neuron axis the same way (reduced probes are scalar
+    per sample and live replicated)."""
     return {
         "neuron": NamedSharding(mesh, P(axis)),
         "replicated": NamedSharding(mesh, P()),
         "block": NamedSharding(mesh, P(axis, None, None)),
         "ring": NamedSharding(mesh, P(None, axis)),
+        "probe": NamedSharding(mesh, P(None, axis)),
     }
 
 

@@ -56,6 +56,8 @@ class ChunkOutput:
     n_steps: int
     spike_counts: Dict[str, np.ndarray]          # pop -> [n] ints
     raster: Optional[Dict[str, np.ndarray]]      # pop -> [n_steps, n] bool
+    # probe name -> [samples_this_chunk, ...] (already cropped per slot)
+    recordings: Optional[Dict[str, np.ndarray]] = None
 
 
 @dataclasses.dataclass
@@ -93,6 +95,18 @@ class StreamRequest:
             if c.raster is None:
                 raise ValueError("server built with record_raster=False")
             for k, v in c.raster.items():
+                out.setdefault(k, []).append(v)
+        return {k: np.concatenate(v) for k, v in out.items()}
+
+    @property
+    def recordings(self) -> Dict[str, np.ndarray]:
+        """Stitched probe samples streamed so far: probe name ->
+        [n_samples, ...] in chronological order — identical to the
+        offline run's `Recordings` rows for the same seed and stimulus.
+        (`window` probes stream every sample; window client-side.)"""
+        out: Dict[str, List[np.ndarray]] = {}
+        for c in self.chunks:
+            for k, v in (c.recordings or {}).items():
                 out.setdefault(k, []).append(v)
         return {k: np.concatenate(v) for k, v in out.items()}
 
@@ -187,12 +201,14 @@ class SNNServer:
         if not self.sched.active:
             return self.sched.has_work()
         stim, steps_left = self._assemble()
-        self.states, counts, raster = self.model.serve_chunk(
+        self.states, counts, raster, rec = self.model.serve_chunk(
             self.states, stim, steps_left, self.chunk,
             gscales=self.gscales, record_raster=self.record_raster)
         counts = {k: np.asarray(v) for k, v in counts.items()}
         if raster is not None:
             raster = {k: np.asarray(v) for k, v in raster.items()}
+        rec_data = {k: np.asarray(v) for k, v in rec.data.items()}
+        rec_counts = {k: np.asarray(v) for k, v in rec.counts.items()}
         self.total_chunks += 1
         self.total_slot_steps += int(steps_left.sum())
         self.total_lane_steps += self.max_streams * self.chunk
@@ -206,7 +222,9 @@ class SNNServer:
                 spike_counts={k: v[slot].copy() for k, v in counts.items()},
                 raster=(None if raster is None
                         else {k: v[slot, :took].copy()
-                              for k, v in raster.items()})))
+                              for k, v in raster.items()}),
+                recordings={k: v[slot, : int(rec_counts[k][slot])].copy()
+                            for k, v in rec_data.items()}))
             self._cursor[slot] = start + took
             if self._cursor[slot] >= req.n_steps:
                 req.done = True
@@ -260,8 +278,11 @@ def _build_model(name: str, devices: int, full: bool):
     if name == "mushroom_body":
         from repro.core.models.mushroom_body import (MushroomBodyConfig,
                                                      compile_model)
-        cfg = (MushroomBodyConfig() if full else
-               MushroomBodyConfig(n_pn=20, n_lhi=5, n_kc=100, n_dn=20))
+        # the KC membrane-voltage probe streams back per chunk alongside
+        # spike counts — the serving demo of the probe API
+        cfg = (MushroomBodyConfig(kc_probe_every=5) if full else
+               MushroomBodyConfig(n_pn=20, n_lhi=5, n_kc=100, n_dn=20,
+                                  kc_probe_every=5))
         return compile_model(cfg, mesh=mesh), ("KC",), 1.5
     if name == "izhikevich":
         from repro.core.models.izhikevich_net import (IzhikevichNetConfig,
@@ -329,7 +350,10 @@ def main(argv=None):
           f"(queue wait {lat.get('mean_queue_wait_s', 0):.3f}s)")
     for r in finished[:4]:
         rates = {k: float(np.sum(v)) for k, v in r.spike_counts.items()}
-        print(f"  stream{r.rid}: T={r.n_steps} spikes={rates}")
+        rec = r.recordings
+        probes = {k: v.shape for k, v in rec.items()}
+        print(f"  stream{r.rid}: T={r.n_steps} spikes={rates}"
+              + (f" probes={probes}" if probes else ""))
 
     if len(finished) != args.requests:
         raise SystemExit("not all streams finished")
@@ -342,8 +366,18 @@ def main(argv=None):
             if not np.array_equal(np.asarray(v), req.spike_counts[k]):
                 raise SystemExit(
                     f"exactness check FAILED for population {k!r}")
-        print("[snn_serve] exactness check: served stream 0 bit-exact "
-              "vs offline run")
+        for k, v in req.recordings.items():
+            off = np.asarray(res.recordings[k])
+            off = off[: int(res.recordings.counts[k])]
+            # continuous state (HH membrane V) tolerates FMA/fusion noise
+            # between the batched serve program and the offline scan;
+            # spike/event probes stay bit-exact (tests/test_probes.py)
+            if off.shape != v.shape or not np.allclose(
+                    off, v, rtol=1e-5, atol=1e-4):
+                raise SystemExit(
+                    f"exactness check FAILED for probe {k!r}")
+        print("[snn_serve] exactness check: served stream 0 exact "
+              "vs offline run (spike counts + probe recordings)")
 
 
 if __name__ == "__main__":
