@@ -5,6 +5,9 @@ For a fixed network, sweep the number of device-resident stream slots
 throughput: all slots advance together in one compiled serve_chunk, so
 throughput should grow near-linearly with streams until the hardware
 saturates — the continuous-batching amortization the serving design is for.
+Each row also records p50/p99 *per-request* total latency (submit to
+finish), the SLO metric the gateway serves; check_regression.py gates it
+with its own (tighter) tolerance from the committed baseline.
 
 Emits ``experiments/bench/BENCH_snn_serving.json`` (gated against a
 committed baseline by benchmarks/check_regression.py in CI) and prints the
@@ -27,6 +30,13 @@ from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "bench"
 OUT_NAME = "BENCH_snn_serving.json"
+
+
+def _percentile(xs, q: float) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))]
 
 
 def _bench_streams(model, stim_pop: str, max_streams: int, chunk: int,
@@ -53,13 +63,15 @@ def _bench_streams(model, stim_pop: str, max_streams: int, chunk: int,
         srv.run()
         wall = time.perf_counter() - t0
         served = srv.total_slot_steps - pre
-        return served, wall, srv.stats()["slot_utilization"]
+        totals = [t.total_s for t in srv.sched.timings.values()
+                  if t.finished_at is not None]
+        return served, wall, srv.stats()["slot_utilization"], totals
 
     rows = []
     s = 1
     while s <= max_streams:
         # best of 2: shared-runner noise easily dwarfs the effect measured
-        served, wall, util = min(
+        served, wall, util, totals = min(
             (one_trial(s) for _ in range(2)), key=lambda r: r[1] / r[0])
         steps_per_sec = served / max(wall, 1e-9)
         rows.append({
@@ -67,9 +79,14 @@ def _bench_streams(model, stim_pop: str, max_streams: int, chunk: int,
             "n_steps": n_steps, "slot_steps": served, "wall_s": wall,
             "steps_per_sec": steps_per_sec,
             "utilization": util,
+            # per-request total latency (submit -> finish): the serving
+            # SLO, gated with its own tolerance in check_regression.py
+            "p50_total_s": _percentile(totals, 0.50),
+            "p99_total_s": _percentile(totals, 0.99),
         })
         print(f"serving_streams={s},{steps_per_sec:.1f},steps_per_sec "
-              f"util={util:.2f}", flush=True)
+              f"util={util:.2f} p99_total={rows[-1]['p99_total_s']:.3f}s",
+              flush=True)
         s *= 2
     return rows
 

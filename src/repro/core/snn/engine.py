@@ -53,7 +53,8 @@ from repro.core.snn import custom_updates as CU
 from repro.core.snn import probes as PR
 from repro.core.snn.network import Network
 from repro.core.snn.probes import Recordings
-from repro.core.snn.simulator import RunResult, SimState
+from repro.core.snn.simulator import (RunResult, SimState,
+                                      _select_streams)
 from repro.core.snn.synapses import SynapseState
 from repro.launch.mesh import snn_axis
 from repro.launch.sharding import neuron_pad, pad_neuron_axis, snn_shardings
@@ -863,6 +864,17 @@ class ShardedEngine:
             syn=st.syn, t=st.t,
             key=jax.device_put(keys, self._sh["replicated"]),
             finite=st.finite)
+
+    def select_streams(self, state: SimState, idx, keys) -> SimState:
+        """Re-pack the stream axis between chunks (slot reclamation and
+        elastic resize) — semantics match Simulator.select_streams: new
+        slot j continues old slot ``idx[j]`` bit-for-bit, ``idx[j] < 0``
+        fresh-inits from ``keys[j]``.  The stream axis is the *unsharded*
+        leading axis (P(None, ...)), so the gather is device-local: neuron
+        shards never move, and surviving slots stay bitwise identical on
+        every device."""
+        fresh = self.init_stream_state(jnp.asarray(keys))
+        return _select_streams(state, fresh, jnp.asarray(idx, jnp.int32))
 
     def _make_serve(self, n_steps: int, keys: Tuple[str, ...],
                     stim_keys: Tuple[str, ...], record_raster: bool):

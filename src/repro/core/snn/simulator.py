@@ -97,6 +97,25 @@ class RunResult:
         return cls(*children)
 
 
+@jax.jit
+def _select_streams(state, fresh, idx):
+    """Gather/mix the stream axis: leaf-wise ``new[j] = old[idx[j]]`` when
+    ``idx[j] >= 0`` else ``fresh[j]``.  jitted once and cached by shape —
+    one executable per (old_size, new_size) bucket pair, shared by the host
+    Simulator and the ShardedEngine (whose stream axis is unsharded, so a
+    leading-axis gather never crosses devices)."""
+    old_size = jax.tree.leaves(state)[0].shape[0]
+    take = jnp.clip(idx, 0, old_size - 1)
+    keep = idx >= 0
+
+    def mix(old, fr):
+        g = jnp.take(old, take, axis=0)
+        m = keep.reshape((-1,) + (1,) * (g.ndim - 1))
+        return jnp.where(m, g, fr.astype(g.dtype))
+
+    return jax.tree.map(mix, state, fresh)
+
+
 class Simulator:
     def __init__(self, net: Network, dt: float = 0.5, seed: int = 0,
                  probes=(), custom_updates=()):
@@ -409,6 +428,18 @@ class Simulator:
         other leaf is the single-sim init broadcast along the stream axis,
         so slot s starts bit-identical to init_state(keys[s])."""
         return jax.vmap(self.init_state)(jnp.asarray(keys))
+
+    def select_streams(self, state: SimState, idx, keys) -> SimState:
+        """Re-pack the stream axis between chunks (slot reclamation and
+        elastic resize).  New slot j continues old slot ``idx[j]``
+        **bit-for-bit** when ``idx[j] >= 0``, else starts fresh from
+        ``keys[j]``; ``len(idx)`` sets the new stream-axis size, so the
+        same call grows, shrinks, compacts, or re-keys the slot table.
+        Surviving slots are pure gathers — no arithmetic touches their
+        state, which is what keeps mid-flight eviction/resize invisible to
+        the streams that stay (tests/test_gateway.py pins this down)."""
+        fresh = self.init_stream_state(jnp.asarray(keys))
+        return _select_streams(state, fresh, jnp.asarray(idx, jnp.int32))
 
     def serve_chunk(
         self, state: SimState, stim: Mapping[str, jax.Array],

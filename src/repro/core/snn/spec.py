@@ -710,6 +710,17 @@ class CompiledModel:
         backend = self.engine if self.engine is not None else self.simulator
         return backend.init_stream_state(jnp.asarray(keys))
 
+    def select_streams(self, state: SimState, idx, keys) -> SimState:
+        """Re-pack the stream axis of a batched serving state between
+        chunks: new slot j continues old slot ``idx[j]`` **bit-for-bit**
+        when ``idx[j] >= 0``, else fresh-inits from ``keys[j]``; the length
+        of ``idx`` sets the new slot count.  This is the gateway's slot-
+        reclamation + elastic-resize primitive (grow/shrink between
+        pre-compiled max_streams buckets, compact after evictions) — one
+        call, both backends, surviving streams untouched."""
+        backend = self.engine if self.engine is not None else self.simulator
+        return backend.select_streams(state, idx, keys)
+
     def serve_chunk(self, state: SimState, stim, steps_left, n_steps: int,
                     gscales: Optional[Mapping[str, jax.Array]] = None,
                     record_raster: bool = False):

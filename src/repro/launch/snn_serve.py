@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import sys
 import time
 from typing import Dict, List, Mapping, Optional, Sequence
 
@@ -149,6 +150,7 @@ class SNNServer:
         self.total_chunks = 0
         self.total_slot_steps = 0      # steps actually served (masked out
         self.total_lane_steps = 0      # vs. lane capacity incl. idle slots)
+        self.last_chunk_wall_s = 0.0   # wall time of the latest chunk
 
     # -- queue ------------------------------------------------------------
     def submit(self, req: StreamRequest) -> StreamRequest:
@@ -167,17 +169,28 @@ class SNNServer:
             raise ValueError(
                 f"duplicate request rid {req.rid}; collect it with "
                 "pop_finished() before recycling the id")
-        self.sched.submit(req)          # also rejects rids still in timings
+        # priority/deadline are optional request attributes (plain
+        # StreamRequests carry neither): the gateway's GatewayRequest sets
+        # both, and the scheduler orders/evicts accordingly
+        self.sched.submit(req,          # also rejects rids still in timings
+                          priority=getattr(req, "priority", 0),
+                          deadline_at=getattr(req, "deadline_at", None))
         self.requests[req.rid] = req
         return req
 
     # -- internals --------------------------------------------------------
-    def _admit(self) -> None:
-        for slot, req in self.sched.admit():
+    def _admit(self) -> List:
+        """Admit queued requests into free slots, initializing each slot's
+        device-resident state from the request's seed; returns the new
+        (slot, request) assignments (the gateway hooks these for queue-wait
+        accounting)."""
+        assigned = self.sched.admit()
+        for slot, req in assigned:
             fresh = self.model.init_state(jax.random.PRNGKey(req.seed))
             self.states = self._insert_jit(self.states, fresh,
                                            jnp.int32(slot))
             self._cursor[slot] = 0
+        return assigned
 
     def _assemble(self):
         """Stim chunk [S, chunk, n] per pop + per-slot steps_left."""
@@ -200,6 +213,17 @@ class SNNServer:
         self._admit()
         if not self.sched.active:
             return self.sched.has_work()
+        self._advance_chunk()
+        return self.sched.has_work()
+
+    def _advance_chunk(self) -> List[StreamRequest]:
+        """One compiled chunk over every active slot: assemble per-slot
+        stimulus, run serve_chunk, stream outputs back to the requests,
+        release finished slots.  Returns the requests that finished this
+        chunk; ``last_chunk_wall_s`` holds the wall time of the whole
+        advance (assembly + compute + host transfer) — the gateway's
+        per-step latency sample."""
+        t0 = time.perf_counter()
         stim, steps_left = self._assemble()
         self.states, counts, raster, rec = self.model.serve_chunk(
             self.states, stim, steps_left, self.chunk,
@@ -212,6 +236,7 @@ class SNNServer:
         self.total_chunks += 1
         self.total_slot_steps += int(steps_left.sum())
         self.total_lane_steps += self.max_streams * self.chunk
+        finished: List[StreamRequest] = []
         for slot, req in list(self.sched.active.items()):
             took = int(steps_left[slot])
             start = int(self._cursor[slot])
@@ -229,7 +254,9 @@ class SNNServer:
             if self._cursor[slot] >= req.n_steps:
                 req.done = True
                 self.sched.release(slot)
-        return self.sched.has_work()
+                finished.append(req)
+        self.last_chunk_wall_s = time.perf_counter() - t0
+        return finished
 
     def run(self) -> List[StreamRequest]:
         """Drain the queue; returns finished requests (rid order).  The
@@ -294,7 +321,86 @@ def _build_model(name: str, devices: int, full: bool):
                      "(expected mushroom_body or izhikevich)")
 
 
-def main(argv=None):
+def _check_exact(model, req) -> List[str]:
+    """Bit-exactness of one served request vs an offline ``model.run``;
+    returns a list of failure descriptions (empty = exact)."""
+    failures = []
+    res = model.run(req.n_steps, stim=req.stim,
+                    state=model.init_state(jax.random.PRNGKey(req.seed)))
+    for k, v in res.spike_counts.items():
+        if not np.array_equal(np.asarray(v), req.spike_counts[k]):
+            failures.append(f"stream {req.rid}: population {k!r} spike "
+                            "counts diverged from offline run")
+    for k, v in req.recordings.items():
+        off = np.asarray(res.recordings[k])
+        off = off[: int(res.recordings.counts[k])]
+        # continuous state (HH membrane V) tolerates FMA/fusion noise
+        # between the batched serve program and the offline scan;
+        # spike/event probes stay bit-exact (tests/test_probes.py)
+        if off.shape != v.shape or not np.allclose(
+                off, v, rtol=1e-5, atol=1e-4):
+            failures.append(f"stream {req.rid}: probe {k!r} diverged "
+                            "from offline run")
+    return failures
+
+
+def _run_gateway_demo(model, stim_pops, scale, args) -> int:
+    """--deadline-ms path: drive the same demo through the serving gateway
+    so deadline eviction + slot reclamation are exercised end-to-end.
+
+    The deadline is applied to every *other* request — the evicted half
+    demonstrates mid-flight reclamation while the unlimited half must
+    still finish (and, under --check, stay bit-exact vs offline runs
+    even though neighbouring slots were evicted under them).
+    """
+    from repro.launch.gateway import Gateway
+
+    gw = Gateway(chunk=args.chunk, buckets=(args.streams,),
+                 max_queue=max(2 * args.requests, 4))
+    gw.register(args.model, model, stim_pops=stim_pops)
+    pops = {p: model.network.populations[p].n for p in stim_pops}
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        T = int(rng.integers(args.steps // 2, args.steps + 1))
+        stim = {p: (scale * rng.normal(size=(T, n))).astype(np.float32)
+                for p, n in pops.items()}
+        dl = args.deadline_ms if i % 2 == 1 else None
+        gw.submit(args.model, stim, T, seed=1000 + i, deadline_ms=dl)
+
+    t0 = time.time()
+    gw.run_until_drained()
+    wall = time.time() - t0
+    done = gw.collect_finished()
+    completed = [r for r in done if r.status == "done"]
+    evicted = [r for r in done if r.evicted]
+    m = gw.metrics()["models"][args.model]
+    print(f"[snn_serve] gateway: {len(completed)} completed, "
+          f"{len(evicted)} evicted (deadline {args.deadline_ms}ms on "
+          f"every other request) in {wall:.2f}s")
+    print(f"[snn_serve] gateway: occupancy {m['occupancy']:.2f} "
+          f"p99 step {m['step_latency_us']['p99']:.0f}us "
+          f"p99 queue wait {m['queue_wait_s']['p99'] * 1e3:.1f}ms")
+
+    if len(completed) + len(evicted) != args.requests:
+        print(f"[snn_serve] FAILED: lost streams "
+              f"({len(completed)}+{len(evicted)} != {args.requests})",
+              file=sys.stderr)
+        return 1
+    if args.check:
+        failures = []
+        for r in completed:
+            failures += _check_exact(model, r)
+        if failures:
+            for f in failures:
+                print(f"[snn_serve] exactness check FAILED: {f}",
+                      file=sys.stderr)
+            return 1
+        print(f"[snn_serve] exactness check: all {len(completed)} "
+              "non-evicted streams exact vs offline runs")
+    return 0
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="streaming SNN serving demo (continuous batching)")
     ap.add_argument("--model", default="mushroom_body",
@@ -312,11 +418,18 @@ def main(argv=None):
                     help="full-size model (default: reduced demo sizes)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
-                    help="verify one served stream bit-exact vs offline run")
+                    help="verify served streams bit-exact vs offline runs; "
+                         "exits non-zero on divergence")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="route the demo through the serving gateway with "
+                         "this per-request deadline on every other request "
+                         "(exercises deadline eviction end-to-end)")
     args = ap.parse_args(argv)
 
     model, stim_pops, scale = _build_model(args.model, args.devices,
                                            args.full)
+    if args.deadline_ms is not None:
+        return _run_gateway_demo(model, stim_pops, scale, args)
     pops = {p: model.network.populations[p].n for p in stim_pops}
     print(f"[snn_serve] {model!r}")
     print(f"[snn_serve] streams={args.streams} chunk={args.chunk} "
@@ -356,29 +469,20 @@ def main(argv=None):
               + (f" probes={probes}" if probes else ""))
 
     if len(finished) != args.requests:
-        raise SystemExit("not all streams finished")
+        print("[snn_serve] FAILED: not all streams finished",
+              file=sys.stderr)
+        return 1
     if args.check:
-        req = finished[0]
-        res = model.run(req.n_steps, stim=req.stim,
-                        state=model.init_state(
-                            jax.random.PRNGKey(req.seed)))
-        for k, v in res.spike_counts.items():
-            if not np.array_equal(np.asarray(v), req.spike_counts[k]):
-                raise SystemExit(
-                    f"exactness check FAILED for population {k!r}")
-        for k, v in req.recordings.items():
-            off = np.asarray(res.recordings[k])
-            off = off[: int(res.recordings.counts[k])]
-            # continuous state (HH membrane V) tolerates FMA/fusion noise
-            # between the batched serve program and the offline scan;
-            # spike/event probes stay bit-exact (tests/test_probes.py)
-            if off.shape != v.shape or not np.allclose(
-                    off, v, rtol=1e-5, atol=1e-4):
-                raise SystemExit(
-                    f"exactness check FAILED for probe {k!r}")
+        failures = _check_exact(model, finished[0])
+        if failures:
+            for f in failures:
+                print(f"[snn_serve] exactness check FAILED: {f}",
+                      file=sys.stderr)
+            return 1
         print("[snn_serve] exactness check: served stream 0 exact "
               "vs offline run (spike counts + probe recordings)")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

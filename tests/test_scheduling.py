@@ -127,7 +127,7 @@ def test_request_timing_milestones_and_accounting():
 
 def test_latency_summary_empty_and_partial():
     sched = SlotScheduler(2)
-    assert sched.latency_summary() == {"finished": 0}
+    assert sched.latency_summary() == {"finished": 0, "evicted": 0}
     sched.submit(Req(0))
     sched.submit(Req(1))
     sched.admit()
@@ -142,3 +142,138 @@ def test_timing_dataclass_properties_standalone():
     assert t.queue_wait_s == 2.5 and t.service_s is None
     t.finished_at = 20.0
     assert t.service_s == 7.5 and t.total_s == 10.0
+
+
+# ---------------------------------------------------------------------------
+# gateway primitives: priority, eviction, deadlines, slot re-packing
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    """Injectable clock so deadline logic is deterministic under test."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def test_priority_admission_is_stable_within_class():
+    """Lower priority value runs first; equal priorities stay FIFO — the
+    default 0 everywhere must degrade to the plain FIFO the older servers
+    were built against."""
+    sched = SlotScheduler(4)
+    sched.submit(Req(0), priority=1)
+    sched.submit(Req(1), priority=0)
+    sched.submit(Req(2), priority=1)
+    sched.submit(Req(3), priority=0)
+    assert [r.rid for r in sched.queue] == [1, 3, 0, 2]
+    assigned = sched.admit()
+    assert [r.rid for _, r in assigned] == [1, 3, 0, 2]
+
+
+def test_evict_queued_request_never_admitted():
+    """A queued-but-unadmitted request can be evicted: it leaves the queue,
+    is stamped evicted (not completed), and never occupies a slot."""
+    sched = SlotScheduler(1)
+    sched.submit(Req(0))
+    sched.submit(Req(1))
+    sched.admit()                               # rid 0 takes the only slot
+    assert sched.evict(1).rid == 1              # rid 1 still queued
+    assert sched.queue == []
+    t = sched.timings[1]
+    assert t.evicted and t.finished_at is not None
+    assert t.admitted_at is None                # never ran
+    assert sched.evicted_total == 1
+    assert sched.latency_summary() == {"finished": 0, "evicted": 1}
+
+
+def test_evict_active_request_frees_slot_for_next_admit():
+    sched = SlotScheduler(1)
+    sched.submit(Req(0))
+    sched.submit(Req(1))
+    sched.admit()
+    assert sched.evict(0).rid == 0              # mid-flight eviction
+    assert sched.free_slots == [0]
+    assert [r.rid for _, r in sched.admit()] == [1]
+
+
+def test_evict_is_double_finish_safe():
+    """Deadline sweeps race with completions: evicting a finished, already
+    evicted, or unknown rid must be a no-op returning None."""
+    sched = SlotScheduler(1)
+    sched.submit(Req(0))
+    sched.admit()
+    sched.release(0)                            # completed normally
+    assert sched.evict(0) is None               # raced: no double accounting
+    assert sched.evicted_total == 0
+    sched.submit(Req(1))
+    assert sched.evict(1).rid == 1
+    assert sched.evict(1) is None               # double evict: no-op
+    assert sched.evicted_total == 1
+    assert sched.evict(999) is None             # never submitted
+
+
+def test_evicted_timing_consistency_and_forget():
+    """Evicted requests get finished_at stamped (so forget() prunes them)
+    but are excluded from completion-latency averages."""
+    clk = FakeClock()
+    sched = SlotScheduler(2, clock=clk)
+    sched.submit(Req(0))
+    sched.submit(Req(1))
+    sched.admit()
+    clk.advance(1.0)
+    sched.release(0)                            # completes at t=1
+    sched.evict(1)                              # evicted at t=1
+    s = sched.latency_summary()
+    assert s["finished"] == 1 and s["evicted"] == 1
+    assert s["mean_total_s"] == pytest.approx(1.0)
+    t1 = sched.timings[1]
+    assert t1.evicted_at == t1.finished_at == 1.0
+    sched.forget(1)                             # evicted => prunable
+    assert 1 not in sched.timings
+
+
+def test_expired_lists_queued_and_active_past_deadline():
+    clk = FakeClock()
+    sched = SlotScheduler(1, clock=clk)
+    sched.submit(Req(0), deadline_at=5.0)       # will be active
+    sched.submit(Req(1), deadline_at=2.0)       # stays queued
+    sched.submit(Req(2))                        # no deadline: never expires
+    sched.admit()
+    assert sched.expired() == []                # t=0: nothing expired
+    clk.advance(3.0)
+    assert [r.rid for r in sched.expired()] == [1]
+    clk.advance(3.0)                            # t=6: both past deadline
+    assert sorted(r.rid for r in sched.expired()) == [0, 1]
+    for r in sched.expired():
+        sched.evict(r.rid)
+    assert sched.expired() == []                # sweep converges
+    assert [r.rid for r in sched.queue] == [2]
+
+
+def test_move_and_resize_compact_then_shrink():
+    """The elastic-capacity shrink: compact active slots low, then resize;
+    shrinking with a stranded active slot must raise."""
+    sched = SlotScheduler(4)
+    for i in range(3):
+        sched.submit(Req(i))
+    sched.admit()                               # slots 0,1,2 active
+    sched.release(0)
+    sched.release(1)                            # only slot 2 active
+    with pytest.raises(ValueError, match="stranded"):
+        sched.resize(2)
+    with pytest.raises(ValueError, match="occupied"):
+        sched.move(2, 2)
+    sched.move(2, 0)
+    assert sched.active[0].rid == 2
+    sched.resize(2)
+    assert sched.max_slots == 2
+    assert sched.free_slots == [1]
+    with pytest.raises(ValueError, match="positive"):
+        sched.resize(0)
+    sched.resize(8)                             # growing is always safe
+    assert len(sched.free_slots) == 7
