@@ -21,15 +21,28 @@ Gated metrics (matched row-by-row on their key fields):
   BENCH_snn_probes.json   probe_overhead[].us_per_step   (lower is better;
                           the probes=0 row is the recording-off-the-hot-
                           path guarantee, probed rows bound the cost)
+  BENCH_snn_health.json   monitor_overhead[].us_per_step (lower is better;
+                          the monitor=0 row is the monitoring-is-free-
+                          when-off guarantee)
   BENCH_gateway_soak.json summary[].p99_step_us          (lower is better)
                           summary[].p99_flat_ratio       (lower is better;
                           second-half vs first-half p99 per-step latency —
                           the "flat under sustained load" SLO)
 
+One **cross-file** gate ties the two zero-cost guarantees together: the
+fresh monitor=0 row of BENCH_snn_health.json is compared against the
+*committed baseline's* probes=0 row of BENCH_snn_probes.json — both
+measure the identical unobserved hot path (same model, sizes, steps), so
+a monitor-off build drifting away from the 0-probe baseline is a real
+regression even if its own baseline was regenerated alongside it.
+
 Construction times and other fields are reported but never gate (first-call
 jit noise dominates them at CI sizes).  A missing fresh file or baseline is
 a warning, not a failure, so the gate cannot mask a bench crash silently —
-CI runs the benches as separate steps that fail on their own.
+CI runs the benches as separate steps that fail on their own.  A malformed
+JSON likewise warns and skips that gate instead of aborting the run, and
+the final summary lists **every** failing metric (one bad gate never hides
+the rest).
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         [--fresh experiments/bench] [--baseline benchmarks/baselines] \
@@ -64,6 +77,9 @@ GATES = [
     ("BENCH_snn_probes.json", "probe_overhead",
      ("n_total", "n_conn", "n_steps"),
      ("probes",), "us_per_step", "lower"),
+    ("BENCH_snn_health.json", "monitor_overhead",
+     ("n_total", "n_conn", "n_steps"),
+     ("monitor",), "us_per_step", "lower"),
     ("BENCH_gateway_soak.json", "summary",
      ("devices", "n_total"),
      ("streams", "chunk", "n_steps"), "p99_step_us", "lower"),
@@ -73,65 +89,128 @@ GATES = [
 ]
 
 
+# Cross-file gates: (fresh file, series, row-match {field: value}) vs
+# (baseline file, series, row-match), sharing payload-identity fields.
+CROSS_GATES = [
+    ("BENCH_snn_health.json", "monitor_overhead", {"monitor": 0},
+     "BENCH_snn_probes.json", "probe_overhead", {"probes": 0},
+     ("n_total", "n_conn", "n_steps"), "us_per_step", "lower"),
+]
+
+
 def _load(path: Path):
     if not path.exists():
         return None
-    return json.loads(path.read_text())
+    try:
+        return json.loads(path.read_text())
+    except ValueError as e:
+        print(f"[check_regression] WARN: malformed JSON in {path}: {e} — "
+              "skipping gates on this file")
+        return None
 
 
 def _index(rows, fields):
     return {tuple(r.get(f) for f in fields): r for r in rows}
 
 
+def _compare(failures, tag, fields, key, metric, direction, got, want,
+             tol) -> bool:
+    """Compare one fresh/baseline metric pair; records failures, returns
+    whether a comparison actually happened (want > 0)."""
+    if want <= 0:
+        return False
+    ratio = got / want
+    worse = ratio if direction == "lower" else 1.0 / max(ratio, 1e-12)
+    ok = worse <= tol
+    verdict = "ok" if ok else "REGRESSION"
+    ident = f"{tag}{dict(zip(fields, key)) if fields else ''}"
+    print(f"[check_regression] {ident} {metric}: "
+          f"fresh={got:.3g} baseline={want:.3g} ({worse:.2f}x worse-ratio, "
+          f"tol {tol}x) {verdict}")
+    if not ok:
+        failures.append((ident, metric, got, want, worse, tol))
+    return True
+
+
 def check(fresh_dir: Path, base_dir: Path, max_ratio: float) -> int:
     failures, checked = [], 0
     for fname, series, pfields, fields, metric, direction in GATES:
-        fresh = _load(fresh_dir / fname)
-        base = _load(base_dir / fname)
-        if fresh is None:
-            print(f"[check_regression] WARN: no fresh {fname} "
-                  f"(bench not run?)")
-            continue
-        if base is None:
-            print(f"[check_regression] WARN: no baseline {fname} "
-                  f"(commit one under {base_dir})")
-            continue
-        mismatch = {f: (fresh.get(f), base.get(f)) for f in pfields
-                    if fresh.get(f) != base.get(f)}
-        if mismatch:
-            print(f"[check_regression] WARN: {fname} workload differs from "
-                  f"baseline {mismatch}; regenerate the baseline — "
-                  "skipping this gate")
-            continue
-        # per-metric tolerance lives next to the numbers it bounds: the
-        # committed baseline file (regenerating the baseline is already the
-        # ritual for workload changes, so tolerance changes ride along)
-        tol = float(base.get("tolerances", {}).get(metric, max_ratio))
-        base_rows = _index(base.get(series, []), fields)
-        for row in fresh.get(series, []):
-            key = tuple(row.get(f) for f in fields)
-            ref = base_rows.get(key)
-            if ref is None or metric not in ref or metric not in row:
+        try:
+            fresh = _load(fresh_dir / fname)
+            base = _load(base_dir / fname)
+            if fresh is None:
+                print(f"[check_regression] WARN: no fresh {fname} "
+                      f"(bench not run?)")
                 continue
-            got, want = float(row[metric]), float(ref[metric])
-            if want <= 0:
+            if base is None:
+                print(f"[check_regression] WARN: no baseline {fname} "
+                      f"(commit one under {base_dir})")
                 continue
-            ratio = got / want
-            worse = ratio if direction == "lower" else 1.0 / max(ratio, 1e-12)
-            ok = worse <= tol
-            checked += 1
-            tag = "ok" if ok else "REGRESSION"
-            print(f"[check_regression] {fname} {series}"
-                  f"{dict(zip(fields, key))} {metric}: fresh={got:.3g} "
-                  f"baseline={want:.3g} ({worse:.2f}x worse-ratio, "
-                  f"tol {tol}x) {tag}")
-            if not ok:
-                failures.append((fname, key, metric, got, want, worse))
+            mismatch = {f: (fresh.get(f), base.get(f)) for f in pfields
+                        if fresh.get(f) != base.get(f)}
+            if mismatch:
+                print(f"[check_regression] WARN: {fname} workload differs "
+                      f"from baseline {mismatch}; regenerate the baseline "
+                      "— skipping this gate")
+                continue
+            # per-metric tolerance lives next to the numbers it bounds: the
+            # committed baseline file (regenerating the baseline is already
+            # the ritual for workload changes, so tolerance changes ride
+            # along)
+            tol = float(base.get("tolerances", {}).get(metric, max_ratio))
+            base_rows = _index(base.get(series, []), fields)
+            for row in fresh.get(series, []):
+                key = tuple(row.get(f) for f in fields)
+                ref = base_rows.get(key)
+                if ref is None or metric not in ref or metric not in row:
+                    continue
+                checked += _compare(
+                    failures, f"{fname} {series}", fields, key, metric,
+                    direction, float(row[metric]), float(ref[metric]), tol)
+        except Exception as e:      # one broken gate must not hide the rest
+            print(f"[check_regression] WARN: gate {fname}/{series}/{metric} "
+                  f"errored ({type(e).__name__}: {e}) — continuing")
+
+    for (ffname, fseries, fmatch, bfname, bseries, bmatch, pfields,
+         metric, direction) in CROSS_GATES:
+        try:
+            fresh = _load(fresh_dir / ffname)
+            base = _load(base_dir / bfname)
+            if fresh is None or base is None:
+                print(f"[check_regression] WARN: cross gate {ffname} vs "
+                      f"{bfname} missing a side — skipping")
+                continue
+            mismatch = {f: (fresh.get(f), base.get(f)) for f in pfields
+                        if fresh.get(f) != base.get(f)}
+            if mismatch:
+                print(f"[check_regression] WARN: cross gate {ffname} vs "
+                      f"{bfname} workloads differ {mismatch} — skipping")
+                continue
+            tol = float(base.get("tolerances", {}).get(metric, max_ratio))
+            frows = [r for r in fresh.get(fseries, [])
+                     if all(r.get(k) == v for k, v in fmatch.items())]
+            brows = [r for r in base.get(bseries, [])
+                     if all(r.get(k) == v for k, v in bmatch.items())]
+            if not frows or not brows:
+                print(f"[check_regression] WARN: cross gate rows {fmatch} / "
+                      f"{bmatch} not found — skipping")
+                continue
+            checked += _compare(
+                failures, f"{ffname}:{fmatch} vs {bfname}:{bmatch} ",
+                (), (), metric, direction,
+                float(frows[0][metric]), float(brows[0][metric]), tol)
+        except Exception as e:
+            print(f"[check_regression] WARN: cross gate {ffname} vs "
+                  f"{bfname} errored ({type(e).__name__}: {e}) — continuing")
+
     if not checked:
         print("[check_regression] WARN: nothing compared")
     if failures:
         print(f"[check_regression] FAILED: {len(failures)} gross "
-              f"regression(s) (over per-metric tolerance)")
+              f"regression(s) (over per-metric tolerance):")
+        for ident, metric, got, want, worse, tol in failures:
+            print(f"[check_regression]   {ident} {metric}: fresh={got:.3g} "
+                  f"baseline={want:.3g} ({worse:.2f}x worse, tol {tol}x)")
         return 1
     print(f"[check_regression] passed: {checked} metric(s) within "
           "tolerance of baseline")

@@ -1,0 +1,100 @@
+"""Health-monitor overhead benchmark: step time with the monitor off / on.
+
+The on-device activity monitor (repro.obs.health, compiled into the scan
+via ``build(..., monitor=HealthConfig(...))``) must be **strictly free when
+off** — a monitor-off build produces the same jaxpr as an unmonitored one
+(tests/test_obs.py pins this down), so its step time is gated against the
+committed baseline *and*, cross-file, against the 0-probe row of
+BENCH_snn_probes.json (benchmarks/check_regression.py): the two rows
+measure the identical unobserved hot path and must agree.  The monitor-on
+row is reported for the trajectory (a handful of scalar adds per step).
+
+Emits ``experiments/bench/BENCH_snn_health.json`` and prints harness CSV
+rows.
+
+    PYTHONPATH=src python -m benchmarks.snn_health
+
+Env knobs (kept small in CI, matching snn_probes so the cross-file gate
+compares like against like): SNN_HEALTH_BENCH_N (neurons, default 500),
+SNN_HEALTH_BENCH_NCONN (fanout, default 64), SNN_HEALTH_BENCH_STEPS
+(default 200), SNN_HEALTH_BENCH_REPS (default 3).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+OUT_NAME = "BENCH_snn_health.json"
+
+
+def _build(n_total: int, n_conn: int, monitored: bool):
+    from repro.core.models.izhikevich_net import (IzhikevichNetConfig,
+                                                  compile_model)
+    from repro.obs.health import HealthConfig
+
+    cfg = IzhikevichNetConfig(n_total=n_total, n_conn=n_conn, seed=0)
+    return compile_model(cfg,
+                         monitor=HealthConfig() if monitored else None)
+
+
+def _time_run(model, n_steps: int, reps: int) -> float:
+    import jax
+
+    state = model.init_state()
+    model.run(n_steps, state=state)                 # warm the executable
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = model.run(n_steps, state=state)
+        jax.block_until_ready(res.spike_counts)
+        if res.health is not None:
+            jax.block_until_ready(jax.tree.leaves(res.health))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    import jax
+
+    n_total = int(os.environ.get("SNN_HEALTH_BENCH_N", 500))
+    n_conn = int(os.environ.get("SNN_HEALTH_BENCH_NCONN", 64))
+    n_steps = int(os.environ.get("SNN_HEALTH_BENCH_STEPS", 200))
+    reps = int(os.environ.get("SNN_HEALTH_BENCH_REPS", 3))
+    n_conn = min(n_conn, n_total)
+
+    rows = []
+    base_us = None
+    for monitored in (0, 1):
+        model = _build(n_total, n_conn, bool(monitored))
+        wall = _time_run(model, n_steps, reps)
+        us_per_step = wall / n_steps * 1e6
+        if not monitored:
+            base_us = us_per_step
+        rows.append({
+            "monitor": monitored, "n_steps": n_steps, "wall_s": wall,
+            "us_per_step": us_per_step,
+            "overhead_vs_unmonitored": (us_per_step / base_us
+                                        if base_us else 1.0),
+        })
+        print(f"monitor_overhead={monitored},{us_per_step:.1f},us_per_step "
+              f"x{rows[-1]['overhead_vs_unmonitored']:.2f}", flush=True)
+
+    payload = {
+        "backend": jax.default_backend(),
+        "n_total": n_total,
+        "n_conn": n_conn,
+        "n_steps": n_steps,
+        "monitor_overhead": rows,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / OUT_NAME).write_text(json.dumps(payload, indent=1,
+                                               default=float))
+    print(f"wrote {RESULTS / OUT_NAME}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

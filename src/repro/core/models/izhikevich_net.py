@@ -89,8 +89,9 @@ def spec(cfg: IzhikevichNetConfig) -> ModelSpec:
 
 
 def compile_model(cfg: IzhikevichNetConfig, mesh=None,
-                  init: str = "host") -> CompiledModel:
-    return spec(cfg).build(dt=cfg.dt, seed=cfg.seed, mesh=mesh, init=init)
+                  init: str = "host", monitor=None) -> CompiledModel:
+    return spec(cfg).build(dt=cfg.dt, seed=cfg.seed, mesh=mesh, init=init,
+                           monitor=monitor)
 
 
 def build(cfg: IzhikevichNetConfig) -> tuple[Network, Simulator]:

@@ -133,8 +133,9 @@ def spec(cfg: MushroomBodyConfig) -> ModelSpec:
 
 
 def compile_model(cfg: MushroomBodyConfig, mesh=None,
-                  init: str = "host") -> CompiledModel:
-    return spec(cfg).build(dt=cfg.dt, seed=cfg.seed, mesh=mesh, init=init)
+                  init: str = "host", monitor=None) -> CompiledModel:
+    return spec(cfg).build(dt=cfg.dt, seed=cfg.seed, mesh=mesh, init=init,
+                           monitor=monitor)
 
 
 def build(cfg: MushroomBodyConfig) -> tuple[Network, Simulator]:

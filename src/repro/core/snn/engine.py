@@ -58,6 +58,8 @@ from repro.core.snn.simulator import (RunResult, SimState,
 from repro.core.snn.synapses import SynapseState
 from repro.launch.mesh import snn_axis
 from repro.launch.sharding import neuron_pad, pad_neuron_axis, snn_shardings
+from repro.obs import health as HE
+from repro.obs import trace
 from repro.sparse import formats as F
 from repro.sparse.device_init import partition_ell_by_post
 
@@ -68,13 +70,22 @@ class ShardedEngine:
     """Runs a built Network partitioned over a 1-D device mesh."""
 
     def __init__(self, net: Network, mesh, dt: float = 0.5, seed: int = 0,
-                 probes=(), custom_updates=()):
+                 probes=(), custom_updates=(), monitor=None):
         self.net = net
         self.mesh = mesh
         self.axis = snn_axis(mesh)
         self.n_shards = int(mesh.shape[self.axis])
         self.dt = float(dt)
         self.seed = seed
+        # --- opt-in health monitor (same gating as the host Simulator:
+        # None / enabled=False never touches the compiled program) ---
+        if monitor is not None and monitor.enabled:
+            monitor.validate(net.populations)
+            self.monitor = monitor
+        else:
+            self.monitor = None
+        self._pop_sizes = {name: pop.n
+                           for name, pop in net.populations.items()}
         self._updates = {
             name: codegen.compile_sim(pop.model)
             for name, pop in net.populations.items()
@@ -112,8 +123,11 @@ class ShardedEngine:
                 self._block_specs[g.name] = {"dense": P(self.axis, None,
                                                         None)}
             else:
-                (gg, post, valid, delay, shard_size,
-                 k_loc) = partition_ell_by_post(g.ell, D)
+                with trace.span("partition_ell_by_post", group=g.name,
+                                rows=g.ell.n_pre, k=g.ell.max_conn,
+                                devices=D):
+                    (gg, post, valid, delay, shard_size,
+                     k_loc) = partition_ell_by_post(g.ell, D)
                 assert shard_size == self._shard[g.post]
                 self._k_local[g.name] = k_loc
                 self._blocks[g.name] = {
@@ -357,6 +371,39 @@ class ShardedEngine:
 
     def _combine_finite(self, finite):
         return jax.lax.pmin(finite.astype(jnp.int32), self.axis) == 1
+
+    # ------------------------------------------------------------------
+    # health monitor plumbing (mirrors Simulator._health_* with psum'd
+    # partial sums and lane/slot-masked guards; integer psum keeps the
+    # per-step counts — and hence every downstream float op — bitwise
+    # identical to the host path)
+    # ------------------------------------------------------------------
+    def _health_counts_local(self, spikes) -> Dict[str, jax.Array]:
+        """Full-population scalar int32 spike count for one step (local
+        spikes are already lane_valid-masked, so padded lanes add 0)."""
+        return {p: jax.lax.psum(jnp.sum(spikes[p].astype(jnp.int32)),
+                                self.axis)
+                for p in self._pop_sizes}
+
+    def _health_ok_local(self, state: SimState, blocks) -> jax.Array:
+        """This device's shard of the NaN guard: V on valid lanes, plastic
+        g on valid ELL slots.  Per-device verdicts are merged at scan exit
+        (HE.combine_across_devices), preserving the host's first-bad-step."""
+        ok = jnp.ones((), bool)
+        d = jax.lax.axis_index(self.axis)
+        for name, pop in self.net.populations.items():
+            v = state.neurons[name].get("V")
+            if v is not None:
+                S = self._shard[name]
+                lane_valid = d * S + jnp.arange(S) < pop.n
+                ok = ok & jnp.all(jnp.isfinite(
+                    jnp.where(lane_valid, v, 0.0)))
+        for g in self.net.synapses:
+            st = state.syn[g.name]
+            if st.g is not None:
+                ok = ok & jnp.all(jnp.isfinite(
+                    jnp.where(blocks[g.name]["valid"], st.g, 0.0)))
+        return ok
 
     # ------------------------------------------------------------------
     # custom updates on the local shard (mirrors Simulator._apply_custom;
@@ -635,6 +682,8 @@ class ShardedEngine:
 
     def _make_run(self, n_steps: int, keys: Tuple[str, ...],
                   record_raster: bool, stim_keys: Tuple[str, ...] = ()):
+        mon = self.monitor
+
         def local_fn(state, blocks, pn_params, vals, stim):
             blocks = {k: self._squeeze_blocks(v) for k, v in blocks.items()}
             state = state.__class__(
@@ -648,20 +697,34 @@ class ShardedEngine:
 
             def body(carry, xs):
                 i, stim_t = xs
-                st, counts, bufs = carry
+                if mon is not None:
+                    st, counts, bufs, hstate = carry
+                else:
+                    st, counts, bufs = carry
                 st2, spk = self._local_step(st, blocks, pn_params, gs,
                                             stim=stim_t)
                 counts = {k: counts[k] + spk[k] for k in counts}
                 bufs = self._probe_write_local(bufs, caps, start, i, st2,
                                                spk, blocks)
-                return (st2, counts, bufs), (spk if record_raster else None)
+                out = spk if record_raster else None
+                if mon is not None:
+                    hstate = HE.accumulate(
+                        mon, hstate, self._health_counts_local(spk),
+                        self._health_ok_local(st2, blocks), self.dt,
+                        self._pop_sizes)
+                    return (st2, counts, bufs, hstate), out
+                return (st2, counts, bufs), out
 
             counts0 = {name: jnp.zeros((self._shard[name],), jnp.int32)
                        for name in self.net.populations}
             xs = (jnp.arange(n_steps, dtype=jnp.int32),
                   stim if stim_keys else None)
-            (st2, counts, bufs), raster = jax.lax.scan(
-                body, (state, counts0, bufs0), xs, length=n_steps)
+            carry0 = (state, counts0, bufs0)
+            if mon is not None:
+                carry0 = carry0 + (HE.init_state(self._pop_sizes),)
+            carry_out, raster = jax.lax.scan(body, carry0, xs,
+                                             length=n_steps)
+            st2, counts, bufs = carry_out[:3]
             pdata, pcounts = self._probe_finalize_local(bufs, caps, start,
                                                         n_steps)
             st2 = st2.__class__(
@@ -669,6 +732,10 @@ class ShardedEngine:
                 prev_above=st2.prev_above,
                 syn=self._unsqueeze_syn(st2.syn), t=st2.t, key=st2.key,
                 finite=self._combine_finite(st2.finite))
+            if mon is not None:
+                hstate = HE.combine_across_devices(carry_out[3], self.axis)
+                health = HE.finalize(mon, hstate, self.dt, self._pop_sizes)
+                return st2, counts, raster, pdata, pcounts, health
             return st2, counts, raster, pdata, pcounts
 
         ax = self.axis
@@ -676,12 +743,16 @@ class ShardedEngine:
         raster_specs = ({name: P(None, ax) for name in self.net.populations}
                         if record_raster else None)
         pdata_specs, pcount_specs = self._probe_out_specs()
+        out_specs = (self._state_specs, counts_specs, raster_specs,
+                     pdata_specs, pcount_specs)
+        if mon is not None:
+            out_specs = out_specs + (
+                HE.report_specs(self._pop_sizes, lambda: P()),)
         return self._shard_map(
             local_fn,
             in_specs=(*self._in_specs(), tuple(P() for _ in keys),
                       {k: P() for k in stim_keys}),
-            out_specs=(self._state_specs, counts_specs, raster_specs,
-                       pdata_specs, pcount_specs))
+            out_specs=out_specs)
 
     def run(self, n_steps: int,
             gscales: Optional[Mapping[str, jax.Array]] = None,
@@ -701,13 +772,18 @@ class ShardedEngine:
         keys = tuple(sorted(gscales))
         stim_keys = tuple(sorted(stim))
         cache_key = (n_steps, keys, record_raster, stim_keys)
-        if cache_key not in self._run_cache:
+        compiled = cache_key not in self._run_cache
+        if compiled:
             self._run_cache[cache_key] = self._make_run(n_steps, keys,
                                                         record_raster,
                                                         stim_keys)
         vals = tuple(jnp.asarray(gscales[k], jnp.float32) for k in keys)
-        st2, counts, raster, pdata, pcounts = self._run_cache[cache_key](
-            state, self._blocks, self._pn_params, vals, stim)
+        with trace.span("run", model=self.net.name, n_steps=n_steps,
+                        sharded=True, compile=compiled):
+            out = self._run_cache[cache_key](
+                state, self._blocks, self._pn_params, vals, stim)
+        st2, counts, raster, pdata, pcounts = out[:5]
+        health = out[5] if self.monitor is not None else None
         pops = self.net.populations
         counts = {k: v[: pops[k].n] for k, v in counts.items()}
         t_sec = n_steps * self.dt * 1e-3
@@ -718,7 +794,7 @@ class ShardedEngine:
         return RunResult(state=st2, spike_counts=counts, rates_hz=rates,
                          finite=st2.finite,
                          raster=raster if record_raster else None,
-                         recordings=rec)
+                         recordings=rec, health=health)
 
     def _make_step(self, keys: Tuple[str, ...],
                    stim_keys: Tuple[str, ...] = ()):
@@ -878,6 +954,8 @@ class ShardedEngine:
 
     def _make_serve(self, n_steps: int, keys: Tuple[str, ...],
                     stim_keys: Tuple[str, ...], record_raster: bool):
+        mon = self.monitor
+
         def local_fn(state, blocks, pn_params, vals, stim, steps_left):
             blocks = {k: self._squeeze_blocks(v) for k, v in blocks.items()}
             gs = dict(zip(keys, vals))
@@ -893,7 +971,10 @@ class ShardedEngine:
 
                 def body(carry, xs):
                     t_idx, stim_t = xs
-                    st, counts, bufs = carry
+                    if mon is not None:
+                        st, counts, bufs, hstate = carry
+                    else:
+                        st, counts, bufs = carry
                     st2, spk = self._local_step(st, blocks, pn_params, gs,
                                                 stim=stim_t)
                     act = t_idx < left
@@ -904,15 +985,25 @@ class ShardedEngine:
                     bufs = self._probe_write_local(bufs, caps, start,
                                                    t_idx, st2, spk,
                                                    blocks, gate=act)
-                    return (st2, counts, bufs), (spk if record_raster
-                                                 else None)
+                    out = spk if record_raster else None
+                    if mon is not None:
+                        hstate = HE.accumulate(
+                            mon, hstate, self._health_counts_local(spk),
+                            self._health_ok_local(st2, blocks), self.dt,
+                            self._pop_sizes, gate=act)
+                        return (st2, counts, bufs, hstate), out
+                    return (st2, counts, bufs), out
 
                 counts0 = {name: jnp.zeros((self._shard[name],), jnp.int32)
                            for name in self.net.populations}
                 xs = (jnp.arange(n_steps, dtype=jnp.int32),
                       st_stim if stim_keys else None)
-                (st2, counts, bufs), raster = jax.lax.scan(
-                    body, (st, counts0, bufs0), xs, length=n_steps)
+                carry0 = (st, counts0, bufs0)
+                if mon is not None:
+                    carry0 = carry0 + (HE.init_state(self._pop_sizes),)
+                carry_out, raster = jax.lax.scan(body, carry0, xs,
+                                                 length=n_steps)
+                st2, counts, bufs = carry_out[:3]
                 pdata, pcounts = self._probe_finalize_local(
                     bufs, caps, start, jnp.minimum(left, n_steps),
                     serving=True)
@@ -921,14 +1012,23 @@ class ShardedEngine:
                     prev_above=st2.prev_above,
                     syn=self._unsqueeze_syn(st2.syn), t=st2.t, key=st2.key,
                     finite=st2.finite)
+                if mon is not None:
+                    return st2, counts, raster, pdata, pcounts, carry_out[3]
                 return st2, counts, raster, pdata, pcounts
 
-            st2, counts, raster, pdata, pcounts = jax.vmap(one_stream)(
-                state, stim, steps_left)
+            out = jax.vmap(one_stream)(state, stim, steps_left)
+            st2, counts, raster, pdata, pcounts = out[:5]
             st2 = st2.__class__(
                 neurons=st2.neurons, spikes=st2.spikes,
                 prev_above=st2.prev_above, syn=st2.syn, t=st2.t,
                 key=st2.key, finite=self._combine_finite(st2.finite))
+            if mon is not None:
+                # per-device NaN-guard verdicts merge on the batched
+                # leaves (same pattern as the finite flag above); every
+                # other health leaf is already replicated
+                hstate = HE.combine_across_devices(out[5], self.axis)
+                health = HE.finalize(mon, hstate, self.dt, self._pop_sizes)
+                return st2, counts, raster, pdata, pcounts, health
             return st2, counts, raster, pdata, pcounts
 
         ax = self.axis
@@ -938,13 +1038,17 @@ class ShardedEngine:
                          for name in self.net.populations}
                         if record_raster else None)
         pdata_specs, pcount_specs = self._probe_out_specs(lead=(None,))
+        out_specs = (stream_specs, counts_specs, raster_specs,
+                     pdata_specs, pcount_specs)
+        if mon is not None:
+            out_specs = out_specs + (
+                HE.report_specs(self._pop_sizes, lambda: P(None)),)
         return self._shard_map(
             local_fn,
             in_specs=(stream_specs, self._block_specs, self._pn_specs,
                       tuple(P() for _ in keys), {k: P() for k in stim_keys},
                       P()),
-            out_specs=(stream_specs, counts_specs, raster_specs,
-                       pdata_specs, pcount_specs))
+            out_specs=out_specs)
 
     def serve_chunk(self, state: SimState, stim: Mapping[str, jax.Array],
                     steps_left: jax.Array, n_steps: int,
@@ -955,7 +1059,8 @@ class ShardedEngine:
         Simulator.serve_chunk (per-slot steps_left masking, masked lanes
         exact no-ops); outputs are cropped to real neurons.  Returns
         (state, counts, raster, recordings) with a leading stream axis on
-        every recordings leaf."""
+        every recordings leaf — plus a per-slot HealthReport when the
+        engine was built with a monitor."""
         gscales = dict(gscales or {})
         self._validate_gscales(gscales)
         self._validate_stim(stim)
@@ -964,18 +1069,28 @@ class ShardedEngine:
         keys = tuple(sorted(gscales))
         stim_keys = tuple(sorted(stim))
         cache_key = (n_steps, keys, stim_keys, record_raster)
-        if cache_key not in self._serve_cache:
+        compiled = cache_key not in self._serve_cache
+        if compiled:
             self._serve_cache[cache_key] = self._make_serve(
                 n_steps, keys, stim_keys, record_raster)
         vals = tuple(jnp.asarray(gscales[k], jnp.float32) for k in keys)
-        st2, counts, raster, pdata, pcounts = self._serve_cache[cache_key](
-            state, self._blocks, self._pn_params, vals, stim, steps_left)
+        n_streams = int(jax.tree.leaves(state)[0].shape[0])
+        with trace.span("serve_chunk", model=self.net.name,
+                        n_steps=n_steps, streams=n_streams, sharded=True,
+                        compile=compiled):
+            out = self._serve_cache[cache_key](
+                state, self._blocks, self._pn_params, vals, stim,
+                steps_left)
+        st2, counts, raster, pdata, pcounts = out[:5]
         pops = self.net.populations
         counts = {k: v[:, : pops[k].n] for k, v in counts.items()}
         if record_raster:
             raster = {k: v[:, :, : pops[k].n] for k, v in raster.items()}
         rec = Recordings(data=self._crop_probe_data(pdata), counts=pcounts)
-        return st2, counts, (raster if record_raster else None), rec
+        base = (st2, counts, (raster if record_raster else None), rec)
+        if self.monitor is not None:
+            return base + (out[5],)
+        return base
 
     # ------------------------------------------------------------------
     # on-demand custom updates (one shard_map'd program per update name)

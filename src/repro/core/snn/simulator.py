@@ -54,6 +54,7 @@ from repro.core.snn import probes as PR
 from repro.core.snn.network import Network
 from repro.core.snn.probes import Recordings
 from repro.core.snn.synapses import SynapseState
+from repro.obs import health as HE
 
 __all__ = ["Simulator", "SimState", "RunResult"]
 
@@ -87,10 +88,11 @@ class RunResult:
     finite: jax.Array
     raster: object = None                # legacy [steps, n] bool per pop
     recordings: object = None            # Recordings keyed by probe name
+    health: object = None                # HealthReport when built monitored
 
     def tree_flatten(self):
         return ((self.state, self.spike_counts, self.rates_hz, self.finite,
-                 self.raster, self.recordings), ())
+                 self.raster, self.recordings, self.health), ())
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -118,10 +120,19 @@ def _select_streams(state, fresh, idx):
 
 class Simulator:
     def __init__(self, net: Network, dt: float = 0.5, seed: int = 0,
-                 probes=(), custom_updates=()):
+                 probes=(), custom_updates=(), monitor=None):
         self.net = net
         self.dt = float(dt)
         self.seed = seed
+        # --- opt-in health monitor (None / enabled=False -> identical
+        # program: the scan body and carry never mention health) ---
+        if monitor is not None and monitor.enabled:
+            monitor.validate(net.populations)
+            self.monitor = monitor
+        else:
+            self.monitor = None
+        self._pop_sizes = {name: pop.n
+                           for name, pop in net.populations.items()}
         # --- code generation: one update fn per population model ---
         self._updates = {
             name: codegen.compile_sim(pop.model)
@@ -356,6 +367,31 @@ class Simulator:
                 use_window=not serving)
         return Recordings(data=data, counts=counts)
 
+    # ------------------------------------------------------------------
+    # health monitor plumbing (repro.obs.health; engine mirrors these with
+    # psum'd partial sums and lane-masked guards for bitwise parity)
+    # ------------------------------------------------------------------
+    def _health_counts(self, spikes) -> Dict[str, jax.Array]:
+        """Per-population scalar int32 spike count for one step."""
+        return {p: jnp.sum(spikes[p].astype(jnp.int32))
+                for p in self._pop_sizes}
+
+    def _health_ok(self, state: SimState) -> jax.Array:
+        """Scalar bool: V (where the model has one) and plastic g all
+        finite.  Invalid ELL slots are masked out — their g values are
+        never read by the dynamics, so they must not trip the guard."""
+        ok = jnp.ones((), bool)
+        for name in self.net.populations:
+            v = state.neurons[name].get("V")
+            if v is not None:
+                ok = ok & jnp.all(jnp.isfinite(v))
+        for g in self.net.synapses:
+            st = state.syn[g.name]
+            if st.g is not None:
+                ok = ok & jnp.all(jnp.isfinite(
+                    jnp.where(g.ell.valid, st.g, 0.0)))
+        return ok
+
     def _step_count(self, state: SimState) -> jax.Array:
         """Global step counter: probes and scheduled custom updates key
         their schedule off it so serving chunks line up with offline runs."""
@@ -377,22 +413,39 @@ class Simulator:
         stim = {k: jnp.asarray(v, jnp.float32) for k, v in (stim or {}).items()}
         start = self._step_count(state)
         bufs0, caps = self._probe_init(n_steps)
+        mon = self.monitor
 
         def body(carry, xs):
             i, stim_t = xs
-            st, counts, bufs = carry
+            if mon is not None:
+                st, counts, bufs, hstate = carry
+            else:
+                st, counts, bufs = carry
             st2, spk = self.step(st, gscales, stim=stim_t)
             counts = {k: counts[k] + spk[k] for k in counts}
             bufs = self._probe_write(bufs, caps, start, i, st2, spk)
             out = spk if record_raster else None
+            if mon is not None:
+                hstate = HE.accumulate(mon, hstate, self._health_counts(spk),
+                                       self._health_ok(st2), self.dt,
+                                       self._pop_sizes)
+                return (st2, counts, bufs, hstate), out
             return (st2, counts, bufs), out
 
         counts0 = {name: jnp.zeros((pop.n,), jnp.int32)
                    for name, pop in self.net.populations.items()}
         xs = (jnp.arange(n_steps, dtype=jnp.int32),
               stim if stim else None)
-        (state2, counts, bufs), raster = jax.lax.scan(
-            body, (state, counts0, bufs0), xs, length=n_steps)
+        carry0 = (state, counts0, bufs0)
+        if mon is not None:
+            carry0 = carry0 + (HE.init_state(self._pop_sizes),)
+        carry_out, raster = jax.lax.scan(body, carry0, xs, length=n_steps)
+        if mon is not None:
+            state2, counts, bufs, hstate = carry_out
+            health = HE.finalize(mon, hstate, self.dt, self._pop_sizes)
+        else:
+            state2, counts, bufs = carry_out
+            health = None
         rec = self._probe_finalize(bufs, caps, start, n_steps)
 
         t_sec = n_steps * self.dt * 1e-3
@@ -400,7 +453,7 @@ class Simulator:
         return RunResult(state=state2, spike_counts=counts, rates_hz=rates,
                          finite=state2.finite,
                          raster=raster if record_raster else None,
-                         recordings=rec)
+                         recordings=rec, health=health)
 
     # jit-compiled convenience wrapper (step count static) --------------
     def run_jit(self, n_steps: int, record_raster: bool = False):
@@ -470,13 +523,18 @@ class Simulator:
         stim = {k: jnp.asarray(v, jnp.float32) for k, v in stim.items()}
         steps_left = jnp.asarray(steps_left, jnp.int32)
 
+        mon = self.monitor
+
         def one_stream(st, st_stim, left):
             start = self._step_count(st)
             bufs0, caps = self._probe_init(n_steps, serving=True)
 
             def body(carry, xs):
                 t_idx, stim_t = xs
-                st, counts, bufs = carry
+                if mon is not None:
+                    st, counts, bufs, hstate = carry
+                else:
+                    st, counts, bufs = carry
                 st2, spk = self.step(st, gscales, stim=stim_t)
                 act = t_idx < left
                 st2 = jax.tree.map(lambda a, b: jnp.where(act, a, b),
@@ -485,17 +543,32 @@ class Simulator:
                 counts = {k: counts[k] + spk[k] for k in counts}
                 bufs = self._probe_write(bufs, caps, start, t_idx, st2,
                                          spk, gate=act)
-                return (st2, counts, bufs), (spk if record_raster else None)
+                out = spk if record_raster else None
+                if mon is not None:
+                    hstate = HE.accumulate(
+                        mon, hstate, self._health_counts(spk),
+                        self._health_ok(st2), self.dt, self._pop_sizes,
+                        gate=act)
+                    return (st2, counts, bufs, hstate), out
+                return (st2, counts, bufs), out
 
             counts0 = {name: jnp.zeros((pop.n,), jnp.int32)
                        for name, pop in self.net.populations.items()}
             xs = (jnp.arange(n_steps, dtype=jnp.int32),
                   st_stim if st_stim else None)
-            (st2, counts, bufs), raster = jax.lax.scan(
-                body, (st, counts0, bufs0), xs, length=n_steps)
+            carry0 = (st, counts0, bufs0)
+            if mon is not None:
+                carry0 = carry0 + (HE.init_state(self._pop_sizes),)
+            carry_out, raster = jax.lax.scan(body, carry0, xs,
+                                             length=n_steps)
+            st2, counts, bufs = carry_out[:3]
             rec = self._probe_finalize(bufs, caps, start,
                                        jnp.minimum(left, n_steps),
                                        serving=True)
+            if mon is not None:
+                health = HE.finalize(mon, carry_out[3], self.dt,
+                                     self._pop_sizes)
+                return st2, counts, raster, rec, health
             return st2, counts, raster, rec
 
         return jax.vmap(one_stream)(state, stim, steps_left)

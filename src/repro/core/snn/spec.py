@@ -46,6 +46,8 @@ from repro.core.snn.probes import ProbeSpec, Recordings
 from repro.core.snn.custom_updates import CustomUpdateSpec
 from repro.core.snn.simulator import RunResult, SimState, Simulator
 from repro.core.snn.synapses import Pulse, SynapseGroup
+from repro.kernels import autotune as AT
+from repro.obs import trace
 from repro.sparse import formats as F
 
 __all__ = ["ModelSpec", "CompiledModel", "SweepResult", "SpecError",
@@ -396,7 +398,7 @@ class ModelSpec:
 
     # -- build ------------------------------------------------------------
     def build(self, dt: float = 0.5, seed: int = 0, mesh=None,
-              init: str = "host") -> "CompiledModel":
+              init: str = "host", monitor=None) -> "CompiledModel":
         """Validate, resolve connectivity (seeded) and generate the
         simulator.
 
@@ -416,11 +418,33 @@ class ModelSpec:
         populations are partitioned along the neuron axis and `run` /
         `step` / `sweep_gscale` execute on the ShardedEngine; mesh=None
         keeps the single-device Simulator path.
+
+        monitor: a repro.obs.health.HealthConfig — compiles per-population
+        spike/rate accumulators, silent/saturation detectors and a NaN/Inf
+        guard into the step scan; `run`/`serve_chunk` then return a
+        HealthReport.  None (default) or enabled=False builds the exact
+        unmonitored program (same jaxpr).
         """
-        if init not in ("host", "device"):
-            raise SpecError(f"init must be 'host' or 'device', got {init!r}")
-        if not self.populations:
-            raise SpecError(f"model {self.name!r} declares no populations")
+        with trace.span("build", model=self.name, init=init,
+                        sharded=mesh is not None):
+            return self._build(dt=dt, seed=seed, mesh=mesh, init=init,
+                               monitor=monitor)
+
+    def _build(self, dt: float, seed: int, mesh, init: str,
+               monitor) -> "CompiledModel":
+        with trace.span("validate", populations=len(self.populations),
+                        synapses=len(self.synapses)):
+            if init not in ("host", "device"):
+                raise SpecError(
+                    f"init must be 'host' or 'device', got {init!r}")
+            if not self.populations:
+                raise SpecError(
+                    f"model {self.name!r} declares no populations")
+            if monitor is not None:
+                try:
+                    monitor.validate(self.populations)
+                except ValueError as e:
+                    raise SpecError(f"monitor: {e}") from None
         rng = np.random.default_rng(seed)
         base_key = jax.random.PRNGKey(seed) if init == "device" else None
         mutable = self._mutable_groups()
@@ -460,20 +484,26 @@ class ModelSpec:
             if init == "device":
                 from repro.sparse import device_init as DI
                 try:
-                    post_ind, g, valid = DI.device_resolve(
-                        sp.connect, jax.random.fold_in(base_key, sidx),
-                        n_pre, n_post_total, sp.weight)
-                    dd = (None if sp.delay is None else DI.device_delays(
-                        jax.random.fold_in(base_key, sidx), n_pre,
-                        post_ind.shape[1], sp.delay))
+                    with trace.span("device_init", group=sp.name,
+                                    rows=n_pre, n_post=n_post_total):
+                        post_ind, g, valid = DI.device_resolve(
+                            sp.connect, jax.random.fold_in(base_key, sidx),
+                            n_pre, n_post_total, sp.weight)
+                        dd = (None if sp.delay is None
+                              else DI.device_delays(
+                                  jax.random.fold_in(base_key, sidx), n_pre,
+                                  post_ind.shape[1], sp.delay))
                 except (ValueError, TypeError, NotImplementedError) as e:
                     # TypeError here is our own declaration check (numpy
                     # weight callables can't be traced), not a user bug
                     raise SpecError(f"{where}: {e}") from None
             else:
                 try:
-                    post_ind, g, valid = sp.connect.resolve(
-                        rng, n_pre, n_post_total, _as_weight_fn(sp.weight))
+                    with trace.span("host_init", group=sp.name,
+                                    rows=n_pre, n_post=n_post_total):
+                        post_ind, g, valid = sp.connect.resolve(
+                            rng, n_pre, n_post_total,
+                            _as_weight_fn(sp.weight))
                 except ValueError as e:
                     raise SpecError(f"{where}: {e}") from None
                 # delays draw from the same rng *after* connectivity and
@@ -520,19 +550,31 @@ class ModelSpec:
 
         # resolve the observation/intervention surface against the built
         # network (deep validation: vars, reductions, writability)
-        probes = PR.resolve_probes(self.probes, net)
-        custom = CU.resolve_custom_updates(self.custom_updates, net)
+        with trace.span("validate", probes=len(self.probes),
+                        custom_updates=len(self.custom_updates)):
+            probes = PR.resolve_probes(self.probes, net)
+            custom = CU.resolve_custom_updates(self.custom_updates, net)
+
+        # audit the tile the ELL-spmv kernel would pick for every group
+        # (choose_block_spmv records an instant trace event per decision:
+        # chosen tile, occupancy estimate, VMEM footprint — auditable even
+        # for groups the representation choice routed to the dense path)
+        for g in net.synapses:
+            AT.choose_block_spmv(g.ell.n_pre, g.ell.max_conn, g.ell.n_post,
+                                 b=1, tag=f"{g.name}:{g.representation}")
 
         engine = None
         if mesh is not None:
             from repro.core.snn.engine import ShardedEngine
-            engine = ShardedEngine(net, mesh, dt=dt, seed=seed,
-                                   probes=probes, custom_updates=custom)
-        return CompiledModel(
-            spec=self, network=net,
-            simulator=Simulator(net, dt=dt, seed=seed, probes=probes,
-                                custom_updates=custom),
-            engine=engine)
+            with trace.span("shard", devices=len(mesh.devices.flat)):
+                engine = ShardedEngine(net, mesh, dt=dt, seed=seed,
+                                       probes=probes, custom_updates=custom,
+                                       monitor=monitor)
+        with trace.span("codegen", populations=len(net.populations)):
+            sim = Simulator(net, dt=dt, seed=seed, probes=probes,
+                            custom_updates=custom, monitor=monitor)
+        return CompiledModel(spec=self, network=net, simulator=sim,
+                             engine=engine)
 
 
 @dataclasses.dataclass
@@ -585,6 +627,13 @@ class CompiledModel:
     @property
     def dt(self) -> float:
         return self.simulator.dt
+
+    @property
+    def monitor(self):
+        """The HealthConfig this model was built with (None when
+        unmonitored) — monitored models return a HealthReport as an extra
+        trailing element from serve_chunk and in RunResult.health."""
+        return self.simulator.monitor
 
     def init_state(self, key: Optional[jax.Array] = None) -> SimState:
         if self.engine is not None:
@@ -655,7 +704,8 @@ class CompiledModel:
         keys = tuple(sorted(gscales))
         stim_keys = tuple(sorted(stim))
         cache_key = (n_steps, keys, record_raster, stim_keys)
-        if cache_key not in self._run_cache:
+        compiled = cache_key not in self._run_cache
+        if compiled:
             sim = self.simulator
 
             @jax.jit
@@ -665,7 +715,9 @@ class CompiledModel:
 
             self._run_cache[cache_key] = _run
         vals = tuple(gscales[k] for k in keys)
-        return self._run_cache[cache_key](state, vals, stim)
+        with trace.span("run", model=self.spec.name, n_steps=n_steps,
+                        sharded=False, compile=compiled):
+            return self._run_cache[cache_key](state, vals, stim)
 
     def sweep_gscale(self, group: Union[str, Sequence[str]],
                      values, n_steps: int,
@@ -727,8 +779,9 @@ class CompiledModel:
         """Advance every stream slot by up to n_steps (one serving chunk),
         jit-compiled and cached per (n_steps, gscale keys, stim pops,
         record_raster).  Returns (state, counts, raster, recordings) —
-        see Simulator.serve_chunk for the masking contract; SNNServer
-        (repro.launch.snn_serve) drives this."""
+        plus a per-slot HealthReport as a 5th element when built with
+        `monitor=` — see Simulator.serve_chunk for the masking contract;
+        SNNServer (repro.launch.snn_serve) drives this."""
         if record_raster:
             self._warn_record_raster()
         gscales = self._norm_gscales(gscales)
@@ -740,7 +793,8 @@ class CompiledModel:
         keys = tuple(sorted(gscales))
         stim_keys = tuple(sorted(stim))
         cache_key = ("serve", n_steps, keys, stim_keys, record_raster)
-        if cache_key not in self._run_cache:
+        compiled = cache_key not in self._run_cache
+        if compiled:
             sim = self.simulator
 
             @jax.jit
@@ -751,7 +805,11 @@ class CompiledModel:
 
             self._run_cache[cache_key] = _serve
         vals = tuple(gscales[k] for k in keys)
-        return self._run_cache[cache_key](state, stim, steps_left, vals)
+        n_streams = int(jax.tree.leaves(state)[0].shape[0])
+        with trace.span("serve_chunk", model=self.spec.name,
+                        n_steps=n_steps, streams=n_streams, sharded=False,
+                        compile=compiled):
+            return self._run_cache[cache_key](state, stim, steps_left, vals)
 
     def serve(self, max_streams: int = 4, chunk: int = 50, **kwargs):
         """A streaming SNNServer over this model: `max_streams` device-

@@ -27,6 +27,8 @@ import dataclasses
 import math
 from typing import Dict, Sequence, Tuple
 
+from repro.obs import trace as _trace
+
 __all__ = [
     "TPULimits", "V5E", "occupancy", "choose_block_elementwise",
     "choose_block_matmul", "choose_block_spmv", "spmv_block_bytes",
@@ -159,7 +161,7 @@ def spmv_block_bytes(bp: int, bn: int, k: int, b: int,
 
 def choose_block_spmv(
     n_pre: int, k: int, n_post: int, b: int, dtype_bytes: int = 4,
-    lim: TPULimits = V5E,
+    lim: TPULimits = V5E, tag: str = "",
 ) -> Dict[str, int]:
     """Pick (bp, bn) tiles for the ELL one-hot-matmul spmv via the
     occupancy model (paper §3: smallest block that still hides latency;
@@ -168,7 +170,12 @@ def choose_block_spmv(
     The kernel loads full-K row tiles, so for very wide rows (K beyond a
     few thousand slots) *no* (bp, bn) fits VMEM: the result then carries
     ``feasible: False`` and the minimum (8, 128) tiling — callers
-    (repro.kernels.ell_spmv) split K into feasible chunks and sum."""
+    (repro.kernels.ell_spmv) split K into feasible chunks and sum.
+
+    Every decision is recorded as a ``choose_block_spmv`` trace instant
+    (repro.obs.trace) carrying the problem shape, chosen tile, occupancy
+    and VMEM footprint; ``tag`` attributes it (e.g. a synapse group name).
+    """
     bn_candidates = [bn for bn in (128, 256, 512, 1024)
                      if bn <= max(128, math.ceil(n_post / lim.lane)
                                   * lim.lane)]
@@ -191,12 +198,16 @@ def choose_block_spmv(
             bp *= 2
     if best is None or best[0][0] <= 0.0:
         blk = spmv_block_bytes(lim.sublane_f32, lim.lane, k, b, dtype_bytes)
-        return {"bp": lim.sublane_f32, "bn": lim.lane, "occupancy": 0.0,
-                "grid": (math.ceil(n_post / lim.lane)
-                         * math.ceil(n_pre / lim.sublane_f32)),
-                "block_bytes": blk,
-                "feasible": blk * lim.double_buffer <= lim.vmem_bytes}
-    return best[1]
+        cfg = {"bp": lim.sublane_f32, "bn": lim.lane, "occupancy": 0.0,
+               "grid": (math.ceil(n_post / lim.lane)
+                        * math.ceil(n_pre / lim.sublane_f32)),
+               "block_bytes": blk,
+               "feasible": blk * lim.double_buffer <= lim.vmem_bytes}
+    else:
+        cfg = best[1]
+    _trace.instant("choose_block_spmv", tag=tag, n_pre=n_pre, k=k,
+                   n_post=n_post, b=b, **cfg)
+    return cfg
 
 
 def occupancy_report(lim: TPULimits = V5E) -> str:

@@ -61,6 +61,10 @@ import numpy as np
 
 from repro.launch.scheduling import SlotScheduler
 from repro.launch.snn_serve import SNNServer, StreamRequest
+from repro.obs import profile as obs_profile
+# LatencyWindow moved to repro.obs.telemetry (PR 7); re-exported here for
+# existing importers — the soak driver and dashboards see the same class.
+from repro.obs.telemetry import LatencyWindow, PromText
 
 __all__ = ["Gateway", "GatewayRequest", "GatewayOverloaded",
            "GatewayWorker", "LatencyWindow"]
@@ -81,42 +85,6 @@ class GatewayOverloaded(RuntimeError):
         self.model = model
         self.queued = queued
         self.retry_after_s = retry_after_s
-
-
-class LatencyWindow:
-    """Bounded sample window with percentile readout (last ``cap``
-    samples — a long-lived gateway must not grow accounting without bound,
-    and SLO percentiles should reflect *recent* behaviour anyway)."""
-
-    def __init__(self, cap: int = 4096):
-        self._buf = collections.deque(maxlen=cap)
-        self.count = 0           # lifetime samples, not just the window
-
-    def add(self, x: float) -> None:
-        self._buf.append(float(x))
-        self.count += 1
-
-    def samples(self) -> List[float]:
-        """The windowed samples, oldest first (the soak driver splits
-        these into halves to assert latency stays flat over a run)."""
-        return list(self._buf)
-
-    def percentile(self, q: float) -> float:
-        if not self._buf:
-            return 0.0
-        s = sorted(self._buf)
-        i = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
-        return s[i]
-
-    def summary(self) -> Dict[str, float]:
-        if not self._buf:
-            return {"count": self.count, "p50": 0.0, "p99": 0.0,
-                    "mean": 0.0, "max": 0.0}
-        return {"count": self.count,
-                "p50": self.percentile(0.50),
-                "p99": self.percentile(0.99),
-                "mean": sum(self._buf) / len(self._buf),
-                "max": max(self._buf)}
 
 
 @dataclasses.dataclass
@@ -471,29 +439,25 @@ class Gateway:
         counters as ``gateway_<name>_total``, gauges plain, latency
         windows as quantile-labelled gauges in base units (seconds)."""
         m = self.metrics()
-        lines = [f"gateway_uptime_seconds {m['uptime_s']:.3f}"]
+        out = PromText()
+        out.sample("gateway_uptime_seconds", {}, m["uptime_s"], "{:.3f}")
         for name, wm in sorted(m["models"].items()):
-            lab = f'{{model="{name}"}}'
+            lab = {"model": name}
             for c, v in sorted(wm["counters"].items()):
-                lines.append(f"gateway_{c}_total{lab} {v}")
-            lines.append(f"gateway_slots{lab} {wm['bucket']}")
-            lines.append(f"gateway_active_streams{lab} {wm['active']}")
-            lines.append(f"gateway_queued_streams{lab} {wm['queued']}")
-            lines.append(f"gateway_slot_occupancy{lab} "
-                         f"{wm['occupancy']:.4f}")
-            lines.append(f"gateway_chunks_total{lab} {wm['chunks']}")
+                out.sample(f"gateway_{c}_total", lab, v)
+            out.sample("gateway_slots", lab, wm["bucket"])
+            out.sample("gateway_active_streams", lab, wm["active"])
+            out.sample("gateway_queued_streams", lab, wm["queued"])
+            out.sample("gateway_slot_occupancy", lab, wm["occupancy"],
+                       "{:.4f}")
+            out.sample("gateway_chunks_total", lab, wm["chunks"])
             for metric, unit in (("queue_wait_s", 1.0),
                                  ("total_latency_s", 1.0),
                                  ("step_latency_us", 1e-6)):
-                s = wm[metric]
                 base = metric.rsplit("_", 1)[0]
-                for q in ("p50", "p99"):
-                    lines.append(
-                        f'gateway_{base}_seconds{{model="{name}",'
-                        f'quantile="{q[1:]}"}} {s[q] * unit:.6f}')
-                lines.append(f'gateway_{base}_seconds_count{lab} '
-                             f'{s["count"]}')
-        return "\n".join(lines) + "\n"
+                out.quantiles(f"gateway_{base}_seconds", lab, wm[metric],
+                              unit=unit)
+        return out.render()
 
 
 # ---------------------------------------------------------------------------
@@ -535,6 +499,10 @@ def main(argv=None) -> int:
     ap.add_argument("--http", default="",
                     help="host:port — serve the async HTTP front door "
                          "instead of the batch demo")
+    ap.add_argument("--trace", default="", metavar="FILE",
+                    help="write a Chrome trace_event JSON of build/serve "
+                         "spans to FILE on exit (open in chrome://tracing "
+                         "or Perfetto)")
     args = ap.parse_args(argv)
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
@@ -550,7 +518,7 @@ def main(argv=None) -> int:
         from repro.launch.gateway_http import serve_http
         host, _, port = args.http.rpartition(":")
         serve_http(gw, host or "127.0.0.1", int(port))
-        return 0
+        return obs_profile.export_trace_cli(args.trace, "gateway")
 
     rng = np.random.default_rng(args.seed)
     names = sorted(models)
@@ -581,7 +549,7 @@ def main(argv=None) -> int:
     print(f"[gateway] {completed} completed, {evicted} evicted, "
           f"{rejected} rejected in {wall:.2f}s")
     print(gw.render_metrics())
-    return 0
+    return obs_profile.export_trace_cli(args.trace, "gateway")
 
 
 if __name__ == "__main__":

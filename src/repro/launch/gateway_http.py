@@ -21,6 +21,9 @@ Routes:
       -> 400 unknown model / malformed stimulus
   GET /metrics     Prometheus-style text (Gateway.render_metrics)
   GET /healthz     200 "ok"
+  GET /v1/trace    Chrome trace_event JSON of the process's build/serve
+                   spans so far (open in chrome://tracing / Perfetto) —
+                   a debug endpoint, not a stable API
 
 Start from the demo CLI (``python -m repro.launch.gateway --http
 127.0.0.1:8080``) or embed via ``GatewayHTTP``/``serve_http``.
@@ -36,6 +39,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.launch.gateway import Gateway, GatewayOverloaded
+from repro.obs import trace as obs_trace
 
 __all__ = ["GatewayHTTP", "serve_http"]
 
@@ -139,6 +143,10 @@ class GatewayHTTP:
         if method == "GET" and path == "/metrics":
             return _response(200, self.gateway.render_metrics().encode(),
                              "text/plain; version=0.0.4")
+        if method == "GET" and path == "/v1/trace":
+            return _response(200,
+                             json.dumps(obs_trace.chrome_trace()).encode(),
+                             "application/json")
         if path == "/v1/simulate":
             if method != "POST":
                 return _json_response(405, {"error": "POST required"})

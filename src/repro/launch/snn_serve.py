@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.scheduling import SlotScheduler
+from repro.obs import profile as obs_profile
 
 __all__ = ["SNNServer", "StreamRequest", "ChunkOutput"]
 
@@ -59,6 +60,10 @@ class ChunkOutput:
     raster: Optional[Dict[str, np.ndarray]]      # pop -> [n_steps, n] bool
     # probe name -> [samples_this_chunk, ...] (already cropped per slot)
     recordings: Optional[Dict[str, np.ndarray]] = None
+    # HealthReport.summary() dict for this slot over this chunk (monitored
+    # builds only): per-pop spike totals / rate EMAs / silent / saturated
+    # flags plus the NaN-guard verdict.  step indices are chunk-local.
+    health: Optional[Dict[str, object]] = None
 
 
 @dataclasses.dataclass
@@ -98,6 +103,35 @@ class StreamRequest:
             for k, v in c.raster.items():
                 out.setdefault(k, []).append(v)
         return {k: np.concatenate(v) for k, v in out.items()}
+
+    @property
+    def health(self) -> Optional[Dict[str, object]]:
+        """Aggregated health over all streamed chunks (monitored servers):
+        spike totals summed, NaN-guard verdicts OR'd (``first_bad_step``
+        rebased to stream-global step index), rate EMAs / silent /
+        saturated flags from the latest chunk (they reflect the most
+        recent dynamics by construction).  None on unmonitored servers."""
+        reports = [(c.start_step, c.health) for c in self.chunks
+                   if c.health is not None]
+        if not reports:
+            return None
+        last = reports[-1][1]
+        pops: Dict[str, Dict[str, object]] = {}
+        for p, cur in last["populations"].items():
+            pops[p] = dict(cur)
+            pops[p]["spikes"] = sum(int(h["populations"][p]["spikes"])
+                                    for _, h in reports)
+        first_bad = -1
+        for start, h in reports:
+            if int(h["first_bad_step"]) >= 0:
+                first_bad = start + int(h["first_bad_step"])
+                break
+        return {
+            "steps": sum(int(h["steps"]) for _, h in reports),
+            "nonfinite": any(bool(h["nonfinite"]) for _, h in reports),
+            "first_bad_step": first_bad,
+            "populations": pops,
+        }
 
     @property
     def recordings(self) -> Dict[str, np.ndarray]:
@@ -225,9 +259,15 @@ class SNNServer:
         per-step latency sample."""
         t0 = time.perf_counter()
         stim, steps_left = self._assemble()
-        self.states, counts, raster, rec = self.model.serve_chunk(
+        out = self.model.serve_chunk(
             self.states, stim, steps_left, self.chunk,
             gscales=self.gscales, record_raster=self.record_raster)
+        # monitored builds append a per-slot HealthReport (5-tuple)
+        monitored = getattr(self.model, "monitor", None) is not None
+        if monitored:
+            self.states, counts, raster, rec, health = out
+        else:
+            (self.states, counts, raster, rec), health = out, None
         counts = {k: np.asarray(v) for k, v in counts.items()}
         if raster is not None:
             raster = {k: np.asarray(v) for k, v in raster.items()}
@@ -249,7 +289,9 @@ class SNNServer:
                         else {k: v[slot, :took].copy()
                               for k, v in raster.items()}),
                 recordings={k: v[slot, : int(rec_counts[k][slot])].copy()
-                            for k, v in rec_data.items()}))
+                            for k, v in rec_data.items()},
+                health=(health.summary(slot) if health is not None
+                        else None)))
             self._cursor[slot] = start + took
             if self._cursor[slot] >= req.n_steps:
                 req.done = True
@@ -296,7 +338,7 @@ class SNNServer:
 # demo CLI
 # ---------------------------------------------------------------------------
 
-def _build_model(name: str, devices: int, full: bool):
+def _build_model(name: str, devices: int, full: bool, monitor=None):
     """(model, stim populations, stimulus current scale) for the demo."""
     mesh = None
     if devices:
@@ -310,13 +352,13 @@ def _build_model(name: str, devices: int, full: bool):
         cfg = (MushroomBodyConfig(kc_probe_every=5) if full else
                MushroomBodyConfig(n_pn=20, n_lhi=5, n_kc=100, n_dn=20,
                                   kc_probe_every=5))
-        return compile_model(cfg, mesh=mesh), ("KC",), 1.5
+        return compile_model(cfg, mesh=mesh, monitor=monitor), ("KC",), 1.5
     if name == "izhikevich":
         from repro.core.models.izhikevich_net import (IzhikevichNetConfig,
                                                       compile_model)
         cfg = (IzhikevichNetConfig() if full else
                IzhikevichNetConfig(n_total=200, n_conn=30))
-        return compile_model(cfg, mesh=mesh), ("exc",), 3.0
+        return compile_model(cfg, mesh=mesh, monitor=monitor), ("exc",), 3.0
     raise SystemExit(f"unknown --model {name!r} "
                      "(expected mushroom_body or izhikevich)")
 
@@ -424,12 +466,26 @@ def main(argv=None) -> int:
                     help="route the demo through the serving gateway with "
                          "this per-request deadline on every other request "
                          "(exercises deadline eviction end-to-end)")
+    ap.add_argument("--health", action="store_true",
+                    help="compile the on-device activity monitor into the "
+                         "serve program (repro.obs.health) and print a "
+                         "per-stream health line: spike totals, rate EMAs, "
+                         "silent/saturated flags, NaN guard")
+    ap.add_argument("--trace", default="", metavar="FILE",
+                    help="write a Chrome trace_event JSON of build/serve "
+                         "spans to FILE on exit (open in chrome://tracing "
+                         "or Perfetto)")
     args = ap.parse_args(argv)
 
+    monitor = None
+    if args.health:
+        from repro.obs.health import HealthConfig
+        monitor = HealthConfig()
     model, stim_pops, scale = _build_model(args.model, args.devices,
-                                           args.full)
+                                           args.full, monitor=monitor)
     if args.deadline_ms is not None:
-        return _run_gateway_demo(model, stim_pops, scale, args)
+        code = _run_gateway_demo(model, stim_pops, scale, args)
+        return code or obs_profile.export_trace_cli(args.trace, "snn_serve")
     pops = {p: model.network.populations[p].n for p in stim_pops}
     print(f"[snn_serve] {model!r}")
     print(f"[snn_serve] streams={args.streams} chunk={args.chunk} "
@@ -467,6 +523,18 @@ def main(argv=None) -> int:
         probes = {k: v.shape for k, v in rec.items()}
         print(f"  stream{r.rid}: T={r.n_steps} spikes={rates}"
               + (f" probes={probes}" if probes else ""))
+    if args.health:
+        for r in finished:
+            h = r.health
+            flags = [p for p, d in h["populations"].items() if d["silent"]]
+            sat = [p for p, d in h["populations"].items() if d["saturated"]]
+            ema = {p: round(d["rate_ema_hz"], 2)
+                   for p, d in h["populations"].items()}
+            print(f"  health stream{r.rid}: rate_ema_hz={ema} "
+                  f"silent={flags or 'none'} saturated={sat or 'none'} "
+                  f"nonfinite={h['nonfinite']}"
+                  + (f" first_bad_step={h['first_bad_step']}"
+                     if h["nonfinite"] else ""))
 
     if len(finished) != args.requests:
         print("[snn_serve] FAILED: not all streams finished",
@@ -481,7 +549,7 @@ def main(argv=None) -> int:
             return 1
         print("[snn_serve] exactness check: served stream 0 exact "
               "vs offline run (spike counts + probe recordings)")
-    return 0
+    return obs_profile.export_trace_cli(args.trace, "snn_serve")
 
 
 if __name__ == "__main__":

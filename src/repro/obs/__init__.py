@@ -1,0 +1,13 @@
+"""Observability subsystem: tracing, metrics, health monitors, profiling.
+
+- :mod:`repro.obs.trace` — structured spans + Chrome trace_event export
+- :mod:`repro.obs.telemetry` — counters/gauges/histograms + Prometheus text
+- :mod:`repro.obs.health` — on-device activity monitor (``build(monitor=)``)
+- :mod:`repro.obs.profile` — wall-clock phases + jax.profiler hooks
+"""
+from repro.obs import trace  # noqa: F401
+from repro.obs.health import HealthConfig, HealthReport  # noqa: F401
+from repro.obs.telemetry import LatencyWindow, MetricsRegistry  # noqa: F401
+
+__all__ = ["trace", "HealthConfig", "HealthReport", "LatencyWindow",
+           "MetricsRegistry"]

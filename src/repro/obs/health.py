@@ -1,0 +1,257 @@
+"""On-device activity health monitoring compiled into the step scan.
+
+The paper's headline tuning concern is scaling synaptic conductances "to
+ensure sufficient spiking": a silent or saturated population is the failure
+mode.  :class:`HealthConfig` (passed as ``build(..., monitor=...)``)
+compiles a small accumulator *into* the simulation scan:
+
+- per-population spike counts and an exponential-moving-average firing
+  rate (Hz, time constant ``ema_tau_ms``);
+- silent / saturated detectors: final EMA below/above a per-population
+  ``bands_hz`` entry (or ``default_band_hz``);
+- a NaN/Inf guard on membrane potential ``V`` and plastic conductance
+  ``g`` recording the *first* bad step.
+
+The result is a :class:`HealthReport` pytree returned from ``run`` /
+``serve_chunk``.  Monitoring is strictly zero-cost when disabled: the
+scan body and carry are built under a Python-level conditional, so a
+monitor-off build produces the *same jaxpr* as an unmonitored one (the
+same gating discipline as the 0-probe path).
+
+Bitwise host/sharded parity: per-step counts are integer sums (the sharded
+engine ``psum``'s per-device partial int32 sums — integer addition is
+exact), and every subsequent float op uses Python-precomputed constants
+(``alpha``, ``1/(n·dt)``) with an identical instruction sequence on host
+and devices, so the sharded report equals the host report bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["HealthConfig", "HealthState", "HealthReport", "NO_BAD_STEP"]
+
+# Sentinel for "no non-finite value seen yet"; pmin-reducible across
+# devices, mapped to -1 in the finalized report.
+NO_BAD_STEP = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Knobs for the compiled-in activity monitor.
+
+    enabled: master switch — ``HealthConfig(enabled=False)`` builds the
+        exact unmonitored program (same jaxpr as ``monitor=None``).
+    ema_tau_ms: time constant of the firing-rate EMA.  The per-step
+        update is ``ema += alpha * (rate - ema)`` with
+        ``alpha = 1 - exp(-dt/tau)``.
+    bands_hz: population name -> (lo_hz, hi_hz) healthy firing band;
+        populations not listed fall back to ``default_band_hz``.
+    default_band_hz: band for unlisted populations; ``None`` disables
+        silent/saturated detection for them.
+    nan_guard: fold an ``isfinite`` check on every population's ``V``
+        (when the model has one) and every plastic group's ``g`` into the
+        report, recording the first offending step.
+    """
+    enabled: bool = True
+    ema_tau_ms: float = 20.0
+    bands_hz: Mapping[str, Tuple[float, float]] = dataclasses.field(
+        default_factory=dict)
+    default_band_hz: Optional[Tuple[float, float]] = (1.0, 200.0)
+    nan_guard: bool = True
+
+    def validate(self, pop_names) -> None:
+        """Raise ValueError on unknown populations / malformed bands."""
+        if self.ema_tau_ms <= 0:
+            raise ValueError(
+                f"ema_tau_ms must be > 0, got {self.ema_tau_ms}")
+        unknown = set(self.bands_hz) - set(pop_names)
+        if unknown:
+            raise ValueError(
+                f"unknown band population(s) {sorted(unknown)}; declared "
+                f"populations: {sorted(pop_names)}")
+        for name, band in list(self.bands_hz.items()) + (
+                [("<default>", self.default_band_hz)]
+                if self.default_band_hz is not None else []):
+            lo, hi = band
+            if not (lo <= hi):
+                raise ValueError(
+                    f"band for {name!r} has lo > hi: ({lo}, {hi})")
+
+    def band(self, pop: str) -> Optional[Tuple[float, float]]:
+        return self.bands_hz.get(pop, self.default_band_hz)
+
+    def alpha(self, dt_ms: float) -> float:
+        return float(1.0 - math.exp(-float(dt_ms) / self.ema_tau_ms))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HealthState:
+    """Scan-carried accumulator (all scalars; dicts keyed by population)."""
+    spike_total: Dict[str, jax.Array]   # int32
+    rate_ema_hz: Dict[str, jax.Array]   # float32
+    steps: jax.Array                    # int32 (active steps accumulated)
+    nonfinite: jax.Array                # bool
+    first_bad_step: jax.Array           # int32, NO_BAD_STEP sentinel
+
+    def tree_flatten(self):
+        return ((self.spike_total, self.rate_ema_hz, self.steps,
+                 self.nonfinite, self.first_bad_step), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HealthReport:
+    """Finalized monitor output; under serving each leaf gains a leading
+    stream axis (per-slot reports)."""
+    spike_total: Dict[str, jax.Array]    # int32: population spike total
+    rate_ema_hz: Dict[str, jax.Array]    # float32: final EMA rate
+    mean_rate_hz: Dict[str, jax.Array]   # float32: total/(n*steps*dt)
+    silent: Dict[str, jax.Array]         # bool: EMA below band lo
+    saturated: Dict[str, jax.Array]      # bool: EMA above band hi
+    steps: jax.Array                     # int32
+    nonfinite: jax.Array                 # bool
+    first_bad_step: jax.Array            # int32, -1 when never tripped
+
+    def tree_flatten(self):
+        return ((self.spike_total, self.rate_ema_hz, self.mean_rate_hz,
+                 self.silent, self.saturated, self.steps, self.nonfinite,
+                 self.first_bad_step), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def summary(self, slot: Optional[int] = None) -> dict:
+        """Host-side plain-python view (optionally one serving slot)."""
+        import numpy as np
+
+        def sel(x):
+            a = np.asarray(x)
+            return a[slot] if slot is not None else a
+
+        pops = {}
+        for p in sorted(self.spike_total):
+            pops[p] = {
+                "spikes": int(sel(self.spike_total[p])),
+                "rate_ema_hz": float(sel(self.rate_ema_hz[p])),
+                "mean_rate_hz": float(sel(self.mean_rate_hz[p])),
+                "silent": bool(sel(self.silent[p])),
+                "saturated": bool(sel(self.saturated[p])),
+            }
+        return {
+            "steps": int(sel(self.steps)),
+            "nonfinite": bool(sel(self.nonfinite)),
+            "first_bad_step": int(sel(self.first_bad_step)),
+            "populations": pops,
+        }
+
+
+# ---------------------------------------------------------------------------
+# scan plumbing (shared by the host Simulator and the ShardedEngine)
+# ---------------------------------------------------------------------------
+
+def init_state(pop_sizes: Mapping[str, int]) -> HealthState:
+    return HealthState(
+        spike_total={p: jnp.zeros((), jnp.int32) for p in pop_sizes},
+        rate_ema_hz={p: jnp.zeros((), jnp.float32) for p in pop_sizes},
+        steps=jnp.zeros((), jnp.int32),
+        nonfinite=jnp.zeros((), bool),
+        first_bad_step=jnp.full((), NO_BAD_STEP, jnp.int32),
+    )
+
+
+def accumulate(cfg: HealthConfig, hs: HealthState,
+               counts: Mapping[str, jax.Array], ok: jax.Array,
+               dt_ms: float, pop_sizes: Mapping[str, int],
+               gate: Optional[jax.Array] = None) -> HealthState:
+    """One post-step update.
+
+    counts: population -> scalar int32 spike count for this step (already
+    summed over the *full* population — the engine psums partial sums
+    before calling).  ok: scalar bool, True when V/g are all finite this
+    step.  gate: optional scalar bool (serving's per-slot active mask) —
+    when False the state passes through untouched.
+    """
+    alpha = jnp.float32(cfg.alpha(dt_ms))
+    new_total, new_ema = {}, {}
+    for p, n in pop_sizes.items():
+        c = counts[p]
+        new_total[p] = hs.spike_total[p] + c
+        # rate in Hz: count / (n * dt_s); 1/(n*dt_s) precomputed in python
+        inv = jnp.float32(1.0 / (n * dt_ms * 1e-3))
+        rate = c.astype(jnp.float32) * inv
+        new_ema[p] = hs.rate_ema_hz[p] + alpha * (rate - hs.rate_ema_hz[p])
+    if cfg.nan_guard:
+        bad = ~ok
+        first = jnp.where(bad & (hs.first_bad_step == NO_BAD_STEP),
+                          hs.steps, hs.first_bad_step)
+        nonfinite = hs.nonfinite | bad
+    else:
+        first = hs.first_bad_step
+        nonfinite = hs.nonfinite
+    new = HealthState(spike_total=new_total, rate_ema_hz=new_ema,
+                      steps=hs.steps + 1, nonfinite=nonfinite,
+                      first_bad_step=first)
+    if gate is None:
+        return new
+    return jax.tree.map(lambda a, b: jnp.where(gate, a, b), new, hs)
+
+
+def report_specs(pop_sizes: Mapping[str, int], make_leaf) -> HealthReport:
+    """Spec twin of a HealthReport (e.g. shard_map out_specs): every leaf
+    is ``make_leaf()`` — all health leaves are replicated scalars (or
+    stream-leading vectors under serving)."""
+    def d():
+        return {p: make_leaf() for p in pop_sizes}
+    return HealthReport(spike_total=d(), rate_ema_hz=d(), mean_rate_hz=d(),
+                        silent=d(), saturated=d(), steps=make_leaf(),
+                        nonfinite=make_leaf(), first_bad_step=make_leaf())
+
+
+def combine_across_devices(hs: HealthState, axis: str) -> HealthState:
+    """Merge per-device NaN-guard verdicts at scan exit (inside shard_map).
+
+    Spike totals, EMAs and step counts are already replicated (they are
+    built from psum'd counts); only the guard fields differ per device:
+    ``nonfinite`` ORs (pmax) and ``first_bad_step`` takes the earliest
+    step (pmin over the NO_BAD_STEP-sentineled int32).
+    """
+    nonfinite = jax.lax.pmax(hs.nonfinite.astype(jnp.int32), axis) == 1
+    first = jax.lax.pmin(hs.first_bad_step, axis)
+    return HealthState(spike_total=hs.spike_total,
+                       rate_ema_hz=hs.rate_ema_hz, steps=hs.steps,
+                       nonfinite=nonfinite, first_bad_step=first)
+
+
+def finalize(cfg: HealthConfig, hs: HealthState, dt_ms: float,
+             pop_sizes: Mapping[str, int]) -> HealthReport:
+    """HealthState -> HealthReport (elementwise; vmap-safe for serving)."""
+    steps_f = jnp.maximum(hs.steps.astype(jnp.float32), 1.0)
+    mean, silent, saturated = {}, {}, {}
+    for p, n in pop_sizes.items():
+        inv = jnp.float32(1.0 / (n * float(dt_ms) * 1e-3))
+        mean[p] = hs.spike_total[p].astype(jnp.float32) * inv / steps_f
+        band = cfg.band(p)
+        if band is None:
+            silent[p] = jnp.zeros_like(hs.nonfinite)
+            saturated[p] = jnp.zeros_like(hs.nonfinite)
+        else:
+            lo, hi = band
+            silent[p] = hs.rate_ema_hz[p] < jnp.float32(lo)
+            saturated[p] = hs.rate_ema_hz[p] > jnp.float32(hi)
+    first = jnp.where(hs.first_bad_step == NO_BAD_STEP,
+                      jnp.int32(-1), hs.first_bad_step)
+    return HealthReport(spike_total=hs.spike_total,
+                        rate_ema_hz=hs.rate_ema_hz, mean_rate_hz=mean,
+                        silent=silent, saturated=saturated, steps=hs.steps,
+                        nonfinite=hs.nonfinite, first_bad_step=first)
