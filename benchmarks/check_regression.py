@@ -36,13 +36,20 @@ measure the identical unobserved hot path (same model, sizes, steps), so
 a monitor-off build drifting away from the 0-probe baseline is a real
 regression even if its own baseline was regenerated alongside it.
 
+  BENCH_snn_event.json    modes[].us_per_step            (lower is better;
+                          dense vs event step time per firing rate)
+                          speedups[].event_speedup       (higher is better;
+                          the sparse-activity win the event path exists for)
+
 Construction times and other fields are reported but never gate (first-call
 jit noise dominates them at CI sizes).  A missing fresh file or baseline is
 a warning, not a failure, so the gate cannot mask a bench crash silently —
 CI runs the benches as separate steps that fail on their own.  A malformed
-JSON likewise warns and skips that gate instead of aborting the run, and
-the final summary lists **every** failing metric (one bad gate never hides
-the rest).
+*fresh* JSON likewise warns and skips (the bench step that wrote it fails
+on its own); a malformed **committed baseline** is a hard failure — it is
+repo content, nothing else will catch it, and silently skipping it would
+disarm every gate on that file.  The final summary lists **every** failing
+metric (one bad gate never hides the rest).
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         [--fresh experiments/bench] [--baseline benchmarks/baselines] \
@@ -86,6 +93,12 @@ GATES = [
     ("BENCH_gateway_soak.json", "summary",
      ("devices", "n_total"),
      ("streams", "chunk", "n_steps"), "p99_flat_ratio", "lower"),
+    ("BENCH_snn_event.json", "modes",
+     ("n_pre", "n_conn", "n_steps"),
+     ("mode", "rate_pct"), "us_per_step", "lower"),
+    ("BENCH_snn_event.json", "speedups",
+     ("n_pre", "n_conn", "n_steps"),
+     ("rate_pct",), "event_speedup", "higher"),
 ]
 
 
@@ -98,14 +111,24 @@ CROSS_GATES = [
 ]
 
 
-def _load(path: Path):
+def _load(path: Path, bad_baselines: set | None = None):
+    """Parse one bench JSON.  Fresh files (bad_baselines=None) warn-skip on
+    malformed content — the bench step that wrote them fails CI on its own.
+    Committed baselines record into `bad_baselines` instead: check() turns
+    a non-empty set into a hard failure (nothing else guards repo content,
+    and skipping would silently disarm every gate on the file)."""
     if not path.exists():
         return None
     try:
         return json.loads(path.read_text())
     except ValueError as e:
-        print(f"[check_regression] WARN: malformed JSON in {path}: {e} — "
-              "skipping gates on this file")
+        if bad_baselines is not None:
+            print(f"[check_regression] ERROR: malformed committed baseline "
+                  f"{path}: {e} — fix or regenerate it")
+            bad_baselines.add(str(path))
+        else:
+            print(f"[check_regression] WARN: malformed JSON in {path}: {e} "
+                  "— skipping gates on this file")
         return None
 
 
@@ -134,10 +157,11 @@ def _compare(failures, tag, fields, key, metric, direction, got, want,
 
 def check(fresh_dir: Path, base_dir: Path, max_ratio: float) -> int:
     failures, checked = [], 0
+    bad_baselines: set = set()
     for fname, series, pfields, fields, metric, direction in GATES:
         try:
             fresh = _load(fresh_dir / fname)
-            base = _load(base_dir / fname)
+            base = _load(base_dir / fname, bad_baselines)
             if fresh is None:
                 print(f"[check_regression] WARN: no fresh {fname} "
                       f"(bench not run?)")
@@ -175,7 +199,7 @@ def check(fresh_dir: Path, base_dir: Path, max_ratio: float) -> int:
          metric, direction) in CROSS_GATES:
         try:
             fresh = _load(fresh_dir / ffname)
-            base = _load(base_dir / bfname)
+            base = _load(base_dir / bfname, bad_baselines)
             if fresh is None or base is None:
                 print(f"[check_regression] WARN: cross gate {ffname} vs "
                       f"{bfname} missing a side — skipping")
@@ -205,6 +229,10 @@ def check(fresh_dir: Path, base_dir: Path, max_ratio: float) -> int:
 
     if not checked:
         print("[check_regression] WARN: nothing compared")
+    if bad_baselines:
+        print(f"[check_regression] FAILED: {len(bad_baselines)} malformed "
+              f"committed baseline(s): {sorted(bad_baselines)}")
+        return 1
     if failures:
         print(f"[check_regression] FAILED: {len(failures)} gross "
               f"regression(s) (over per-metric tolerance):")

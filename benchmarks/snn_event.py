@@ -1,0 +1,138 @@
+"""Event-driven propagation benchmark: dense vs event step time by rate.
+
+Sweeps firing rate x propagation mode on one static synapse group and scans
+`SynapseGroup.step` — the spike raster is precomputed Bernoulli at each
+rate, so the activity level is exact and the two modes run the identical
+workload.  The event path compacts the spiking pre rows before the ELL
+pass (bit-exact, dense fallback on capacity overflow); its win is the
+gated metric: at sparse activity (<= 5% firing — the regime GeNN's
+event-driven kernels target) the event step must stay well ahead of the
+dense step, and check_regression.py compares both the per-row step times
+("modes") and the dense/event ratio ("speedups") against the committed
+baseline.  High-rate rows are reported for the trajectory only — there the
+crossover model itself says dense is the right choice.
+
+Emits ``experiments/bench/BENCH_snn_event.json`` and prints harness CSV
+rows.
+
+    PYTHONPATH=src python -m benchmarks.snn_event
+
+Env knobs (kept small in CI): SNN_EVENT_BENCH_N (pre/post neurons,
+default 4096), SNN_EVENT_BENCH_NCONN (fanout, default 64),
+SNN_EVENT_BENCH_STEPS (default 200), SNN_EVENT_BENCH_REPS (default 3),
+SNN_EVENT_BENCH_RATES (percent list, default "1,5,10,25").
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+OUT_NAME = "BENCH_snn_event.json"
+
+# speedup rows are gated only where the event path is supposed to win
+GATED_RATE_PCT = 5.0
+
+
+def _build_group(n_pre: int, n_conn: int, mode: str):
+    import numpy as np
+
+    from repro.core.snn.synapses import SynapseGroup
+    from repro.sparse import formats as F
+
+    rng = np.random.default_rng(0)
+    post_ind, g, valid = F.FixedFanout(n_conn).resolve(
+        rng, n_pre, n_pre, lambda r, s: r.random(s).astype(np.float32))
+    return SynapseGroup(
+        name=f"bench_{mode}", pre="pop", post="pop",
+        ell=F.triple_to_ell(post_ind, g, valid, n_pre),
+        propagation=mode)
+
+
+def _time_mode(group, raster, n_steps: int, reps: int) -> float:
+    import jax
+    import jax.numpy as jnp
+
+    state = group.init_state()
+    gs = jnp.float32(1.0)
+
+    @jax.jit
+    def scan(st, spikes):
+        def body(carry, spk):
+            s, acc = carry
+            s2, cur = group.step(s, spk, gs, 1.0)
+            return (s2, acc + cur), None
+
+        (s2, acc), _ = jax.lax.scan(body, (st, jnp.zeros(group.ell.n_post)),
+                                    spikes)
+        return acc
+
+    jax.block_until_ready(scan(state, raster))       # warm the executable
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(scan(state, raster))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    n_pre = int(os.environ.get("SNN_EVENT_BENCH_N", 4096))
+    n_conn = int(os.environ.get("SNN_EVENT_BENCH_NCONN", 64))
+    n_steps = int(os.environ.get("SNN_EVENT_BENCH_STEPS", 200))
+    reps = int(os.environ.get("SNN_EVENT_BENCH_REPS", 3))
+    rates = [float(r) for r in os.environ.get(
+        "SNN_EVENT_BENCH_RATES", "1,5,10,25").split(",")]
+    n_conn = min(n_conn, n_pre)
+
+    groups = {m: _build_group(n_pre, n_conn, m) for m in ("dense", "event")}
+    cap = groups["event"].event_capacity
+    print(f"event_capacity={cap} ({cap / n_pre:.1%} of {n_pre} rows)",
+          flush=True)
+
+    rng = np.random.default_rng(7)
+    rows, speedups = [], []
+    for rate in rates:
+        raster = jnp.asarray(rng.random((n_steps, n_pre)) < rate / 100.0)
+        us = {}
+        for mode in ("dense", "event"):
+            wall = _time_mode(groups[mode], raster, n_steps, reps)
+            us[mode] = wall / n_steps * 1e6
+            rows.append({"mode": mode, "rate_pct": rate,
+                         "wall_s": wall, "us_per_step": us[mode]})
+            print(f"mode={mode},rate={rate},{us[mode]:.1f},us_per_step",
+                  flush=True)
+        speedup = us["dense"] / us["event"]
+        entry = {"rate_pct": rate, "dense_us_per_step": us["dense"],
+                 "event_us_per_step": us["event"]}
+        if rate <= GATED_RATE_PCT:
+            entry["event_speedup"] = speedup
+        else:
+            entry["event_speedup_ungated"] = speedup
+        speedups.append(entry)
+        print(f"speedup,rate={rate},{speedup:.2f}x", flush=True)
+
+    payload = {
+        "backend": jax.default_backend(),
+        "n_pre": n_pre,
+        "n_conn": n_conn,
+        "n_steps": n_steps,
+        "event_capacity": cap,
+        "modes": rows,
+        "speedups": speedups,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / OUT_NAME).write_text(json.dumps(payload, indent=1,
+                                               default=float))
+    print(f"wrote {RESULTS / OUT_NAME}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

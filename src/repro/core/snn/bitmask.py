@@ -1,0 +1,64 @@
+"""uint32 spike bitmasks (GeNN's 32x packing) for exchange and storage.
+
+A bool spike vector costs one byte per neuron on the wire; packing 32
+neurons per uint32 word cuts the sharded engine's per-step all-gather
+payload 8x (bool byte -> bit) and shrinks device-resident `spikes`-probe
+ring buffers by the same factor.  Packing is exact — bools round-trip
+bit-for-bit — so it never perturbs the bit-exactness contract.
+
+Word w holds neurons [32w, 32w+32); neuron n is bit (n % 32) of word
+n // 32 (LSB-first).  Trailing bits of the last word are zero.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["words_for", "pack_spikes", "unpack_spikes", "pack_rows",
+           "unpack_rows", "unpack_segments"]
+
+_BITS = 32
+
+
+def words_for(n: int) -> int:
+    """uint32 words needed for n spike bits (>= 1)."""
+    return max(1, -(-int(n) // _BITS))
+
+
+def pack_spikes(bits: jax.Array) -> jax.Array:
+    """bool[n] -> uint32[words_for(n)] (LSB-first within each word)."""
+    n = bits.shape[-1]
+    w = words_for(n)
+    b = jnp.asarray(bits, jnp.uint32)
+    b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, w * _BITS - n)])
+    b = b.reshape(b.shape[:-1] + (w, _BITS))
+    shifts = jnp.arange(_BITS, dtype=jnp.uint32)
+    # bits are disjoint within a word, so the sum is exact (< 2**32)
+    return jnp.sum(b << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_spikes(words: jax.Array, n: int) -> jax.Array:
+    """uint32[W] -> bool[n] (inverse of pack_spikes)."""
+    shifts = jnp.arange(_BITS, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(bits.shape[:-2] + (-1,))
+    return flat[..., :n].astype(bool)
+
+
+def pack_rows(bits: jax.Array) -> jax.Array:
+    """bool[..., n] -> uint32[..., words_for(n)] (rows packed independently)."""
+    return pack_spikes(bits)
+
+
+def unpack_rows(words: jax.Array, n: int) -> jax.Array:
+    """uint32[..., W] -> bool[..., n]."""
+    return unpack_spikes(words, n)
+
+
+def unpack_segments(words: jax.Array, n_per_seg: int) -> jax.Array:
+    """uint32[D, W] (one packed segment per device) -> bool[D * n_per_seg].
+
+    Each row packs n_per_seg bits; rows are unpacked independently and
+    concatenated, matching an all-gather of per-device bool shards."""
+    return unpack_spikes(words, n_per_seg).reshape(-1)

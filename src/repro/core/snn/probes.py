@@ -45,7 +45,7 @@ from repro.core.snn.errors import SpecError
 __all__ = ["ProbeSpec", "ResolvedProbe", "Recordings", "REDUCE_OPS",
            "resolve_probes", "validate_probe_scalars", "capacity",
            "probe_base", "write_sample", "finalize", "vector_reduce",
-           "masked_reduce"]
+           "masked_reduce", "is_packed"]
 
 REDUCE_OPS = ("sum", "mean", "max", "min")
 
@@ -197,6 +197,14 @@ def resolve_probes(specs, net) -> Tuple[ResolvedProbe, ...]:
             f"populations {sorted(net.populations)}, synapse groups "
             f"{sorted(groups)}")
     return tuple(out)
+
+
+def is_packed(probe: ResolvedProbe) -> bool:
+    """True when the probe's ring rows are stored as uint32 spike bitmasks
+    (unreduced `spikes` probes — GeNN's recording-bitmask layout).  Packing
+    is storage-only: rows are unpacked back to bool at finalize, so
+    `Recordings` keeps the documented bool[cap, n] shape."""
+    return probe.reduce is None and probe.varkind == "spikes"
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import codegen
+from repro.core.snn import bitmask as BM
 from repro.core.snn import custom_updates as CU
 from repro.core.snn import probes as PR
 from repro.core.snn.network import Network
@@ -338,12 +339,18 @@ class Simulator:
     # probe plumbing (shared by run and serve_chunk)
     # ------------------------------------------------------------------
     def _probe_init(self, n_steps: int, serving: bool = False):
-        """Preallocated device-resident ring buffers, one per probe."""
+        """Preallocated device-resident ring buffers, one per probe.
+        Unreduced spike probes store uint32 bitmask rows (32x smaller);
+        finalize unpacks them back to the documented bool layout."""
         bufs, caps = {}, {}
         for p in self.probes:
             cap = PR.capacity(p, n_steps, serving=serving)
             caps[p.name] = cap
-            bufs[p.name] = jnp.zeros((cap,) + p.sample_shape(), p.dtype)
+            if PR.is_packed(p):
+                bufs[p.name] = jnp.zeros((cap, BM.words_for(p.n)),
+                                         jnp.uint32)
+            else:
+                bufs[p.name] = jnp.zeros((cap,) + p.sample_shape(), p.dtype)
         return bufs, caps
 
     def _probe_write(self, bufs, caps, start, i, state, spikes, gate=None):
@@ -355,6 +362,8 @@ class Simulator:
             if gate is not None:
                 active = active & gate
             val = PR.host_sample(p, self._groups, state, spikes)
+            if PR.is_packed(p):
+                val = BM.pack_spikes(val)
             out[p.name] = PR.write_sample(bufs[p.name], slot, active, val)
         return out
 
@@ -362,9 +371,10 @@ class Simulator:
                         serving: bool = False) -> Recordings:
         data, counts = {}, {}
         for p in self.probes:
-            data[p.name], counts[p.name] = PR.finalize(
+            d, counts[p.name] = PR.finalize(
                 bufs[p.name], start, n_eff, p, caps[p.name],
                 use_window=not serving)
+            data[p.name] = BM.unpack_rows(d, p.n) if PR.is_packed(p) else d
         return Recordings(data=data, counts=counts)
 
     # ------------------------------------------------------------------

@@ -45,7 +45,7 @@ from repro.core.snn.network import InputFn, Network
 from repro.core.snn.probes import ProbeSpec, Recordings
 from repro.core.snn.custom_updates import CustomUpdateSpec
 from repro.core.snn.simulator import RunResult, SimState, Simulator
-from repro.core.snn.synapses import Pulse, SynapseGroup
+from repro.core.snn.synapses import PROPAGATIONS, Pulse, SynapseGroup
 from repro.kernels import autotune as AT
 from repro.obs import trace
 from repro.sparse import formats as F
@@ -92,6 +92,7 @@ class SynapsePopSpec:
     delay_ms: Optional[float]
     sign: float
     representation: str
+    propagation: str = "auto"
 
     def group_names(self) -> List[str]:
         if len(self.post) == 1:
@@ -178,6 +179,7 @@ class ModelSpec:
         delay_ms: Optional[float] = None,
         sign: float = 1.0,
         representation: str = "auto",
+        propagation: str = "auto",
     ) -> SynapsePopSpec:
         """Declare a synapse population.
 
@@ -192,6 +194,15 @@ class ModelSpec:
           (heterogeneous path; an int means ConstantDelay);
         - ``delay_ms=x``: homogeneous delay declared in milliseconds,
           converted at build time — x must be an integer multiple of dt.
+
+        ``propagation`` selects how spikes traverse the group each step:
+        ``"dense"`` always runs the full ELL pass; ``"event"`` compacts
+        the spiking pre rows first (bit-exact, with a dense fallback when
+        more rows spike than the compaction capacity); ``"auto"``
+        (default) picks per group from the occupancy/activity crossover
+        model (`repro.kernels.autotune.choose_propagation`).  The choice
+        is surfaced per group in `CompiledModel.memory_report` — see
+        docs/API.md "Propagation modes".
         """
         if not name or not isinstance(name, str):
             raise SpecError(f"synapse population name must be a non-empty "
@@ -218,7 +229,8 @@ class ModelSpec:
             name=name, pre=pre, post=post_t, connect=connect, weight=weight,
             wum=wum, psm=psm if psm is not None else Pulse(),
             delay_steps=delay_steps, delay=delay, delay_ms=delay_ms,
-            sign=sign, representation=representation)
+            sign=sign, representation=representation,
+            propagation=propagation)
         new_names = spec.group_names()
         for gname in [name] + new_names:
             if gname in taken or new_names.count(gname) > 1:
@@ -246,6 +258,16 @@ class ModelSpec:
             raise SpecError(
                 f"synapse population {name!r}: representation "
                 f"{representation!r} not in {_REPRESENTATIONS}")
+        if propagation not in PROPAGATIONS:
+            raise SpecError(
+                f"synapse population {name!r}: propagation "
+                f"{propagation!r} not in {PROPAGATIONS}")
+        if propagation == "event" and representation == "dense":
+            raise SpecError(
+                f"synapse population {name!r}: propagation='event' is "
+                "incompatible with representation='dense' (event-driven "
+                "compaction gathers ELL rows; the dense mirror has none); "
+                "use representation 'sparse' or 'auto'")
         if (representation == "dense" and wum is not None
                 and not wum.is_static_pulse):
             raise SpecError(
@@ -537,6 +559,7 @@ class ModelSpec:
                         name=gname, pre=sp.pre, post=pname,
                         ell=F.triple_to_ell(idx, gg, vv, n_p, delay=dv),
                         representation=sp.representation,
+                        propagation=sp.propagation,
                         wum=sp.wum, psm=sp.psm,
                         delay_steps=delay_steps,
                         max_delay=(None if sp.delay is None

@@ -29,6 +29,7 @@ replicated pre-side spike ring.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -38,15 +39,19 @@ import numpy as np
 from repro.core.codegen import (CompiledWeightUpdate, PostsynapticModel,
                                 WeightUpdateModel, compile_postsynaptic,
                                 compile_weight_update)
+from repro.core.snn.errors import SpecError
 from repro.sparse import formats as F
 from repro.sparse import ops as sparse_ops
+from repro.kernels import autotune as AT
 from repro.kernels import ops as kops
 
 __all__ = [
-    "SynapseGroup", "SynapseState", "make_group",
+    "SynapseGroup", "SynapseState", "LocalConnectivity", "make_group",
     "Pulse", "ExpDecay", "ExpCond", "Alpha",
-    "StaticPulse", "STDP",
+    "StaticPulse", "STDP", "PROPAGATIONS",
 ]
+
+PROPAGATIONS = ("auto", "dense", "event")
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +165,18 @@ class SynapseState:
         return cls(*children)
 
 
+@dataclasses.dataclass(frozen=True)
+class LocalConnectivity:
+    """A step-time connectivity override: the sharded engine passes each
+    device's post-shard of the group's connectivity through
+    ``SynapseGroup.step(conn=...)`` while reusing the group's compiled
+    dynamics unchanged.  Replaces the deprecated ``ell=``/``dense=`` kwarg
+    pair (one declared object instead of two loose knobs)."""
+
+    ell: F.ELLSynapses
+    dense: Optional[jax.Array] = None
+
+
 @dataclasses.dataclass
 class SynapseGroup:
     name: str
@@ -168,6 +185,7 @@ class SynapseGroup:
     ell: F.ELLSynapses                      # canonical storage
     dense: Optional[jax.Array] = None       # dense mirror when chosen/forced
     representation: str = "auto"            # 'auto' | 'sparse' | 'dense'
+    propagation: str = "auto"               # 'auto' | 'dense' | 'event'
     wum: Optional[WeightUpdateModel] = None  # default StaticPulse()
     psm: Optional[PostsynapticModel] = None  # default from legacy `dynamics`
     delay_steps: int = 0                    # homogeneous dendritic delay
@@ -202,6 +220,19 @@ class SynapseGroup:
         # delay_steps=k (homogeneous) and ell.delay (per-synapse slot) both
         # lower onto the same post-side dendritic ring; the homogeneous case
         # keeps the single full-matrix spmv per step (one ring slot written).
+        if self.propagation not in PROPAGATIONS:
+            raise ValueError(
+                f"synapse group {self.name!r}: propagation "
+                f"{self.propagation!r} not in {PROPAGATIONS}")
+        if self.propagation == "event":
+            if self.representation == "dense":
+                raise ValueError(
+                    f"synapse group {self.name!r}: propagation='event' is "
+                    "incompatible with representation='dense' (event-driven "
+                    "delivery gathers the spiking pre-neurons' ELL rows); "
+                    "use representation 'sparse' or 'auto'")
+            self.representation = "sparse"
+
         if not isinstance(self.delay_steps, int) or self.delay_steps < 0:
             raise ValueError(
                 f"{self.name}: delay_steps must be a non-negative int, got "
@@ -262,6 +293,30 @@ class SynapseGroup:
         if self.representation == "dense" and self.dense is None:
             self.dense = F.ell_to_dense(self.ell)
 
+        # --- propagation mode (declared -> effective) -------------------
+        # 'auto' asks the occupancy/activity crossover model whether event-
+        # driven row gathering beats the full-matrix pass for this group's
+        # shape; an explicit 'event' keeps the modelled capacity but skips
+        # the verdict.  Both paths are bit-exact, so the choice is purely a
+        # performance decision.
+        self.propagation_declared = self.propagation
+        if self.representation == "dense" or self.propagation == "dense":
+            self.propagation_mode = "dense"
+            self.event_capacity = None
+        else:
+            cfg = AT.choose_propagation(
+                self.ell.n_pre, self.ell.max_conn, self.ell.n_post,
+                n_slots=(self.ring_slots if self.ell.delay is not None
+                         else 1),
+                tag=self.name)
+            if self.propagation == "event":
+                self.propagation_mode = "event"
+            else:
+                self.propagation_mode = cfg["mode"]
+            self.event_capacity = (int(cfg["capacity"])
+                                   if self.propagation_mode == "event"
+                                   else None)
+
         # --- code generation: compile the synapse models once per group ---
         self._psm_step = compile_postsynaptic(self.psm)
         self._wu: CompiledWeightUpdate = compile_weight_update(self.wum)
@@ -303,74 +358,120 @@ class SynapseGroup:
                             syn=syn, dendritic=buf, cursor=cur)
 
     # -- propagation -------------------------------------------------------
+    def _effective_ell(self, g: Optional[jax.Array],
+                       syn: Dict[str, jax.Array],
+                       externals: Dict[str, jax.Array],
+                       ell: F.ELLSynapses) -> F.ELLSynapses:
+        """The ELL matrix to propagate this step: the stored one for static
+        groups, or one carrying this step's effective weights (computed
+        ONCE per step — the old masked-pass delay loop recomputed them per
+        delay value)."""
+        if self.wum.is_static_pulse and g is None:
+            return ell
+        g_cur = ell.g if g is None else g
+        w_eff = self._wu.effective_weight(g_cur, syn, self.wum.params,
+                                          externals)
+        w_eff = jnp.where(ell.valid, w_eff, 0.0)
+        return F.ELLSynapses(g=w_eff, post_ind=ell.post_ind, valid=ell.valid,
+                             n_post=ell.n_post, delay=ell.delay)
+
+    def _spmv(self, ell: F.ELLSynapses, spk: jax.Array) -> jax.Array:
+        """One full accumulation via the group's effective propagation mode
+        (dense full-matrix pass vs event-driven row gathering)."""
+        if self.propagation_mode == "event":
+            return kops.ell_spmv_event(ell, spk, self.event_capacity)
+        return kops.ell_spmv(ell, spk)
+
     def _raw_current(self, spikes: jax.Array, gscale: jax.Array,
                      g: Optional[jax.Array], syn: Dict[str, jax.Array],
                      externals: Dict[str, jax.Array],
-                     ell: Optional[F.ELLSynapses] = None,
-                     dense: Optional[jax.Array] = None,
-                     delay_val: Optional[int] = None) -> jax.Array:
-        """sum_i spike_i * w_eff_ij * gscale for this step's arriving spikes.
-
-        `ell`/`dense` override the stored representation — the sharded
-        engine passes each device's post-shard of the connectivity while
-        reusing this group's compiled dynamics unchanged.
-
-        `delay_val=d` restricts the accumulation to the synapses whose
-        per-synapse dendritic delay equals d (masking via the ELL valid
-        mask, so slot order — and therefore scatter order and bits — is
-        identical to the unmasked call; for a constant delay array the
-        d==constant pass IS the unmasked call, bit for bit)."""
-        ell = self.ell if ell is None else ell
-        dense = self.dense if dense is None else dense
+                     ell: F.ELLSynapses,
+                     dense: Optional[jax.Array]) -> jax.Array:
+        """sum_i spike_i * w_eff_ij * gscale for this step's arriving
+        spikes.  `ell`/`dense` are the resolved (possibly shard-local)
+        connectivity."""
         spk = jnp.asarray(spikes, jnp.float32)
-        valid = ell.valid
-        if delay_val is not None:
-            valid = valid & (ell.delay == delay_val)
-        if self.wum.is_static_pulse and g is None:
-            # static weights: use the prebuilt representation unmodified
-            if self.representation == "dense":
-                out = sparse_ops.accumulate_dense(dense, spk)
-            elif valid is ell.valid:
-                out = kops.ell_spmv(ell, spk)
-            else:
-                eff = F.ELLSynapses(g=ell.g, post_ind=ell.post_ind,
-                                    valid=valid, n_post=ell.n_post)
-                out = kops.ell_spmv(eff, spk)
+        if (self.wum.is_static_pulse and g is None
+                and self.representation == "dense"):
+            out = sparse_ops.accumulate_dense(dense, spk)
         else:
-            g_cur = ell.g if g is None else g
-            w_eff = self._wu.effective_weight(g_cur, syn, self.wum.params,
-                                              externals)
-            w_eff = jnp.where(valid, w_eff, 0.0)
-            eff = F.ELLSynapses(g=w_eff, post_ind=ell.post_ind,
-                                valid=valid, n_post=ell.n_post)
-            out = kops.ell_spmv(eff, spk)
+            out = self._spmv(self._effective_ell(g, syn, externals, ell), spk)
         return self.sign * gscale * out
+
+    def _delay_contrib(self, spikes: jax.Array, gscale: jax.Array,
+                       g: Optional[jax.Array], syn: Dict[str, jax.Array],
+                       externals: Dict[str, jax.Array],
+                       ell: F.ELLSynapses) -> jax.Array:
+        """Fused heterogeneous-delay accumulation: one pass over the ELL
+        slots returns [ring_slots, n_post] — slot d holds the currents due
+        d steps from now.  Replaces the max_delay+1 masked spmv passes;
+        per (slot, post) the accumulation order is unchanged, so the ring
+        contents stay bit-exact."""
+        spk = jnp.asarray(spikes, jnp.float32)
+        eff = self._effective_ell(g, syn, externals, ell)
+        if self.propagation_mode == "event":
+            out = kops.ell_spmv_event_delay(eff, spk, self.ring_slots,
+                                            self.event_capacity)
+        else:
+            out = kops.ell_spmv_delay(eff, spk, self.ring_slots)
+        return self.sign * gscale * out
+
+    def _resolve_conn(self, conn: Optional[LocalConnectivity],
+                      ell: Optional[F.ELLSynapses],
+                      dense: Optional[jax.Array]) -> LocalConnectivity:
+        """Fold the step-time overrides into one LocalConnectivity.  The
+        loose ``ell=``/``dense=`` kwargs are deprecated in favor of
+        ``conn=``; passing both is a conflict."""
+        if ell is not None or dense is not None:
+            if conn is not None:
+                raise SpecError(
+                    f"synapse group {self.name!r}: conn= and the deprecated "
+                    "ell=/dense= overrides were both passed to step() and "
+                    "conflict; pass only conn=LocalConnectivity(...)")
+            warnings.warn(
+                "SynapseGroup.step(ell=..., dense=...) is deprecated; pass "
+                "conn=LocalConnectivity(ell=..., dense=...) instead "
+                "(docs/API.md 'Propagation modes' has the migration table)",
+                DeprecationWarning, stacklevel=3)
+            return LocalConnectivity(
+                ell=ell if ell is not None else self.ell,
+                dense=dense if dense is not None else self.dense)
+        if conn is None:
+            return LocalConnectivity(ell=self.ell, dense=self.dense)
+        return conn
 
     def step(
         self, state: SynapseState, spikes: jax.Array, gscale: jax.Array,
         dt: float, v_post: Optional[jax.Array] = None,
         post_spikes: Optional[jax.Array] = None,
         t: Optional[jax.Array] = None,
+        conn: Optional[LocalConnectivity] = None,
         ell: Optional[F.ELLSynapses] = None,
         dense: Optional[jax.Array] = None,
     ) -> tuple[SynapseState, jax.Array]:
         """Advance one step; returns (new_state, current into post neurons).
 
-        `ell`/`dense` override the stored connectivity (sharded engine path);
-        all shapes on the post side then follow the override.
+        `conn` overrides the stored connectivity (sharded engine path); all
+        shapes on the post side then follow the override.  The loose
+        ``ell=``/``dense=`` kwargs are a deprecated spelling of the same
+        override (DeprecationWarning; conflicting with conn= raises
+        SpecError).
 
         Dendritic delays: each synapse's weighted contribution is scatter-
         added into the post-side ring ``delay`` slots ahead of the cursor
         and delivered when the cursor reaches it.  The homogeneous
         ``delay_steps=k`` case writes one ring slot with the same single
         full-matrix accumulation as the delay-free path; heterogeneous
-        per-synapse delays make one masked accumulation per distinct delay
-        value (max_delay+1 passes, each reusing the same spmv kernel).
+        per-synapse delays run ONE fused delay-scatter pass that lands every
+        synapse's contribution at its (delay_slot, post) ring coordinate
+        (kernels.ops.ell_spmv_delay — bit-exact vs the old max_delay+1
+        masked passes, one kernel launch instead of S).
         Weights (and gscale) are applied at *spike* time, GeNN's dendritic-
         delay semantics — for plastic groups this reads g as of emission,
         not delivery (the migration note in docs/API.md spells this out).
         """
-        lell = self.ell if ell is None else ell
+        conn = self._resolve_conn(conn, ell, dense)
+        lell = conn.ell
         # dt/t are always present in the snippet environments: any model
         # code referencing them must work even when a legacy caller omits t
         wu_ext = {"dt": dt, "t": t if t is not None else jnp.float32(0.0)}
@@ -384,7 +485,7 @@ class SynapseGroup:
 
         if not self.needs_ring:
             inj = self._raw_current(spikes, gscale, state.g, state.syn,
-                                    wu_ext, ell=ell, dense=dense)
+                                    wu_ext, lell, conn.dense)
             new_buf, new_cur = state.dendritic, state.cursor
         else:
             S = self.ring_slots
@@ -393,15 +494,16 @@ class SynapseGroup:
             if lell.delay is None:
                 # homogeneous: one full accumulation, one slot written
                 contrib = self._raw_current(spikes, gscale, state.g,
-                                            state.syn, wu_ext, ell=ell,
-                                            dense=dense)
+                                            state.syn, wu_ext, lell,
+                                            conn.dense)
                 ring = ring.at[(cur + self.delay_steps) % S].add(contrib)
             else:
-                for d in range(S):
-                    contrib = self._raw_current(spikes, gscale, state.g,
-                                                state.syn, wu_ext, ell=ell,
-                                                dense=dense, delay_val=d)
-                    ring = ring.at[(cur + d) % S].add(contrib)
+                # fused delay scatter: contrib_all[d] is what the old d-th
+                # masked pass produced; rolling by the cursor aligns slot d
+                # with ring row (cur+d) % S, one add per slot as before
+                contrib_all = self._delay_contrib(spikes, gscale, state.g,
+                                                  state.syn, wu_ext, lell)
+                ring = ring + jnp.roll(contrib_all, cur, axis=0)
             inj = ring[cur]
             new_buf = ring.at[cur].set(0.0)
             new_cur = (cur + 1) % S
@@ -473,6 +575,9 @@ class SynapseGroup:
         return {
             "name": self.name,
             "representation": self.representation,
+            "propagation": self.propagation_declared,
+            "propagation_mode": self.propagation_mode,
+            "event_capacity": self.event_capacity,
             "sparse_elements": F.sparse_memory_elements(
                 nnz, self.ell.n_pre, self.ell.n_post),
             "dense_elements": F.dense_memory_elements(

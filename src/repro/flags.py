@@ -5,7 +5,53 @@ attention flop/byte appears in XLA's cost_analysis (the chunked/flash paths
 hide work inside while-loops, which cost_analysis counts once).  The roofline
 builder then swaps the naive attention terms for analytic flash-kernel terms
 (benchmarks/roofline.py) — see DESIGN.md §3.
+
+pallas_mode(): the single parse site for the REPRO_USE_PALLAS environment
+variable (kernel backend selection).  Every kernel dispatcher
+(repro.kernels.ops.backend) routes through it, so the accepted spellings
+cannot drift per module, and a misspelled value raises instead of silently
+falling back to the reference path.
 """
+
+from __future__ import annotations
+
+import enum
+import os
+
+
+class PallasMode(str, enum.Enum):
+    """Kernel backend selection (REPRO_USE_PALLAS)."""
+
+    OFF = "off"              # pure-jnp reference (CPU dry-runs, rooflines)
+    ON = "on"                # compiled Pallas kernels (real TPU)
+    INTERPRET = "interpret"  # Pallas interpret mode (CPU validation)
+
+
+_OFF_SPELLINGS = ("", "0", "false", "off", "no", "none")
+_ON_SPELLINGS = ("1", "true", "on", "tpu", "pallas")
+
+
+def pallas_mode(value: str | None = None) -> PallasMode:
+    """Parse REPRO_USE_PALLAS (or an explicit `value`) into a PallasMode.
+
+    Unset / "0" / "off"  -> OFF;  "1" / "true" / "tpu" -> ON;
+    "interpret" -> INTERPRET.  Anything else raises ValueError: a typo like
+    "interperet" would otherwise silently disable the Pallas kernels and
+    every downstream benchmark would quietly measure the reference path.
+    """
+    if value is None:
+        value = os.environ.get("REPRO_USE_PALLAS", "")
+    v = value.strip().lower()
+    if v in _OFF_SPELLINGS:
+        return PallasMode.OFF
+    if v in _ON_SPELLINGS:
+        return PallasMode.ON
+    if v == "interpret":
+        return PallasMode.INTERPRET
+    raise ValueError(
+        f"REPRO_USE_PALLAS={value!r} is not a recognized mode; use one of "
+        f"{_OFF_SPELLINGS[1:]} (off), {_ON_SPELLINGS} (on), or 'interpret'")
+
 
 ROOFLINE_NAIVE_ATTN = False
 

@@ -32,7 +32,7 @@ from repro.obs import trace as _trace
 __all__ = [
     "TPULimits", "V5E", "occupancy", "choose_block_elementwise",
     "choose_block_matmul", "choose_block_spmv", "spmv_block_bytes",
-    "occupancy_report",
+    "choose_propagation", "occupancy_report",
 ]
 
 
@@ -150,18 +150,24 @@ def choose_block_matmul(
 
 
 def spmv_block_bytes(bp: int, bn: int, k: int, b: int,
-                     dtype_bytes: int = 4) -> int:
+                     dtype_bytes: int = 4, n_slots: int = 1) -> int:
     """VMEM working set of one ELL-spmv grid step (repro.kernels.ell_spmv):
     spike tile [B, BP], g + idx tiles [BP, K], output tile [B, BN], plus the
     in-kernel one-hot materialization [BP*K, BN] and the K-expanded spike
-    tile [B, BP*K] — the one-hot temporary is the VMEM driver."""
+    tile [B, BP*K] — the one-hot temporary is the VMEM driver.
+
+    n_slots > 1 describes the fused-delay variant: a third [BP, K] row tile
+    (the delay slots) and a (delay, post)-combined one-hot/output whose post
+    extent is n_slots * BN."""
     m = bp * k
-    return (b * bp + 2 * bp * k + b * bn + m * bn + b * m) * dtype_bytes
+    row_tiles = 2 if n_slots == 1 else 3
+    return (b * bp + row_tiles * bp * k + b * bn * n_slots
+            + m * bn * n_slots + b * m) * dtype_bytes
 
 
 def choose_block_spmv(
     n_pre: int, k: int, n_post: int, b: int, dtype_bytes: int = 4,
-    lim: TPULimits = V5E, tag: str = "",
+    lim: TPULimits = V5E, tag: str = "", n_slots: int = 1,
 ) -> Dict[str, int]:
     """Pick (bp, bn) tiles for the ELL one-hot-matmul spmv via the
     occupancy model (paper §3: smallest block that still hides latency;
@@ -175,6 +181,10 @@ def choose_block_spmv(
     Every decision is recorded as a ``choose_block_spmv`` trace instant
     (repro.obs.trace) carrying the problem shape, chosen tile, occupancy
     and VMEM footprint; ``tag`` attributes it (e.g. a synapse group name).
+
+    n_slots > 1 sizes the fused-delay variant (repro.kernels.ell_spmv.
+    ell_spmv_delay_pallas): output and one-hot tiles grow by the number of
+    dendritic-delay ring slots.
     """
     bn_candidates = [bn for bn in (128, 256, 512, 1024)
                      if bn <= max(128, math.ceil(n_post / lim.lane)
@@ -186,9 +196,10 @@ def choose_block_spmv(
             if bp > n_pre and bp != lim.sublane_f32:
                 break
             grid = math.ceil(n_post / bn) * math.ceil(n_pre / bp)
-            blk = spmv_block_bytes(bp, bn, k, b, dtype_bytes)
+            blk = spmv_block_bytes(bp, bn, k, b, dtype_bytes, n_slots)
             occ = occupancy(blk, grid,
-                            [(bp, k), (b, bp), (b, bn), (bp * k, bn)],
+                            [(bp, k), (b, bp), (b, bn * n_slots),
+                             (bp * k, bn * n_slots)],
                             dtype_bytes, lim)
             key = (occ, bp * bn)           # ties -> bigger tile
             if best is None or key > best[0]:
@@ -197,7 +208,8 @@ def choose_block_spmv(
                               "block_bytes": blk, "feasible": occ > 0.0})
             bp *= 2
     if best is None or best[0][0] <= 0.0:
-        blk = spmv_block_bytes(lim.sublane_f32, lim.lane, k, b, dtype_bytes)
+        blk = spmv_block_bytes(lim.sublane_f32, lim.lane, k, b, dtype_bytes,
+                               n_slots)
         cfg = {"bp": lim.sublane_f32, "bn": lim.lane, "occupancy": 0.0,
                "grid": (math.ceil(n_post / lim.lane)
                         * math.ceil(n_pre / lim.sublane_f32)),
@@ -206,7 +218,57 @@ def choose_block_spmv(
     else:
         cfg = best[1]
     _trace.instant("choose_block_spmv", tag=tag, n_pre=n_pre, k=k,
-                   n_post=n_post, b=b, **cfg)
+                   n_post=n_post, b=b, n_slots=n_slots, **cfg)
+    return cfg
+
+
+def choose_propagation(
+    n_pre: int, k: int, n_post: int, b: int = 1, activity: float = 0.1,
+    capacity: int | None = None, n_slots: int = 1, dtype_bytes: int = 4,
+    lim: TPULimits = V5E, tag: str = "",
+) -> Dict[str, object]:
+    """Occupancy/activity-model crossover: dense full-matrix spmv vs
+    event-driven row gathering for one synapse group (paper's sparse
+    synapse-connection representation; cf. GeNN's sparse spike delivery).
+
+    Dense traverses all n_pre*K ELL slots every step.  Event-driven compacts
+    the spiking pre-neuron index list into a fixed-capacity buffer (overflow
+    falls back to dense at runtime) and gathers only those rows, paying an
+    O(n_pre) compaction sweep per step.  ``activity`` is the modelled mean
+    firing fraction per step; the capacity gets ~2.5x headroom over it so
+    typical fluctuations stay on the fast path, rounded up to the sublane
+    quantum and clamped to n_pre.
+
+    Picks "event" only when (a) the modelled event slot traffic is at most
+    half the dense traffic — the compaction/gather overhead needs a clear
+    win — (b) the matrix is big enough (>= 32768 slots) to amortize the
+    fixed per-step compaction cost, and (c) the compacted problem still has
+    a feasible spmv tiling.  Returns mode, capacity, both block configs and
+    the modelled slot counts; records a ``choose_propagation`` trace
+    instant.
+    """
+    if capacity is None:
+        q = lim.sublane_f32
+        cap = math.ceil(n_pre * activity * 2.5 / q) * q
+        cap = int(min(n_pre, max(q, cap)))
+    else:
+        cap = int(min(n_pre, max(1, capacity)))
+    dense_slots = n_pre * k
+    event_slots = cap * k + n_pre      # gathered rows + compaction sweep
+    dense_cfg = choose_block_spmv(n_pre, k, n_post, b, dtype_bytes, lim,
+                                  tag=f"{tag}:dense", n_slots=n_slots)
+    event_cfg = choose_block_spmv(cap, k, n_post, b, dtype_bytes, lim,
+                                  tag=f"{tag}:event", n_slots=n_slots)
+    worthwhile = (dense_slots >= 32768
+                  and 2 * event_slots <= dense_slots
+                  and event_cfg["feasible"])
+    mode = "event" if worthwhile else "dense"
+    cfg = {"mode": mode, "capacity": cap, "activity": activity,
+           "dense_slots": dense_slots, "event_slots": event_slots,
+           "dense_occupancy": dense_cfg["occupancy"],
+           "event_occupancy": event_cfg["occupancy"]}
+    _trace.instant("choose_propagation", tag=tag, n_pre=n_pre, k=k,
+                   n_post=n_post, b=b, n_slots=n_slots, **cfg)
     return cfg
 
 

@@ -32,7 +32,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.autotune import V5E, TPULimits, choose_block_spmv
 
-__all__ = ["ell_spmv_pallas", "default_blocks"]
+__all__ = ["ell_spmv_pallas", "ell_spmv_delay_pallas", "default_blocks"]
 
 
 def _kernel(spk_ref, g_ref, idx_ref, out_ref, *, bn: int):
@@ -62,6 +62,43 @@ def _kernel(spk_ref, g_ref, idx_ref, out_ref, *, bn: int):
         preferred_element_type=jnp.float32)
 
 
+def _delay_kernel(spk_ref, g_ref, idx_ref, dly_ref, out_ref, *, bn: int,
+                  n_slots: int):
+    """Fused delay-scatter variant: the one-hot column index is the combined
+    (delay_slot, local_post) coordinate, so one MXU contraction lands every
+    synapse's contribution in its own dendritic-ring slot."""
+    pb = pl.program_id(1)
+    jb = pl.program_id(0)
+
+    @pl.when(pb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    spk = spk_ref[...]              # [B, BP]
+    g = g_ref[...]                  # [BP, K]
+    idx = idx_ref[...]              # [BP, K] global post indices (int32)
+    dly = dly_ref[...]              # [BP, K] delay slots (int32)
+
+    bp, k = g.shape
+    m = bp * k
+    local = idx - jb * bn
+    # slots whose post lands outside this tile must NOT fold into a
+    # neighboring delay band of the combined index: mask them to -1 (the
+    # plain kernel gets this for free because its out-of-range locals miss
+    # every one-hot column)
+    inb = (local >= 0) & (local < bn)
+    comb = jnp.where(inb, dly * bn + local, -1).reshape(m)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m, n_slots * bn), 1)
+    onehot = (comb[:, None] == cols).astype(g.dtype) * g.reshape(m)[:, None]
+
+    s = jnp.broadcast_to(spk[:, :, None], (spk.shape[0], bp, k)).reshape(
+        spk.shape[0], m)
+    acc = jax.lax.dot_general(
+        s, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[...] += acc.reshape(spk.shape[0], n_slots, bn)
+
+
 def default_blocks(n_pre: int, k: int, n_post: int, b: int,
                    lim: TPULimits = V5E) -> tuple[int, int]:
     """(pre_block, post_block) from the occupancy-based block-size
@@ -71,13 +108,14 @@ def default_blocks(n_pre: int, k: int, n_post: int, b: int,
 
 
 def feasible_k_chunk(n_pre: int, k: int, n_post: int, b: int,
-                     lim: TPULimits = V5E) -> tuple[int, dict]:
+                     lim: TPULimits = V5E, n_slots: int = 1) -> tuple[int, dict]:
     """Largest K-chunk whose chosen tiling fits VMEM (the kernel loads
     full-K row tiles, so very wide rows must be split and the partial
     currents summed).  Returns (k_chunk, block config for that chunk)."""
     kc = k
     while True:
-        cfg = choose_block_spmv(n_pre, kc, n_post, b, lim=lim)
+        cfg = choose_block_spmv(n_pre, kc, n_post, b, lim=lim,
+                                n_slots=n_slots)
         if cfg["feasible"] or kc == 1:
             return kc, cfg
         kc = (kc + 1) // 2
@@ -143,3 +181,70 @@ def ell_spmv_pallas(
         interpret=interpret,
     )(spikes.astype(jnp.float32), gm, post_ind.astype(jnp.int32))
     return out[:, :n_post]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_post", "n_slots", "pre_block", "post_block",
+                     "interpret"))
+def ell_spmv_delay_pallas(
+    g: jax.Array, post_ind: jax.Array, valid: jax.Array, delay: jax.Array,
+    spikes: jax.Array, *, n_post: int, n_slots: int,
+    pre_block: int | None = None, post_block: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused delay-scatter ELL spmv on TPU: one pass over the slots lands
+    each synapse's contribution at its (delay_slot, post) ring coordinate.
+
+    g/post_ind/valid/delay: [n_pre, K]; spikes: [B, n_pre]
+    -> [B, n_slots, n_post].  Semantics: repro.kernels.ref.ell_spmv_delay_ref.
+    Replaces n_slots masked single-delay passes with one kernel launch."""
+    n_pre, k = g.shape
+    b = spikes.shape[0]
+
+    if pre_block is None and post_block is None:
+        kc, cfg = feasible_k_chunk(n_pre, k, n_post, b, n_slots=n_slots)
+        if kc < k:
+            out = jnp.zeros((b, n_slots, n_post), jnp.float32)
+            for lo in range(0, k, kc):
+                out = out + ell_spmv_delay_pallas(
+                    g[:, lo:lo + kc], post_ind[:, lo:lo + kc],
+                    valid[:, lo:lo + kc], delay[:, lo:lo + kc], spikes,
+                    n_post=n_post, n_slots=n_slots,
+                    pre_block=cfg["bp"], post_block=cfg["bn"],
+                    interpret=interpret)
+            return out
+        pre_block, post_block = cfg["bp"], cfg["bn"]
+    elif pre_block is None or post_block is None:
+        cfg = choose_block_spmv(n_pre, k, n_post, b, n_slots=n_slots)
+        pre_block = pre_block or cfg["bp"]
+        post_block = post_block or cfg["bn"]
+
+    gm = jnp.where(valid, g, 0.0).astype(jnp.float32)
+    dly = jnp.where(valid, delay, 0).astype(jnp.int32)
+
+    pp = math.ceil(n_pre / pre_block) * pre_block
+    pj = math.ceil(n_post / post_block) * post_block
+    if pp != n_pre:
+        pad = pp - n_pre
+        gm = jnp.pad(gm, ((0, pad), (0, 0)))
+        post_ind = jnp.pad(post_ind, ((0, pad), (0, 0)))
+        dly = jnp.pad(dly, ((0, pad), (0, 0)))
+        spikes = jnp.pad(spikes, ((0, 0), (0, pad)))
+
+    grid = (pj // post_block, pp // pre_block)
+    out = pl.pallas_call(
+        functools.partial(_delay_kernel, bn=post_block, n_slots=n_slots),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, pre_block), lambda jb, pb: (0, pb)),
+            pl.BlockSpec((pre_block, k), lambda jb, pb: (pb, 0)),
+            pl.BlockSpec((pre_block, k), lambda jb, pb: (pb, 0)),
+            pl.BlockSpec((pre_block, k), lambda jb, pb: (pb, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, n_slots, post_block),
+                               lambda jb, pb: (0, 0, jb)),
+        out_shape=jax.ShapeDtypeStruct((b, n_slots, pj), jnp.float32),
+        interpret=interpret,
+    )(spikes.astype(jnp.float32), gm, post_ind.astype(jnp.int32), dly)
+    return out[:, :, :n_post]

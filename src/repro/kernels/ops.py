@@ -11,25 +11,29 @@ the system never branches.
 
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import flags as _flags
 from repro.kernels import ref as _ref
 
 __all__ = [
     "backend", "use_pallas", "ell_spmv", "ell_spmv_batched",
-    "izhikevich_step", "hh_step", "flash_attention", "ssd_scan",
+    "ell_spmv_delay", "ell_spmv_delay_batched", "ell_spmv_event",
+    "ell_spmv_event_delay", "izhikevich_step", "hh_step",
+    "flash_attention", "ssd_scan",
 ]
 
 
 def backend() -> str:
-    v = os.environ.get("REPRO_USE_PALLAS", "0").lower()
-    if v in ("1", "true", "tpu"):
+    """Kernel backend: 'ref' | 'pallas' | 'interpret'.  The env parse lives
+    in repro.flags.pallas_mode (one site; misspellings raise)."""
+    mode = _flags.pallas_mode()
+    if mode is _flags.PallasMode.ON:
         return "pallas"
-    if v == "interpret":
+    if mode is _flags.PallasMode.INTERPRET:
         return "interpret"
     return "ref"
 
@@ -55,6 +59,75 @@ def ell_spmv_batched(ell, spikes: jax.Array) -> jax.Array:
 def ell_spmv(ell, spikes: jax.Array) -> jax.Array:
     """spikes [n_pre] -> currents [n_post]."""
     return ell_spmv_batched(ell, spikes[None, :])[0]
+
+
+def ell_spmv_delay_batched(ell, spikes: jax.Array, n_slots: int) -> jax.Array:
+    """Fused delay-scatter: spikes [B, n_pre] -> ring contributions
+    [B, n_slots, n_post] (slot d = contributions arriving d steps from now,
+    before cursor rotation).  Requires ell.delay."""
+    be = backend()
+    if be == "ref":
+        return _ref.ell_spmv_delay_ref(ell.g, ell.post_ind, ell.valid,
+                                       ell.delay, spikes, ell.n_post, n_slots)
+    from repro.kernels.ell_spmv import ell_spmv_delay_pallas
+    return ell_spmv_delay_pallas(ell.g, ell.post_ind, ell.valid, ell.delay,
+                                 spikes, n_post=ell.n_post, n_slots=n_slots,
+                                 interpret=(be == "interpret"))
+
+
+def ell_spmv_delay(ell, spikes: jax.Array, n_slots: int) -> jax.Array:
+    """spikes [n_pre] -> ring contributions [n_slots, n_post]."""
+    return ell_spmv_delay_batched(ell, spikes[None, :], n_slots)[0]
+
+
+# -- event-driven propagation -------------------------------------------------
+
+def _compact_rows(ell, spikes: jax.Array, capacity: int):
+    """Compact the spiking pre-neuron rows of an ELL matrix.
+
+    Returns (ell_c, spk_c, count): a capacity-row ELL holding the spiking
+    rows in ascending pre order (dead tail rows invalidated), the matching
+    spike values, and the true spike count.  Ascending order + exact-zero
+    contributions from dropped rows keep the per-post accumulation sequence
+    identical to the dense pass, so the result is bit-exact."""
+    n_pre = ell.n_pre
+    hits = spikes != 0
+    count = jnp.sum(hits.astype(jnp.int32))
+    (idx,) = jnp.nonzero(hits, size=capacity, fill_value=n_pre)
+    safe = jnp.minimum(idx, n_pre - 1)
+    live = idx < n_pre
+    ell_c = type(ell)(
+        g=ell.g[safe], post_ind=ell.post_ind[safe],
+        valid=ell.valid[safe] & live[:, None], n_post=ell.n_post,
+        delay=None if ell.delay is None else ell.delay[safe])
+    spk = jnp.asarray(spikes, jnp.float32)
+    spk_c = jnp.where(live, spk[safe], 0.0)
+    return ell_c, spk_c, count
+
+
+def ell_spmv_event(ell, spikes: jax.Array, capacity: int) -> jax.Array:
+    """Event-driven spmv: gather only the spiking rows (fixed capacity);
+    more than `capacity` simultaneous spikes falls back to the dense pass.
+    spikes [n_pre] -> currents [n_post], bit-exact vs ell_spmv."""
+    ell_c, spk_c, count = _compact_rows(ell, spikes, capacity)
+    spk = jnp.asarray(spikes, jnp.float32)
+    return jax.lax.cond(
+        count <= capacity,
+        lambda: ell_spmv(ell_c, spk_c),
+        lambda: ell_spmv(ell, spk))
+
+
+def ell_spmv_event_delay(ell, spikes: jax.Array, n_slots: int,
+                         capacity: int) -> jax.Array:
+    """Event-driven fused delay-scatter: spikes [n_pre] ->
+    [n_slots, n_post], bit-exact vs ell_spmv_delay; overflow falls back to
+    the dense fused pass."""
+    ell_c, spk_c, count = _compact_rows(ell, spikes, capacity)
+    spk = jnp.asarray(spikes, jnp.float32)
+    return jax.lax.cond(
+        count <= capacity,
+        lambda: ell_spmv_delay(ell_c, spk_c, n_slots),
+        lambda: ell_spmv_delay(ell, spk, n_slots))
 
 
 # -- fused neuron updates -----------------------------------------------------

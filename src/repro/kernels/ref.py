@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
-    "ell_spmv_ref", "izhikevich_step_ref", "hh_step_ref",
-    "flash_attention_ref", "ssd_scan_ref",
+    "ell_spmv_ref", "ell_spmv_delay_ref", "izhikevich_step_ref",
+    "hh_step_ref", "flash_attention_ref", "ssd_scan_ref",
 ]
 
 
@@ -32,6 +32,30 @@ def ell_spmv_ref(g: jax.Array, post_ind: jax.Array, valid: jax.Array,
     flat = contrib.reshape(contrib.shape[0], -1)           # [B, n_pre*K]
     out = jnp.zeros((spikes.shape[0], n_post), flat.dtype)
     return out.at[:, flat_idx].add(flat)
+
+
+def ell_spmv_delay_ref(g: jax.Array, post_ind: jax.Array, valid: jax.Array,
+                       delay: jax.Array, spikes: jax.Array, n_post: int,
+                       n_slots: int) -> jax.Array:
+    """Fused delay-scatter: one pass over the ELL slots lands every synapse's
+    contribution at its own (delay_slot, post) coordinate.
+
+    g, post_ind, valid, delay: [n_pre, K];  spikes: [B, n_pre]
+    ->  [B, n_slots, n_post]
+    out[b, d, j] = sum_{i,k} spikes[b,i] * g[i,k] * valid[i,k]
+                             * (delay[i,k]==d) * (post_ind[i,k]==j)
+
+    Per (d, j) the contributing slots are visited in the same row-major
+    (i, k) order as a masked single-delay ell_spmv_ref pass, so replacing
+    the max_delay+1 masked passes with one fused scatter is bit-exact.
+    """
+    gm = jnp.where(valid, g, 0.0)
+    contrib = spikes[:, :, None] * gm[None, :, :]          # [B, n_pre, K]
+    dflat = jnp.where(valid, delay, 0).reshape(-1)         # [n_pre*K]
+    pflat = post_ind.reshape(-1)
+    flat = contrib.reshape(contrib.shape[0], -1)
+    out = jnp.zeros((spikes.shape[0], n_slots, n_post), flat.dtype)
+    return out.at[:, dflat, pflat].add(flat)
 
 
 def izhikevich_step_ref(v, u, isyn, a, b, c, d, dt):
