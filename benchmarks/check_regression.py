@@ -15,6 +15,10 @@ inspectable.
 Gated metrics (matched row-by-row on their key fields):
 
   BENCH_snn_scaling.json  weak_scaling[].us_per_step     (lower is better)
+                          construction_memory[].peak_bytes_per_device
+                          (lower is better; deterministic analytic bytes,
+                          so the tolerance is tight — the fused-local rows
+                          are the O(nnz/device) construction-memory claim)
   BENCH_snn_serving.json  streams[].steps_per_sec        (higher is better)
                           streams[].p99_total_s          (lower is better;
                           the per-request latency SLO the gateway serves)
@@ -75,6 +79,9 @@ GATES = [
     ("BENCH_snn_scaling.json", "weak_scaling",
      ("devices", "per_device_neurons"),
      ("devices", "n_total", "neurons_per_device"), "us_per_step", "lower"),
+    ("BENCH_snn_scaling.json", "construction_memory",
+     ("devices", "per_device_neurons"),
+     ("path", "devices", "n_pre"), "peak_bytes_per_device", "lower"),
     ("BENCH_snn_serving.json", "streams",
      ("devices", "n_total"),
      ("streams", "chunk", "n_steps", "requests"), "steps_per_sec", "higher"),

@@ -57,6 +57,41 @@ def _bench_construction(per_dev: int, n_conn: int, sizes) -> list:
     return rows
 
 
+def _bench_construction_memory(per_dev: int, n_conn: int) -> list:
+    """Peak construction bytes per device at fixed total size: the fused
+    `device_init_local` path vs generate-then-partition.  The fused row
+    must drop as devices double (O(nnz/device)); the partition row stays
+    O(nnz).  k_local comes from a real fused build at each device count,
+    the bytes from the analytic model `construction_peak_model` — the
+    numbers are deterministic, so the regression gate can be tight."""
+    import jax
+    from repro.launch.mesh import make_snn_mesh
+    from repro.sparse import device_init as DI
+    from repro.sparse import formats as F
+
+    n_dev = jax.device_count()
+    n = per_dev * n_dev
+    k = min(n_conn, n)
+    rows = []
+    d = 1
+    while d <= n_dev:
+        out = DI.device_init_local(F.FixedFanout(k), jax.random.PRNGKey(0),
+                                   n, n, make_snn_mesh(d),
+                                   weight=F.UniformWeight(0, 0.5))
+        k_local = out[5]
+        peak = DI.construction_peak_model(n, k, d, k_local)
+        for path, nbytes in (
+                ("fused_local", peak["fused_local_bytes"]),
+                ("generate_partition", peak["generate_partition_bytes"])):
+            rows.append({"path": path, "devices": d, "n_pre": n,
+                         "k": k, "k_local": k_local,
+                         "peak_bytes_per_device": int(nbytes)})
+            print(f"construct_mem_{path}_d={d}_n={n},{nbytes},"
+                  "peak_bytes_per_device", flush=True)
+        d *= 2
+    return rows
+
+
 def _bench_weak_scaling_steps(per_dev: int, n_conn: int,
                               n_steps: int) -> list:
     import jax
@@ -99,6 +134,7 @@ def main() -> None:
         "backend": jax.default_backend(),
         "per_device_neurons": per_dev,
         "construction": _bench_construction(per_dev, n_conn, sizes),
+        "construction_memory": _bench_construction_memory(per_dev, n_conn),
         "weak_scaling": _bench_weak_scaling_steps(per_dev, n_conn,
                                                   n_steps),
     }

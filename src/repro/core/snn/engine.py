@@ -18,11 +18,16 @@ entirely under `shard_map`:
   3. neuron updates: the codegen'd model equations advance the local shard.
 
 The engine is *bit-exact* against the single-device Simulator for the same
-seed: the PRNG key schedule is replicated, external inputs are drawn
-full-size and sliced per shard, and the post-sharded connectivity preserves
-per-post-neuron scatter order.  Population sizes are padded to a multiple of
-the device count; padded lanes carry edge-replicated parameters, never
-spike, and are excluded from the finite reduction and all outputs.
+seed: the PRNG key schedule is replicated, `input_fn`/`rand` draws are
+full-size and sliced per shard (the key must consume the same stream at any
+device count), `stim` arrays are zero-padded and sharded along the mesh,
+and the post-sharded connectivity preserves per-post-neuron scatter order.
+STDP pre-trace vectors (`wu_pre`) shard along the PRE axis; the full trace
+vector is all-gathered per step only when learn code reads it, so no
+per-neuron or per-synapse plastic state is replicated.  Population sizes
+are padded to a multiple of the device count; padded lanes carry
+edge-replicated parameters, never spike, and are excluded from the finite
+reduction and all outputs.
 
 The whole n-step scan lives inside one shard_map call, so a run compiles to
 a single program with one all-gather per (population, step).  `sweep_gscale`
@@ -34,9 +39,9 @@ shard_map composition with a *stream* axis instead of the candidate axis:
 `max_streams` independent simulations stay resident on device (each slot
 its own neuron/synapse/delay state + PRNG key, every leaf gaining a leading
 stream dim), and one compiled chunk program advances all slots together
-under per-slot `steps_left` masking.  External stimuli enter full-size and
-replicated, sliced per shard exactly like input_fn draws, so a served
-stream is bit-exact against the offline `run(..., stim=...)`.
+under per-slot `steps_left` masking.  External stimuli enter zero-padded
+and sharded along the neuron axis, so a served stream is bit-exact against
+the offline `run(..., stim=...)`.
 """
 
 from __future__ import annotations
@@ -62,7 +67,7 @@ from repro.launch.sharding import neuron_pad, pad_neuron_axis, snn_shardings
 from repro.obs import health as HE
 from repro.obs import trace
 from repro.sparse import formats as F
-from repro.sparse.device_init import partition_ell_by_post
+from repro.sparse.device_init import device_init_local, partition_ell_by_post
 
 __all__ = ["ShardedEngine"]
 
@@ -71,7 +76,15 @@ class ShardedEngine:
     """Runs a built Network partitioned over a 1-D device mesh."""
 
     def __init__(self, net: Network, mesh, dt: float = 0.5, seed: int = 0,
-                 probes=(), custom_updates=(), monitor=None):
+                 probes=(), custom_updates=(), monitor=None,
+                 local_init=None):
+        """local_init: optional {group name -> LocalInitPlan} — groups with
+        a plan build their post-sharded connectivity blocks with
+        `device_init_local` (each device generates only the rows it owns,
+        O(nnz/device) peak construction memory) instead of materializing
+        the full ELL and calling `partition_ell_by_post`.  Bit-exact
+        either way; `ModelSpec.build(init="device", mesh=...)` wires this
+        automatically."""
         self.net = net
         self.mesh = mesh
         self.axis = snn_axis(mesh)
@@ -124,11 +137,27 @@ class ShardedEngine:
                 self._block_specs[g.name] = {"dense": P(self.axis, None,
                                                         None)}
             else:
-                with trace.span("partition_ell_by_post", group=g.name,
-                                rows=g.ell.n_pre, k=g.ell.max_conn,
-                                devices=D):
-                    (gg, post, valid, delay, shard_size,
-                     k_loc) = partition_ell_by_post(g.ell, D)
+                plan = (local_init or {}).get(g.name)
+                if plan is not None:
+                    # fused local construction: each device generates only
+                    # its own rows inside shard_map and exchanges finished
+                    # post-sharded slots — the full ELL is never
+                    # materialized on any single device
+                    with trace.span("device_init_local", group=g.name,
+                                    rows=g.ell.n_pre, devices=D):
+                        (gg, post, valid, delay, shard_size,
+                         k_loc) = device_init_local(
+                             plan.connect, plan.key, plan.n_pre,
+                             plan.n_post_total, self.mesh,
+                             weight=plan.weight, delay=plan.delay,
+                             axis=self.axis,
+                             post_window=plan.post_window)
+                else:
+                    with trace.span("partition_ell_by_post", group=g.name,
+                                    rows=g.ell.n_pre, k=g.ell.max_conn,
+                                    devices=D):
+                        (gg, post, valid, delay, shard_size,
+                         k_loc) = partition_ell_by_post(g.ell, D)
                 assert shard_size == self._shard[g.post]
                 self._k_local[g.name] = k_loc
                 self._blocks[g.name] = {
@@ -183,11 +212,12 @@ class ShardedEngine:
         for g in net.synapses:
             # spec twin of each SynapseState: same pytree nodes, P leaves.
             # The dendritic ring is post-sized, so it shards on the neuron
-            # axis like every other post-side buffer — no per-group state
-            # is replicated across devices.
+            # axis like every other post-side buffer, and the wu_pre STDP
+            # traces shard along the PRE axis — no per-neuron or
+            # per-synapse plastic state is replicated across devices.
             syn[g.name] = SynapseState(
                 psm={k: P(ax) for k in g.psm.state},
-                wu_pre={k: P() for k in g.wum.pre_state},
+                wu_pre={k: P(ax) for k in g.wum.pre_state},
                 wu_post={k: P(ax) for k in g.wum.post_state},
                 g=P(ax, None, None) if g.plastic else None,
                 syn={k: P(ax, None, None) for k in g.wum.syn_state},
@@ -221,7 +251,10 @@ class ShardedEngine:
             npost_pad = self._npad[g.post]
             psm = {k: put(jnp.full((npost_pad,), v, jnp.float32), shn)
                    for k, v in g.psm.state.items()}
-            wu_pre = {k: put(jnp.full((n_pre,), v, jnp.float32), shr)
+            # pre traces shard along the pre-population neuron axis
+            # (padded lanes carry the init constant and never spike)
+            wu_pre = {k: put(jnp.full((self._npad[g.pre],), v,
+                                      jnp.float32), shn)
                       for k, v in g.wum.pre_state.items()}
             wu_post = {k: put(jnp.full((npost_pad,), v, jnp.float32), shn)
                        for k, v in g.wum.post_state.items()}
@@ -280,8 +313,8 @@ class ShardedEngine:
                     stim: Optional[Mapping[str, jax.Array]] = None):
         """One dt step on this device's shard; mirrors Simulator.step
         line for line (key schedule, group order, update order).
-        stim: population -> [n] full-size external currents (replicated),
-        sliced per shard exactly like input_fn draws."""
+        stim: population -> [S] local shard of zero-padded external
+        currents (sharded along the neuron axis by _pad_stim)."""
         stim = stim or {}
         net, dt, ax = self.net, self.dt, self.axis
         d = jax.lax.axis_index(ax)
@@ -325,10 +358,38 @@ class ShardedEngine:
                                       delay=blk.get("delay"))
                 dense_l = None
             v_post = state.neurons[g.post].get("V")
+            new_pre_local = None
+            pre_arg = None
+            if g.wum.pre_state:
+                # wu_pre shards along the PRE axis: advance the local
+                # trace segment (the elementwise pre_step commutes with
+                # slicing; padded lanes never spike) and gather the full
+                # vector only when learn code actually reads it — a
+                # per-step transient, never replicated persistent state
+                new_pre_local = state.syn[g.name].wu_pre
+                if g._wu.pre_step is not None:
+                    new_pre_local = g._wu.pre_step(
+                        state.syn[g.name].wu_pre, g.wum.params,
+                        {"dt": dt, "t": state.t,
+                         "delay": jnp.float32(g.delay_steps),
+                         "pre_spike":
+                             state.spikes[g.pre].astype(jnp.float32)})
+                pre_arg = {}
+                if g._wu.learn is not None:
+                    pre_arg = {
+                        k: jax.lax.all_gather(
+                            v, ax, tiled=True)[: g.ell.n_pre]
+                        for k, v in new_pre_local.items()}
             s_new, cur = g.step(
                 state.syn[g.name], full_spikes[g.pre], gs, dt,
                 v_post=v_post, post_spikes=state.spikes[g.post], t=state.t,
-                conn=LocalConnectivity(ell=ell_l, dense=dense_l))
+                conn=LocalConnectivity(ell=ell_l, dense=dense_l),
+                pre_traces=pre_arg)
+            if new_pre_local is not None:
+                s_new = s_new.__class__(
+                    psm=s_new.psm, wu_pre=new_pre_local,
+                    wu_post=s_new.wu_post, g=s_new.g, syn=s_new.syn,
+                    dendritic=s_new.dendritic, cursor=s_new.cursor)
             new_syn[g.name] = s_new
             isyn[g.post] = isyn[g.post] + cur
 
@@ -349,9 +410,11 @@ class ShardedEngine:
                 full = jnp.pad(full, (0, self._npad[name] - pop.n))
                 cur = cur + jax.lax.dynamic_slice(full, (d * S,), (S,))
             if name in stim:
-                full = jnp.asarray(stim[name], jnp.float32)
-                full = jnp.pad(full, (0, self._npad[name] - pop.n))
-                cur = cur + jax.lax.dynamic_slice(full, (d * S,), (S,))
+                # stim arrives zero-padded and sharded along the neuron
+                # axis (see _pad_stim): the local segment adds directly —
+                # bit-identical to the old replicated draw + slice, with
+                # 1/D the per-device footprint
+                cur = cur + jnp.asarray(stim[name], jnp.float32)
             params = dict(self._scalar_params[name])
             params.update(pn_params[name])
             ext = {"Isyn": cur, "dt": jnp.float32(dt), "t": state.t}
@@ -561,14 +624,15 @@ class ShardedEngine:
     # reductions combine per-device partials with psum/pmax/pmin.
     # ------------------------------------------------------------------
     def _probe_sharded(self, p) -> bool:
-        """True when the probe's buffer rows shard along the neuron axis."""
-        return p.reduce is None and p.varkind != "wu_pre"
+        """True when the probe's buffer rows shard along the neuron axis
+        (wu_pre buffers shard along the PRE population's axis)."""
+        return p.reduce is None
 
     def _probe_local_shape(self, p, cap: int):
         if p.reduce is not None:
             return (cap,)
         if p.varkind == "wu_pre":
-            return (cap, p.n)
+            return (cap, self._shard[self._groups[p.target].pre])
         if PR.is_packed(p):
             # spike rows live as uint32 bitmasks (32x smaller rings);
             # unpacked shard-locally at finalize, before the exit gather
@@ -590,10 +654,11 @@ class ShardedEngine:
     def _probe_local_value(self, p, state, spikes, blocks):
         ax = self.axis
         if p.varkind == "wu_pre":
-            val = state.syn[p.target].wu_pre[p.var]   # replicated, full
+            val = state.syn[p.target].wu_pre[p.var]   # local pre shard
             if p.reduce is None:
-                return val
-            return PR.vector_reduce(val, p.reduce, p.denom)
+                return val                            # sharded buffer rows
+            full = jax.lax.all_gather(val, ax, tiled=True)[: p.n]
+            return PR.vector_reduce(full, p.reduce, p.denom)
         if p.varkind in ("g", "syn"):
             blk = blocks[p.target]
             st = state.syn[p.target]
@@ -694,6 +759,23 @@ class ShardedEngine:
                 f"unknown stim population(s) {sorted(unknown)}; declared "
                 f"populations: {sorted(self.net.populations)}")
 
+    def _pad_stim(self, stim) -> Dict[str, jax.Array]:
+        """Zero-pad each stim array's neuron axis (the last) to the padded
+        population size so it enters shard_map sharded along the mesh
+        instead of replicated.  Padded lanes add 0 into padded shard lanes
+        (masked out of every output), so this is bit-identical to the old
+        full-size replicated array + per-device dynamic_slice at 1/D the
+        per-device footprint."""
+        out = {}
+        for k, v in stim.items():
+            arr = jnp.asarray(v, jnp.float32)
+            pad = self._npad[k] - self.net.populations[k].n
+            if pad:
+                cfg = [(0, 0)] * (arr.ndim - 1) + [(0, pad)]
+                arr = jnp.pad(arr, cfg)
+            out[k] = arr
+        return out
+
     def _in_specs(self):
         return (self._state_specs, self._block_specs, self._pn_specs)
 
@@ -772,7 +854,7 @@ class ShardedEngine:
         return self._shard_map(
             local_fn,
             in_specs=(*self._in_specs(), tuple(P() for _ in keys),
-                      {k: P() for k in stim_keys}),
+                      {k: P(None, ax) for k in stim_keys}),
             out_specs=out_specs)
 
     def run(self, n_steps: int,
@@ -786,8 +868,7 @@ class ShardedEngine:
         gscales = dict(gscales or {})
         self._validate_gscales(gscales)
         self._validate_stim(stim)
-        stim = {k: jnp.asarray(v, jnp.float32)
-                for k, v in (stim or {}).items()}
+        stim = self._pad_stim(stim or {})
         if state is None:
             state = self.init_state()
         keys = tuple(sorted(gscales))
@@ -839,7 +920,7 @@ class ShardedEngine:
         return self._shard_map(
             local_fn,
             in_specs=(*self._in_specs(), tuple(P() for _ in keys),
-                      {k: P() for k in stim_keys}),
+                      {k: P(ax) for k in stim_keys}),
             out_specs=(self._state_specs,
                        {name: P(ax) for name in self.net.populations}))
 
@@ -851,8 +932,7 @@ class ShardedEngine:
         gscales = dict(gscales or {})
         self._validate_gscales(gscales)
         self._validate_stim(stim)
-        stim = {k: jnp.asarray(v, jnp.float32)
-                for k, v in (stim or {}).items()}
+        stim = self._pad_stim(stim or {})
         keys = tuple(sorted(gscales))
         stim_keys = tuple(sorted(stim))
         cache_key = (keys, stim_keys)
@@ -1067,7 +1147,8 @@ class ShardedEngine:
         return self._shard_map(
             local_fn,
             in_specs=(stream_specs, self._block_specs, self._pn_specs,
-                      tuple(P() for _ in keys), {k: P() for k in stim_keys},
+                      tuple(P() for _ in keys),
+                      {k: P(None, None, ax) for k in stim_keys},
                       P()),
             out_specs=out_specs)
 
@@ -1085,7 +1166,7 @@ class ShardedEngine:
         gscales = dict(gscales or {})
         self._validate_gscales(gscales)
         self._validate_stim(stim)
-        stim = {k: jnp.asarray(v, jnp.float32) for k, v in stim.items()}
+        stim = self._pad_stim(stim)
         steps_left = jnp.asarray(steps_left, jnp.int32)
         keys = tuple(sorted(gscales))
         stim_keys = tuple(sorted(stim))

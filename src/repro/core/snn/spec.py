@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.codegen import (NeuronModel, PostsynapticModel,
                                 WeightUpdateModel, assigned_names)
+from repro.core.snn import bitmask as BM
 from repro.core.snn import custom_updates as CU
 from repro.core.snn import probes as PR
 from repro.core.snn.errors import SpecError
@@ -418,6 +419,188 @@ class ModelSpec:
                     out.add(cu.target)
         return out
 
+    # -- pre-flight capacity planning --------------------------------------
+    def _plan_groups(self, dt: float):
+        """Static per-group geometry the planner sizes from: no arrays are
+        allocated and nothing is resolved — connectivity widths come from
+        the same bounds `device_init` uses for its slot padding."""
+        from repro.sparse import device_init as DI
+        mutable = self._mutable_groups()
+        groups = []
+        for sp in self.synapses:
+            n_pre = self.populations[sp.pre].n
+            sizes = [self.populations[p].n for p in sp.post]
+            n_post_total = int(sum(sizes))
+            c = sp.connect
+            if isinstance(c, F.FixedFanout):
+                k = int(c.n_conn)
+            elif isinstance(c, F.FixedProbability):
+                k = DI._binomial_slots(n_post_total, c.p)
+            elif isinstance(c, F.OneToOne):
+                k = 1
+            else:                       # DenseInit / unknown: worst case
+                k = n_post_total
+            if sp.delay is not None:
+                ring_slots = sp.delay.max_steps + 1
+            elif sp.delay_ms is not None:
+                ring_slots = int(round(sp.delay_ms / dt)) + 1
+            elif sp.delay_steps > 0:
+                ring_slots = sp.delay_steps + 1
+            else:
+                ring_slots = 0
+            wum = sp.wum
+            plastic = ((wum is not None and not wum.is_static_pulse)
+                       or any(g in mutable for g in sp.group_names()))
+            for pname, n_p, gname in zip(sp.post, sizes,
+                                         sp.group_names()):
+                groups.append({
+                    "name": gname, "pre": sp.pre, "post": pname,
+                    "n_pre": n_pre, "n_post": n_p,
+                    "n_post_total": n_post_total, "k": k,
+                    "has_delay": sp.delay is not None,
+                    "ring_slots": ring_slots, "plastic": plastic,
+                    "n_pre_state": len(wum.pre_state) if wum else 0,
+                    "n_post_state": len(wum.post_state) if wum else 0,
+                    "n_syn_state": len(wum.syn_state) if wum else 0,
+                    "n_psm_state": len(sp.psm.state)})
+        return groups
+
+    def _plan_at(self, D: int, dt: float, n_steps: Optional[int],
+                 max_streams: int):
+        """Per-device byte breakdown at device count D (planner core)."""
+        from repro.sparse import device_init as DI
+        components = []
+
+        def shard(n):
+            return -(-int(n) // D)
+
+        constr_fused = constr_part = 0
+        steady = 0
+        for gi in self._plan_groups(dt):
+            K = gi["k"]
+            # the post-partitioned slot width concentrates each row's K
+            # slots onto D shards: binomial mean + 6 sigma, the same
+            # bound device_init uses for its own slot padding
+            q = min(1.0, shard(gi["n_post"]) / max(gi["n_post_total"], 1))
+            k_local = int(min(K, np.ceil(
+                K * q + 6.0 * np.sqrt(max(K * q * (1.0 - q), 0.0)) + 1)))
+            k_local = max(k_local, 1)
+            slot_b = F.ell_slot_bytes(gi["has_delay"])
+            block_b = gi["n_pre"] * k_local * slot_b
+            dyn_b = (gi["n_pre"] * k_local * 4
+                     * ((1 if gi["plastic"] else 0) + gi["n_syn_state"])
+                     + shard(gi["n_post"]) * 4
+                     * (gi["n_psm_state"] + gi["n_post_state"])
+                     + shard(gi["n_pre"]) * 4 * gi["n_pre_state"]
+                     + gi["ring_slots"] * shard(gi["n_post"]) * 4)
+            peak = DI.construction_peak_model(
+                gi["n_pre"], K, D, k_local, has_delay=gi["has_delay"])
+            constr_fused += peak["fused_local_bytes"]
+            constr_part += peak["generate_partition_bytes"]
+            steady += block_b + dyn_b * max_streams
+            components.append({
+                "name": gi["name"], "kind": "synapse_group",
+                "bytes_per_device": block_b + dyn_b * max_streams,
+                "construction_fused_bytes": peak["fused_local_bytes"],
+                "construction_partition_bytes":
+                    peak["generate_partition_bytes"],
+                "k": K, "k_local": k_local})
+        for name, pop in self.populations.items():
+            nb = (len(pop.model.state) + 2) * shard(pop.n) * 4 \
+                * max_streams
+            steady += nb
+            components.append({"name": name, "kind": "population",
+                               "bytes_per_device": nb})
+        if n_steps is not None:
+            # probe rings (packed spikes rows at their true uint32 size)
+            pops, groups = self._declared_targets()
+            for p in self.probes:
+                cap = int(np.ceil(n_steps / p.every))
+                if p.window is not None:
+                    cap = min(cap, p.window)
+                if p.reduce is not None:
+                    bps = 4
+                elif p.target in pops and p.var == "spikes":
+                    bps = BM.words_for(shard(
+                        self.populations[p.target].n)) * 4
+                else:
+                    width = (self.populations[p.target].n
+                             if p.target in pops else max(
+                                 (gi["n_post"]
+                                  for gi in self._plan_groups(dt)
+                                  if gi["name"] == p.target), default=1))
+                    bps = shard(width) * 4
+                nb = cap * bps * max_streams
+                steady += nb
+                components.append({"name": p.name, "kind": "probe",
+                                   "bytes_per_device": nb,
+                                   "is_packed": (p.reduce is None
+                                                 and p.var == "spikes")})
+        return {"steady_state_bytes": int(steady),
+                "construction_fused_bytes": int(constr_fused),
+                "construction_partition_bytes": int(constr_part),
+                "peak_bytes": int(max(steady + constr_fused, steady)),
+                "components": components}
+
+    def plan(self, mesh_shape: int = 1, host_gib: float = 16.0,
+             dt: float = 0.5, n_steps: Optional[int] = None,
+             max_streams: int = 1) -> dict:
+        """Pre-flight capacity planner: per-device *construction* and
+        steady-state bytes at `mesh_shape` devices against a `host_gib`
+        budget per device, without building anything.
+
+        Returns a dict with ``devices``, ``budget_bytes_per_device``,
+        ``per_device`` (``construction_fused_bytes`` for the
+        `device_init_local` path, ``construction_partition_bytes`` for
+        generate-then-partition, ``steady_state_bytes``, ``peak_bytes``),
+        a per-component breakdown, ``fits``, ``first_overflow`` (the
+        first component that pushes the running total past the budget),
+        and — when the spec does not fit — ``min_devices`` and a
+        human-readable ``needs`` ("this spec needs N hosts", one device
+        per host).  Construction sizing assumes the fused
+        `init="device"` + mesh path; the generate-then-partition column
+        shows what the same build would peak at without it."""
+        if not isinstance(mesh_shape, int) or mesh_shape <= 0:
+            raise SpecError(f"plan: mesh_shape must be a positive int, "
+                            f"got {mesh_shape!r}")
+        budget = int(host_gib * (1 << 30))
+        res = self._plan_at(mesh_shape, dt, n_steps, max_streams)
+        first_overflow = None
+        running = 0
+        for comp in res["components"]:
+            running += (comp["bytes_per_device"]
+                        + comp.get("construction_fused_bytes", 0))
+            if first_overflow is None and running > budget:
+                first_overflow = comp["name"]
+        fits = res["peak_bytes"] <= budget
+        out = {"devices": mesh_shape,
+               "budget_bytes_per_device": budget,
+               "per_device": {
+                   "construction_fused_bytes":
+                       res["construction_fused_bytes"],
+                   "construction_partition_bytes":
+                       res["construction_partition_bytes"],
+                   "steady_state_bytes": res["steady_state_bytes"],
+                   "peak_bytes": res["peak_bytes"]},
+               "components": res["components"],
+               "fits": fits,
+               "first_overflow": first_overflow}
+        if not fits:
+            D = mesh_shape
+            while D < (1 << 24):
+                D *= 2
+                if self._plan_at(D, dt, n_steps,
+                                 max_streams)["peak_bytes"] <= budget:
+                    break
+            out["min_devices"] = D
+            out["needs"] = (f"this spec needs {D} hosts "
+                            f"({host_gib} GiB each); first component over "
+                            f"budget: {first_overflow}")
+        else:
+            out["min_devices"] = mesh_shape
+            out["needs"] = "fits"
+        return out
+
     # -- build ------------------------------------------------------------
     def build(self, dt: float = 0.5, seed: int = 0, mesh=None,
               init: str = "host", monitor=None) -> "CompiledModel":
@@ -476,6 +659,10 @@ class ModelSpec:
                                params=pop.params, input_fn=pop.input_fn,
                                edge_spikes=pop.edge_spikes)
 
+        # init="device" + mesh: per-group fused-construction plans (the
+        # engine generates each device's rows locally instead of
+        # re-partitioning the full ELL — bit-exact, O(nnz/device) peak)
+        local_plans: Dict[str, object] = {}
         for sidx, sp in enumerate(self.synapses):
             n_pre = self.populations[sp.pre].n
             sizes = [self.populations[p].n for p in sp.post]
@@ -569,6 +756,15 @@ class ModelSpec:
                 except ValueError as e:
                     raise SpecError(f"{where}: {e}") from None
                 net.add_synapse(group)
+                if init == "device" and mesh is not None:
+                    from repro.sparse import device_init as DI
+                    local_plans[gname] = DI.LocalInitPlan(
+                        connect=sp.connect,
+                        key=jax.random.fold_in(base_key, sidx),
+                        n_pre=n_pre, n_post_total=n_post_total,
+                        weight=sp.weight, delay=sp.delay,
+                        post_window=((lo, hi) if len(sp.post) > 1
+                                     else None))
                 lo = hi
 
         # resolve the observation/intervention surface against the built
@@ -592,7 +788,8 @@ class ModelSpec:
             with trace.span("shard", devices=len(mesh.devices.flat)):
                 engine = ShardedEngine(net, mesh, dt=dt, seed=seed,
                                        probes=probes, custom_updates=custom,
-                                       monitor=monitor)
+                                       monitor=monitor,
+                                       local_init=local_plans or None)
         with trace.span("codegen", populations=len(net.populations)):
             sim = Simulator(net, dt=dt, seed=seed, probes=probes,
                             custom_updates=custom, monitor=monitor)
@@ -696,6 +893,19 @@ class CompiledModel:
         return out
 
     def _warn_record_raster(self) -> None:
+        # the shim's migration target is a probe named after the variable;
+        # a user probe already named "spikes" would leave two writers
+        # racing for the same Recordings key (last one wins, silently) —
+        # refuse loudly instead of warning
+        clash = [p.name for p in self.simulator.probes
+                 if p.name == "spikes"]
+        if clash:
+            raise SpecError(
+                "record_raster=True collides with the declared probe named "
+                "'spikes': the deprecation shim and the probe would both "
+                "write the 'spikes' recordings key (last writer wins). "
+                "Drop record_raster=True (the probe already records the "
+                "raster) or rename the probe.")
         warnings.warn(
             "record_raster is deprecated: declare a probe instead "
             "(spec.probe(name, population, 'spikes') reproduces the "
@@ -895,15 +1105,34 @@ class CompiledModel:
             out.append({"name": name, "kind": "population",
                         "n": pop.n, "state_elements": n_state})
         for p in self.simulator.probes:
+            # bytes reflect the *stored* ring: unreduced spikes probes are
+            # bit-packed to uint32 [cap, words] (PR 8), 32x smaller than
+            # their logical bool [cap, n] samples — the capacity planner
+            # sizes off these numbers, so overestimating here would
+            # overprovision hosts
+            packed = PR.is_packed(p)
+            if packed:
+                bps = BM.words_for(p.n) * 4
+            elif p.reduce is not None:
+                bps = 4
+            else:
+                bps = int(p.n) * 4
             entry = {"name": p.name, "kind": "probe", "target": p.target,
                      "var": p.var, "every": p.every,
-                     "elements_per_sample": p.elements_per_sample()}
-            if p.window is not None:
-                entry["buffer_elements"] = (p.window
-                                            * p.elements_per_sample())
-            elif n_steps is not None:
-                entry["buffer_elements"] = (
-                    PR.capacity(p, n_steps) * p.elements_per_sample())
+                     "elements_per_sample": p.elements_per_sample(),
+                     "is_packed": packed,
+                     "bytes_per_sample": bps}
+            # when n_steps is known, size exactly what _probe_init
+            # allocates (window caps the strided capacity); bare window
+            # probes report the window itself
+            cap = None
+            if n_steps is not None:
+                cap = PR.capacity(p, n_steps)
+            elif p.window is not None:
+                cap = p.window
+            if cap is not None:
+                entry["buffer_elements"] = cap * p.elements_per_sample()
+                entry["buffer_bytes"] = cap * bps
             out.append(entry)
         for name, cu in sorted(self.simulator.custom_updates.items()):
             out.append({"name": name, "kind": "custom_update",

@@ -448,6 +448,7 @@ class SynapseGroup:
         conn: Optional[LocalConnectivity] = None,
         ell: Optional[F.ELLSynapses] = None,
         dense: Optional[jax.Array] = None,
+        pre_traces: Optional[Dict[str, jax.Array]] = None,
     ) -> tuple[SynapseState, jax.Array]:
         """Advance one step; returns (new_state, current into post neurons).
 
@@ -456,6 +457,12 @@ class SynapseGroup:
         ``ell=``/``dense=`` kwargs are a deprecated spelling of the same
         override (DeprecationWarning; conflicting with conn= raises
         SpecError).
+
+        `pre_traces`: when not None, the caller owns the pre-trace state —
+        the internal pre_step is skipped (state.wu_pre passes through
+        untouched; the sharded engine advances its own pre-sharded copy) and
+        learn reads these full-size [n_pre] trace vectors instead.  The
+        host path always passes None.
 
         Dendritic delays: each synapse's weighted contribution is scatter-
         added into the post-side ring ``delay`` slots ahead of the cursor
@@ -516,7 +523,7 @@ class SynapseGroup:
                     if post_spikes is not None
                     else jnp.zeros((lell.n_post,), jnp.float32))
         new_pre = state.wu_pre
-        if self._wu.pre_step is not None:
+        if pre_traces is None and self._wu.pre_step is not None:
             new_pre = self._wu.pre_step(
                 state.wu_pre, self.wum.params,
                 {**wu_ext, "pre_spike": pre_spk})
@@ -530,7 +537,8 @@ class SynapseGroup:
             gather = lell.post_ind
             traces = {"pre_spike": pre_spk[:, None],
                       "post_spike": post_spk[gather]}
-            traces.update({k: v[:, None] for k, v in new_pre.items()})
+            pre_read = new_pre if pre_traces is None else pre_traces
+            traces.update({k: v[:, None] for k, v in pre_read.items()})
             traces.update({k: v[gather] for k, v in new_post.items()})
             g_learn, new_syn = self._wu.learn(
                 state.g, state.syn, traces, self.wum.params, wu_ext)

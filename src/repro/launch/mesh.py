@@ -16,10 +16,54 @@ from typing import Optional, Sequence, Tuple
 import jax
 
 __all__ = ["make_mesh", "make_production_mesh", "make_local_mesh",
-           "make_snn_mesh", "snn_axis", "batch_axes", "MeshPlan"]
+           "make_snn_mesh", "snn_axis", "batch_axes", "MeshPlan",
+           "init_distributed"]
 
 #: mesh axis the SNN engine partitions neuron populations over
 SNN_AXIS = "neuron"
+
+# process-wide: jax.distributed.initialize may run exactly once
+_DISTRIBUTED = {"initialized": False}
+
+
+def init_distributed(coordinator_address: Optional[str] = None,
+                     num_processes: Optional[int] = None,
+                     process_id: Optional[int] = None,
+                     **kwargs) -> Tuple[int, int]:
+    """Wire this process into a multi-host JAX runtime and return
+    (process_index, process_count).
+
+    Call once per process before building any mesh; afterwards
+    `jax.devices()` spans every host, so `make_snn_mesh()` returns a
+    mesh crossing hosts and `ModelSpec.build(init="device", mesh=...)`
+    constructs each host's connectivity shards locally
+    (`device_init_local`) — no host ever materializes the full ELL.
+
+    With no arguments the coordinator/rank come from the environment
+    (JAX_COORDINATOR_ADDRESS etc. / the cluster plugin); pass
+    `coordinator_address="host:port"`, `num_processes`, `process_id`
+    explicitly for bare multi-process launches.  Idempotent: a second
+    call (or an already-initialized runtime) is a no-op."""
+    if not _DISTRIBUTED["initialized"]:
+        try:
+            # the CPU backend needs an explicit cross-process collectives
+            # implementation; must be set before the backend initializes,
+            # which is exactly when this function runs.  No-op on GPU/TPU.
+            jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        except (AttributeError, ValueError):
+            pass  # older jax: CPU multi-process simply unsupported
+        try:
+            jax.distributed.initialize(
+                coordinator_address=coordinator_address,
+                num_processes=num_processes,
+                process_id=process_id, **kwargs)
+        except RuntimeError as e:
+            # tolerate double-init (ours or a framework's): the runtime
+            # is already up, which is all this function guarantees
+            if "already" not in str(e).lower():
+                raise
+        _DISTRIBUTED["initialized"] = True
+    return jax.process_index(), jax.process_count()
 
 
 def _axis_type_kwargs(n: int) -> dict:

@@ -34,6 +34,7 @@ bit-exact currents — is preserved per post neuron).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from typing import Optional, Tuple, Union
@@ -41,13 +42,18 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import snn_axis
+from repro.obs import trace
 from repro.sparse import formats as F
 
 __all__ = [
     "device_resolve", "device_fixed_fanout", "device_fixed_probability",
     "device_one_to_one", "device_dense", "partition_ell_by_post",
     "as_device_weight", "as_device_delay", "device_delays",
+    "device_init_local", "LocalInitPlan", "construction_peak_model",
 ]
 
 _JTriple = Tuple[jax.Array, jax.Array, jax.Array]  # post_ind, g, valid
@@ -205,24 +211,44 @@ def _binomial_slots(n_post: int, p: float) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("n_post", "k"))
-def _fixed_probability_rows(key: jax.Array, rows: jax.Array, n_post: int,
-                            p: float, k: int) -> Tuple[jax.Array, jax.Array]:
-    """(post [R, k], counts [R]): per-row Binomial(n_post, p) degrees, then a
-    uniform degree-subset of targets (a k-subset randomly permuted, first
-    `count` slots valid) — the per-pair Bernoulli model, marginalized."""
+def _fixed_probability_rows(
+    key: jax.Array, rows: jax.Array, n_post: int, p: float, k: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(post [R, k], counts [R], overflow [R] bool): per-row
+    Binomial(n_post, p) degrees, then a uniform degree-subset of targets (a
+    k-subset randomly permuted, first `count` slots valid) — the per-pair
+    Bernoulli model, marginalized.  A raw degree draw above the static slot
+    padding `k` is clamped, and the row is flagged in `overflow` so callers
+    can surface the clamp instead of silently dropping synapses."""
     ckey = jax.random.fold_in(key, 0xDE)
 
     def one(rk):
-        cnt = jax.random.binomial(jax.random.fold_in(rk, 1), n_post,
+        raw = jax.random.binomial(jax.random.fold_in(rk, 1), n_post,
                                   p).astype(jnp.int32)
-        cnt = jnp.clip(cnt, 0, k)
+        cnt = jnp.clip(raw, 0, k)
         vals = (_distinct_topk if k > n_post // 2 else _distinct_redraw)(
             jax.random.fold_in(rk, 2), n_post, k)
         perm = jnp.argsort(
             jax.random.uniform(jax.random.fold_in(rk, 3), (k,)))
-        return vals[perm], cnt
+        return vals[perm], cnt, raw > k
 
     return jax.vmap(one)(_row_keys(ckey, rows))
+
+
+def _report_overflow(n_rows, *, n_pre: int, n_post: int, p: float,
+                     k: int) -> None:
+    """Surface clamped FixedProbability rows through the trace timeline.
+
+    Under jit/shard_map `n_rows` is a tracer — the count cannot be read at
+    trace time, so reporting is skipped here and done by the caller that owns
+    the host sync (`device_init_local` reports from its count pass)."""
+    if isinstance(n_rows, jax.core.Tracer):
+        return
+    n = int(jax.device_get(n_rows))
+    if n > 0:
+        trace.instant("device_init.overflow", kind="fixed_probability",
+                      rows_clamped=n, rows=n_pre, n_post=n_post, p=float(p),
+                      max_k=k)
 
 
 def device_fixed_probability(key: jax.Array, n_pre: int, n_post: int,
@@ -233,7 +259,9 @@ def device_fixed_probability(key: jax.Array, n_pre: int, n_post: int,
         raise ValueError(f"FixedProbability p={p} outside [0, 1]")
     rows = _rows_or_default(rows, n_pre)
     k = _binomial_slots(n_post, p)
-    post, counts = _fixed_probability_rows(key, rows, n_post, p, k)
+    post, counts, over = _fixed_probability_rows(key, rows, n_post, p, k)
+    _report_overflow(jnp.sum(over.astype(jnp.int32)), n_pre=n_pre,
+                     n_post=n_post, p=p, k=k)
     valid = jnp.arange(k, dtype=jnp.int32)[None, :] < counts[:, None]
     g = _row_weights(as_device_weight(weight), key, rows, k)
     g = jnp.where(valid, g, 0.0).astype(jnp.float32)
@@ -280,8 +308,72 @@ def device_resolve(connect: F.ConnectivityInit, key: jax.Array, n_pre: int,
 
 
 # ---------------------------------------------------------------------------
-# post-sharding: repack a global ELL into per-device blocks
+# post-sharding: repack a built ELL into per-device blocks
 # ---------------------------------------------------------------------------
+
+def _shard_counts(post_ind: jax.Array, valid: jax.Array, n_shards: int,
+                  shard_size: int) -> jax.Array:
+    """[rows, n_shards] int32 slot counts per (pre row, post shard).
+
+    Computed from the sorted shard ids via searchsorted boundaries:
+    O(rows * D log K), never an [rows, K, D] one-hot temporary (which would
+    be O(nnz * D) — the very blowup this module exists to avoid).  Every op
+    is per-row independent, so counts over any row chunk equal the matching
+    rows of the full-matrix call — the property `device_init_local` leans on.
+    """
+    shard = jnp.where(valid, post_ind // shard_size, n_shards)
+    shard_s = jnp.sort(shard, axis=1)
+    bounds = jnp.arange(n_shards + 1, dtype=shard_s.dtype)
+    edges = jax.vmap(
+        lambda row: jnp.searchsorted(row, bounds, side="left"))(shard_s)
+    return jnp.diff(edges, axis=1)
+
+
+def _partition_rows(
+    g: jax.Array, post_ind: jax.Array, valid: jax.Array,
+    delay: Optional[jax.Array], n_shards: int, shard_size: int, k_local: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, Optional[jax.Array]]:
+    """Repack ELL rows into [n_shards, rows, k_local] post-shard blocks.
+
+    Slot (i, k) goes to the shard owning post neuron post_ind[i, k],
+    compacted left and re-indexed to shard-local post ids; the within-row
+    slot order is preserved (stable argsort), so per-post-neuron scatter
+    accumulation order — and hence bit-exact currents — matches the input
+    slot order.  All ops are per-row independent: partitioning a chunk of
+    rows bit-matches the corresponding rows of a full-matrix partition.
+    """
+    n_rows, k = g.shape
+    shard = jnp.where(valid, post_ind // shard_size, n_shards)
+    order = jnp.argsort(shard, axis=1)            # stable in jax
+    shard_s = jnp.take_along_axis(shard, order, axis=1)
+    post_s = jnp.take_along_axis(post_ind, order, axis=1)
+    g_s = jnp.take_along_axis(jnp.where(valid, g, 0.0), order, axis=1)
+    delay_s = (None if delay is None else jnp.take_along_axis(
+        jnp.where(valid, delay, 0), order, axis=1))
+    bounds = jnp.arange(n_shards + 1, dtype=shard_s.dtype)
+    edges = jax.vmap(
+        lambda row: jnp.searchsorted(row, bounds, side="left"))(shard_s)
+    counts = jnp.diff(edges, axis=1)              # [n_rows, n_shards]
+    start = jnp.concatenate(
+        [jnp.zeros((n_rows, 1), counts.dtype),
+         jnp.cumsum(counts, axis=1)[:, :-1]], axis=1)   # exclusive prefix
+    d_idx = shard_s                                # [n_rows, k]
+    slot = jnp.arange(k, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
+        start, jnp.clip(d_idx, 0, n_shards - 1), axis=1)
+    row = jnp.broadcast_to(jnp.arange(n_rows)[:, None], (n_rows, k))
+    shape = (n_shards, n_rows, k_local)
+    # invalid slots carry d_idx == n_shards -> dropped by the OOB mode
+    g_out = jnp.zeros(shape, jnp.float32).at[d_idx, row, slot].set(
+        g_s, mode="drop")
+    post_out = jnp.zeros(shape, jnp.int32).at[d_idx, row, slot].set(
+        (post_s - d_idx * shard_size).astype(jnp.int32), mode="drop")
+    valid_out = jnp.zeros(shape, bool).at[d_idx, row, slot].set(
+        shard_s < n_shards, mode="drop")
+    delay_out = (None if delay_s is None
+                 else jnp.zeros(shape, jnp.int32).at[d_idx, row, slot].set(
+                     delay_s.astype(jnp.int32), mode="drop"))
+    return g_out, post_out, valid_out, delay_out
+
 
 def partition_ell_by_post(
     ell: F.ELLSynapses, n_shards: int,
@@ -298,43 +390,182 @@ def partition_ell_by_post(
     delay slot (when present) rides along through the identical permutation;
     delay_local is None for delay-free ELLs.  Total memory across shards
     ~= nnz (k_local ~= K / n_shards).
+
+    This materializes the *full* ELL first — every device pays O(nnz).  For
+    builds where that does not fit, `device_init_local` fuses generation and
+    partitioning per device at O(nnz / n_devices) peak, bit-exactly.
     """
-    n_pre, k = ell.g.shape
     n_post = ell.n_post
     shard_size = -(-n_post // n_shards)  # ceil
-    shard = jnp.where(ell.valid, ell.post_ind // shard_size, n_shards)
-    order = jnp.argsort(shard, axis=1)            # stable in jax
-    shard_s = jnp.take_along_axis(shard, order, axis=1)
-    post_s = jnp.take_along_axis(ell.post_ind, order, axis=1)
-    g_s = jnp.take_along_axis(jnp.where(ell.valid, ell.g, 0.0), order,
-                              axis=1)
-    delay_s = (None if ell.delay is None else jnp.take_along_axis(
-        jnp.where(ell.valid, ell.delay, 0), order, axis=1))
-    # per-row per-shard slot counts from the sorted shard ids via
-    # searchsorted boundaries: O(n_pre * D log K), never an [n_pre, K, D]
-    # one-hot temporary (which would be O(nnz * D) — the very blowup this
-    # module exists to avoid)
-    bounds = jnp.arange(n_shards + 1, dtype=shard_s.dtype)
-    edges = jax.vmap(
-        lambda row: jnp.searchsorted(row, bounds, side="left"))(shard_s)
-    counts = jnp.diff(edges, axis=1)              # [n_pre, n_shards]
+    counts = _shard_counts(ell.post_ind, ell.valid, n_shards, shard_size)
     k_local = max(1, int(counts.max()))           # build-time host sync
-    start = jnp.concatenate(
-        [jnp.zeros((n_pre, 1), counts.dtype),
-         jnp.cumsum(counts, axis=1)[:, :-1]], axis=1)   # exclusive prefix
-    d_idx = shard_s                                # [n_pre, k]
-    slot = jnp.arange(k, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
-        start, jnp.clip(d_idx, 0, n_shards - 1), axis=1)
-    row = jnp.broadcast_to(jnp.arange(n_pre)[:, None], (n_pre, k))
-    shape = (n_shards, n_pre, k_local)
-    # invalid slots carry d_idx == n_shards -> dropped by the OOB mode
-    g_out = jnp.zeros(shape, jnp.float32).at[d_idx, row, slot].set(
-        g_s, mode="drop")
-    post_out = jnp.zeros(shape, jnp.int32).at[d_idx, row, slot].set(
-        (post_s - d_idx * shard_size).astype(jnp.int32), mode="drop")
-    valid_out = jnp.zeros(shape, bool).at[d_idx, row, slot].set(
-        shard_s < n_shards, mode="drop")
-    delay_out = (None if delay_s is None
-                 else jnp.zeros(shape, jnp.int32).at[d_idx, row, slot].set(
-                     delay_s.astype(jnp.int32), mode="drop"))
+    g_out, post_out, valid_out, delay_out = _partition_rows(
+        ell.g, ell.post_ind, ell.valid, ell.delay, n_shards, shard_size,
+        k_local)
     return g_out, post_out, valid_out, delay_out, shard_size, k_local
+
+
+# ---------------------------------------------------------------------------
+# fused local construction: generate only the rows you own, partition in
+# place, exchange slots — peak memory O(nnz / device)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LocalInitPlan:
+    """Everything `device_init_local` needs to rebuild one synapse group's
+    post-sharded blocks without the full ELL: the declaration, its key, and
+    the generation-space geometry.  `n_post_total` is the *generation* post
+    space (the concatenated post-population window); `post_window` restricts
+    to one concrete group's [lo, hi) slice of it (None = the whole space)."""
+    connect: F.ConnectivityInit
+    key: jax.Array
+    n_pre: int
+    n_post_total: int
+    weight: object = None
+    delay: object = None
+    post_window: Optional[Tuple[int, int]] = None
+
+
+def _fp_row_overflow(key: jax.Array, rows: jax.Array, n_post: int,
+                     p: float) -> jax.Array:
+    """[rows] int32 flags: FixedProbability rows whose raw Binomial degree
+    draw exceeds the static ELL slot padding (mirrors the key schedule of
+    `_fixed_probability_rows` without materializing targets)."""
+    k = _binomial_slots(n_post, p)
+    ckey = jax.random.fold_in(key, 0xDE)
+
+    def one(rk):
+        raw = jax.random.binomial(jax.random.fold_in(rk, 1), n_post,
+                                  p).astype(jnp.int32)
+        return (raw > k).astype(jnp.int32)
+
+    return jax.vmap(one)(_row_keys(ckey, rows))
+
+
+def device_init_local(
+    connect: F.ConnectivityInit, key: jax.Array, n_pre: int, n_post: int,
+    mesh, weight=None, delay=None, axis: Optional[str] = None,
+    post_window: Optional[Tuple[int, int]] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, Optional[jax.Array], int, int]:
+    """Fused `device_resolve` + `partition_ell_by_post` under `shard_map`.
+
+    Each device generates *only* its own ceil(n_pre / D) pre rows (via the
+    counter-based `rows=` argument, so the draws bit-match a global
+    generation), partitions them into post-shard blocks locally, and trades
+    slots with an `all_to_all` — no device ever materializes the full ELL,
+    so peak construction memory is O(nnz / device) instead of O(nnz).
+
+    Returns (g, post_local, valid, delay_local, shard_size, k_local) with
+    arrays shaped [n_shards, n_pre, k_local] exactly like
+    `partition_ell_by_post` (sharded along axis 0 over the mesh) and
+    bit-identical to the generate-then-partition path at any device count.
+
+    `n_post` is the total generation post space; `post_window=(lo, hi)`
+    restricts the output to one post-population window of it (matching the
+    multi-post-population split in `ModelSpec._build`).
+    """
+    axis = snn_axis(mesh) if axis is None else axis
+    D = int(mesh.shape[axis])
+    if post_window is None:
+        lo, hi = 0, int(n_post)
+    else:
+        lo, hi = int(post_window[0]), int(post_window[1])
+    n_local_post = hi - lo
+    shard_size = -(-n_local_post // D)   # == engine's per-device post shard
+    R = -(-n_pre // D)                   # padded pre rows per device
+    has_delay = delay is not None
+    is_fp = isinstance(connect, F.FixedProbability)
+
+    def _generate(k):
+        """This device's row chunk, masked to the post window.  Rows past
+        n_pre (pre-axis padding) are generated then invalidated — their
+        draws never reach the output, so padding cannot break exactness."""
+        d = jax.lax.axis_index(axis)
+        rows = d * R + jnp.arange(R, dtype=jnp.int32)
+        post, g, valid = device_resolve(connect, k, n_pre, n_post, weight,
+                                        rows=rows)
+        valid = valid & (rows < n_pre)[:, None]
+        dd = None
+        if has_delay:
+            dd = device_delays(k, n_pre, post.shape[1], delay, rows=rows)
+            dd = jnp.where(valid, dd, 0).astype(jnp.int32)
+        if post_window is not None:
+            mask = (post >= lo) & (post < hi) & valid
+            post = jnp.where(mask, post - lo, 0).astype(jnp.int32)
+            g = jnp.where(mask, g, 0.0).astype(jnp.float32)
+            dd = None if dd is None else jnp.where(mask, dd, 0)
+            valid = mask
+        return rows, post, g, valid, dd
+
+    def count_fn(k):
+        rows, post, _, valid, _ = _generate(k)
+        counts = _shard_counts(post, valid, D, shard_size)
+        # reduce across the axis so the outputs are replicated: in a
+        # multi-host mesh each process can only read its own shards, but
+        # every process needs the same k_local to build the same program
+        kmax = jax.lax.pmax(jnp.max(counts).astype(jnp.int32), axis)
+        if is_fp:
+            over = _fp_row_overflow(k, rows, n_post, connect.p)
+            osum = jax.lax.psum(
+                jnp.sum(jnp.where(rows < n_pre, over, 0)), axis)
+        else:
+            osum = jnp.zeros((), jnp.int32)
+        return kmax.reshape(1), osum.reshape(1)
+
+    counted = jax.jit(shard_map(
+        count_fn, mesh=mesh, in_specs=(P(),),
+        out_specs=(P(), P()), check_rep=False))(key)
+    k_local = max(1, int(jax.device_get(counted[0])[0]))
+    if is_fp:
+        overflow = int(jax.device_get(counted[1])[0])
+        if overflow > 0:
+            trace.instant("device_init.overflow", kind="fixed_probability",
+                          rows_clamped=overflow, rows=n_pre, n_post=n_post,
+                          p=float(connect.p),
+                          max_k=_binomial_slots(n_post, connect.p))
+
+    def fill_fn(k):
+        _, post, g, valid, dd = _generate(k)
+        parts = _partition_rows(g, post, valid, dd, D, shard_size, k_local)
+        out = []
+        for arr in parts:
+            if arr is None:
+                continue
+            # [D, R, kl] where [s] = slots for shard s from this device's
+            # rows; all_to_all makes [s] = device s's rows for *this* shard,
+            # so the reshape recovers global row order for the local block
+            blk = jax.lax.all_to_all(arr, axis, split_axis=0, concat_axis=0)
+            out.append(blk.reshape(D * R, k_local)[None])
+        return tuple(out)
+
+    n_out = 4 if has_delay else 3
+    outs = jax.jit(shard_map(
+        fill_fn, mesh=mesh, in_specs=(P(),),
+        out_specs=tuple(P(axis, None, None) for _ in range(n_out)),
+        check_rep=False))(key)
+    g_out = outs[0][:, :n_pre]
+    post_out = outs[1][:, :n_pre]
+    valid_out = outs[2][:, :n_pre]
+    delay_out = outs[3][:, :n_pre] if has_delay else None
+    return g_out, post_out, valid_out, delay_out, shard_size, k_local
+
+
+def construction_peak_model(n_pre: int, k: int, n_devices: int, k_local: int,
+                            has_delay: bool = False) -> dict:
+    """Analytic peak construction bytes per device for one synapse group:
+    generate-then-partition (every device materializes the full [n_pre, k]
+    ELL plus sort temporaries plus the full [D, n_pre, k_local] block stack)
+    vs. the fused local path (only ceil(n_pre / D) rows resident, plus the
+    partitioned blocks, their all_to_all receive buffer, and the final
+    block).  Used by `ModelSpec.plan` and the scaling bench — the fused
+    number is the O(nnz / device) claim, stated in bytes."""
+    slot_b = F.ell_slot_bytes(has_delay)
+    # argsort order (i4) + sorted shard ids (i4) + sorted copies of each slot
+    # array: the transient working set of `_partition_rows` per source slot
+    tmp_b = 8 + slot_b
+    rows_local = -(-n_pre // n_devices)
+    block_b = n_devices * k_local * slot_b       # [D, ., k_local] per row
+    gen = n_pre * (k * (slot_b + tmp_b) + block_b)
+    fused = rows_local * (k * (slot_b + tmp_b) + 3 * block_b)
+    return {"generate_partition_bytes": int(gen),
+            "fused_local_bytes": int(fused)}

@@ -14,6 +14,7 @@ All containers are registered pytrees so they flow through jit/scan/vmap.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -23,6 +24,7 @@ import numpy as np
 __all__ = [
     "CSRSynapses", "ELLSynapses",
     "sparse_memory_elements", "dense_memory_elements", "memory_bytes",
+    "ell_slot_bytes", "ell_memory_bytes",
     "choose_representation",
     "dense_to_csr", "dense_to_ell", "csr_to_dense", "ell_to_dense",
     "fixed_fanout_connectivity",
@@ -31,6 +33,24 @@ __all__ = [
     "WeightSnippet", "ConstantWeight", "UniformWeight", "NormalWeight",
     "DelaySnippet", "ConstantDelay", "UniformIntDelay",
 ]
+
+
+# The affine weight combines (`mean + std * draw`) must round the same way
+# in *every* compilation context: generation runs eagerly in ModelSpec
+# builds but inside one big jit/shard_map in device_init_local, and XLA's
+# CPU backend FMA-contracts mul+add when it compiles them together — a one-
+# ulp drift that breaks the fused path's bit-exactness contract.  Jitting
+# the draw as its own unit pins the contraction decision: eager callers and
+# enclosing jits both see the identical compiled expression.
+
+@functools.partial(jax.jit, static_argnames=("shape", "lo", "hi"))
+def _uniform_affine_draw(key, shape, lo, hi):
+    return lo + (hi - lo) * jax.random.uniform(key, shape, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "mean", "std"))
+def _normal_affine_draw(key, shape, mean, std):
+    return mean + std * jax.random.normal(key, shape, jnp.float32)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -125,6 +145,19 @@ def dense_memory_elements(n_pre: int, n_post: int) -> int:
 
 def memory_bytes(elements: int, dtype=jnp.float32) -> int:
     return int(elements) * jnp.dtype(dtype).itemsize
+
+
+def ell_slot_bytes(has_delay: bool = False) -> int:
+    """Bytes one ELL slot occupies across its parallel arrays: g (float32)
+    + post_ind (int32) + valid (bool), plus the int32 dendritic-delay slot
+    when the group declares per-synapse delays."""
+    return 4 + 4 + 1 + (4 if has_delay else 0)
+
+
+def ell_memory_bytes(n_pre: int, max_conn: int,
+                     has_delay: bool = False) -> int:
+    """Resident bytes of an [n_pre, max_conn] ELL (all parallel arrays)."""
+    return int(n_pre) * int(max_conn) * ell_slot_bytes(has_delay)
 
 
 def choose_representation(n_pre: int, n_post: int, n_nz: int) -> str:
@@ -242,8 +275,7 @@ class UniformWeight(WeightSnippet):
             np.float32)
 
     def device(self, key, shape) -> jax.Array:
-        return self.lo + (self.hi - self.lo) * jax.random.uniform(
-            key, shape, jnp.float32)
+        return _uniform_affine_draw(key, tuple(shape), self.lo, self.hi)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,8 +288,7 @@ class NormalWeight(WeightSnippet):
             np.float32)
 
     def device(self, key, shape) -> jax.Array:
-        return self.mean + self.std * jax.random.normal(key, shape,
-                                                        jnp.float32)
+        return _normal_affine_draw(key, tuple(shape), self.mean, self.std)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,118 @@
+"""Worker process for test_multihost.py — not a test module.
+
+Usage: python _multihost_worker.py <port> <process_id> <num_processes>
+
+With num_processes > 1 the worker wires itself into a 2-process
+jax.distributed runtime (2 fake CPU devices per process, 4 global) and
+builds a model with ``init="device"`` over the global mesh, so each
+process constructs only its own connectivity shards via
+``device_init_local``.  With num_processes == 1 it is the single-process
+oracle: same model, same 4-device mesh, no distributed runtime.
+
+Prints one JSON line: construction checksums over the engine's
+post-sharded connectivity blocks plus per-shard spike-count accumulators
+for the locally-addressable shards, so the parent test can splice the
+two processes' halves together and compare them bitwise against the
+oracle.
+"""
+
+import os
+
+# parent sets the device count explicitly (2/process distributed,
+# 4 for the oracle); default to the distributed shape for direct runs
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+N_STEPS = 20
+
+
+def build_model():
+    from repro.core.snn.spec import ModelSpec
+    from repro.core.snn.synapses import ExpDecay, STDP
+    from repro.launch.mesh import make_snn_mesh
+    from repro.sparse.formats import (FixedFanout, FixedProbability,
+                                      UniformIntDelay, UniformWeight)
+
+    s = ModelSpec("multihost")
+    s.add_neuron_population(
+        "a", 64, "izhikevich",
+        input_fn=lambda k, t, n: 6.0 * jax.random.normal(k, (n,)))
+    s.add_neuron_population("b", 32, "izhikevich")
+    s.add_synapse_population("ab", "a", "b", connect=FixedFanout(6),
+                             weight=UniformWeight(0, 0.8),
+                             psm=ExpDecay(4.0), wum=STDP(0.01),
+                             delay=UniformIntDelay(0, 3))
+    s.add_synapse_population("aa", "a", "a",
+                             connect=FixedProbability(0.15),
+                             weight=UniformWeight(0, 0.4))
+    return s.build(dt=1.0, seed=3, init="device",
+                   mesh=make_snn_mesh(jax.device_count()))
+
+
+def construction_checksums(engine):
+    """Order-independent integer checksums of the post-sharded blocks.
+
+    Sums run over globally-sharded arrays, so they are identical SPMD
+    computations on every process; int32 wraparound is deterministic."""
+    out = {}
+    for gname, blk in engine._blocks.items():
+        valid = blk["valid"].astype(jnp.int32)
+        out[gname] = {
+            "post": int(jnp.sum(blk["post"].astype(jnp.int32) * valid)),
+            "g_bits": int(jnp.sum(
+                jax.lax.bitcast_convert_type(blk["g"], jnp.int32) * valid)),
+        }
+        if "delay" in blk:
+            out[gname]["delay"] = int(
+                jnp.sum(blk["delay"].astype(jnp.int32) * valid))
+    return out
+
+
+def main():
+    port, pid, nproc = (int(a) for a in sys.argv[1:4])
+    if nproc > 1:
+        from repro.launch.mesh import init_distributed
+        got_pid, got_nproc = init_distributed(f"localhost:{port}",
+                                              nproc, pid)
+        assert (got_pid, got_nproc) == (pid, nproc), (got_pid, got_nproc)
+    model = build_model()
+    state = model.init_state()
+    acc = {}
+    for _ in range(N_STEPS):
+        state, spikes = model.step(state)
+        for name, v in spikes.items():
+            vi = v.astype(jnp.int32)
+            acc[name] = vi if name not in acc else acc[name] + vi
+    shards = {}
+    for name, arr in acc.items():
+        pieces = []
+        for sh in arr.addressable_shards:
+            start = sh.index[0].start or 0
+            pieces.append([int(start),
+                           np.asarray(sh.data).astype(int).tolist()])
+        pieces.sort()
+        shards[name] = pieces
+    print(json.dumps({
+        "pid": pid,
+        "nproc": jax.process_count(),
+        "ndev": jax.device_count(),
+        "ndev_local": jax.local_device_count(),
+        "padded": {name: int(arr.shape[0]) for name, arr in acc.items()},
+        "shards": shards,
+        "csum": construction_checksums(model.engine),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""ModelSpec.plan: the pre-flight capacity planner (PR 9).
+
+Pure arithmetic — nothing here allocates device arrays or builds a
+network, which is the point: a spec too big for this host must be
+plannable on this host.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.snn.spec import ModelSpec, SpecError
+from repro.core.snn.synapses import STDP
+from repro.sparse.formats import FixedFanout, FixedProbability, \
+    UniformIntDelay, UniformWeight
+
+
+def _small():
+    s = ModelSpec("small")
+    s.add_neuron_population("a", 200, "izhikevich")
+    s.add_neuron_population("b", 100, "izhikevich")
+    s.add_synapse_population("ab", "a", "b", connect=FixedFanout(8),
+                             weight=UniformWeight(0, 0.5),
+                             wum=STDP(0.01), delay=UniformIntDelay(0, 3))
+    s.probe("raster", "a", "spikes")
+    s.probe("vm", "b", "V", every=2)
+    return s
+
+
+def _huge(n=4_000_000, fanout=64):
+    s = ModelSpec("huge")
+    s.add_neuron_population("a", n, "izhikevich")
+    s.add_synapse_population("aa", "a", "a", connect=FixedFanout(fanout),
+                             weight=UniformWeight(0, 0.5),
+                             delay=UniformIntDelay(0, 7))
+    return s
+
+
+def test_plan_small_spec_fits_one_host():
+    p = _small().plan(mesh_shape=1, host_gib=16.0, n_steps=100)
+    assert p["fits"] and p["needs"] == "fits"
+    assert p["min_devices"] == 1
+    assert p["first_overflow"] is None
+    pd = p["per_device"]
+    assert 0 < pd["steady_state_bytes"] <= pd["peak_bytes"]
+    assert pd["construction_fused_bytes"] > 0
+    assert pd["construction_partition_bytes"] > 0
+    names = {c["name"] for c in p["components"]}
+    assert {"ab", "a", "b"} <= names
+
+
+def test_plan_construction_bytes_scale_per_device():
+    """The O(nnz/device) claim, stated in planner bytes: fused
+    construction shrinks with the device count while the
+    generate-then-partition column stays O(nnz)."""
+    p1 = _huge().plan(mesh_shape=1, host_gib=1024.0)
+    p8 = _huge().plan(mesh_shape=8, host_gib=1024.0)
+    f1 = p1["per_device"]["construction_fused_bytes"]
+    f8 = p8["per_device"]["construction_fused_bytes"]
+    g1 = p1["per_device"]["construction_partition_bytes"]
+    g8 = p8["per_device"]["construction_partition_bytes"]
+    assert f8 < f1 / 2            # better than half at 8x the devices
+    assert g8 > g1 / 2            # generate-then-partition barely moves
+
+
+def test_plan_names_first_component_over_budget():
+    """A multi-million-neuron net whose full ELL cannot fit one host:
+    the planner says how many hosts it needs and which component tips
+    the budget first."""
+    p = _huge().plan(mesh_shape=1, host_gib=2.0)
+    assert not p["fits"]
+    assert p["first_overflow"] == "aa"
+    assert p["min_devices"] > 1
+    assert p["needs"].startswith(f"this spec needs {p['min_devices']} hosts")
+    assert "aa" in p["needs"]
+    # and at the suggested device count it does fit
+    p2 = _huge().plan(mesh_shape=p["min_devices"], host_gib=2.0)
+    assert p2["fits"]
+
+
+def test_plan_min_devices_is_tight_up_to_doubling():
+    p = _huge().plan(mesh_shape=1, host_gib=2.0)
+    d = p["min_devices"]
+    if d > 2:
+        assert not _huge().plan(mesh_shape=d // 4 or 1,
+                                host_gib=2.0)["fits"]
+
+
+def test_plan_probe_rings_accounted_packed():
+    """Unreduced spikes rings enter the plan at their uint32 bit-packed
+    size (satellite 1: the planner must not overestimate by ~32x)."""
+    def mk(with_probe):
+        s = ModelSpec("pp")
+        s.add_neuron_population("a", 32_000, "izhikevich")
+        s.add_synapse_population("aa", "a", "a", connect=FixedFanout(4),
+                                 weight=UniformWeight(0, 0.5))
+        if with_probe:
+            s.probe("raster", "a", "spikes")
+        return s
+
+    base = mk(False).plan(mesh_shape=1, n_steps=1000)
+    with_p = mk(True).plan(mesh_shape=1, n_steps=1000)
+    delta = (with_p["per_device"]["steady_state_bytes"]
+             - base["per_device"]["steady_state_bytes"])
+    packed = 1000 * ((32_000 + 31) // 32) * 4
+    unpacked = 1000 * 32_000 * 4
+    assert delta == packed
+    assert delta < unpacked / 30
+
+
+def test_plan_validates_mesh_shape():
+    with pytest.raises(SpecError, match="mesh_shape"):
+        _small().plan(mesh_shape=0)
+    with pytest.raises(SpecError, match="mesh_shape"):
+        _small().plan(mesh_shape=2.5)
+
+
+def test_plan_matches_fixed_probability_slot_bound():
+    """FixedProbability groups plan with the same binomial slot bound
+    device_init pads to, so planned k is an upper bound on built k."""
+    from repro.sparse import device_init as DI
+    s = ModelSpec("fp")
+    s.add_neuron_population("a", 512, "izhikevich")
+    s.add_synapse_population("aa", "a", "a", connect=FixedProbability(0.1),
+                             weight=UniformWeight(0, 0.5))
+    p = s.plan(mesh_shape=4)
+    comp = next(c for c in p["components"] if c["name"] == "aa")
+    assert comp["k"] == DI._binomial_slots(512, 0.1)
+    assert 1 <= comp["k_local"] <= comp["k"]

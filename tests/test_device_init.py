@@ -278,3 +278,151 @@ def test_spec_build_rejects_bad_init():
     s.add_neuron_population("a", 8, "izhikevich")
     with pytest.raises(SpecError, match="init"):
         s.build(init="gpu")
+
+
+# ---------------------------------------------------------------------------
+# fused local construction (device_init_local)
+# ---------------------------------------------------------------------------
+
+def _mesh(n):
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:n]), ("neuron",))
+
+
+def _reference_blocks(connect, key, n_pre, n_post, n_shards, weight=None,
+                      delay=None, window=None):
+    """Generate-then-partition oracle, with the same multi-post window
+    masking the spec build applies."""
+    post, g, valid = DI.device_resolve(connect, key, n_pre, n_post, weight)
+    dd = (None if delay is None
+          else DI.device_delays(key, n_pre, post.shape[1], delay))
+    if dd is not None:
+        dd = jnp.where(valid, dd, 0).astype(jnp.int32)
+    if window is not None:
+        lo, hi = window
+        mask = (post >= lo) & (post < hi) & valid
+        post = jnp.where(mask, post - lo, 0).astype(jnp.int32)
+        g = jnp.where(mask, g, 0.0).astype(jnp.float32)
+        if dd is not None:
+            dd = jnp.where(mask, dd, 0).astype(jnp.int32)
+        valid = mask
+        n_local = hi - lo
+    else:
+        n_local = n_post
+    ell = F.ELLSynapses(g=g, post_ind=post, valid=valid, n_post=n_local,
+                        delay=dd)
+    return DI.partition_ell_by_post(ell, n_shards)
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 8])
+@pytest.mark.parametrize("case", ["fanout_delay", "prob", "window"])
+def test_device_init_local_bit_exact_vs_partition(n_dev, case):
+    """The tentpole contract: fused per-device generation + all_to_all
+    exchange reproduces generate-then-partition bit for bit at any device
+    count (delay slots included), because the per-row fold_in keys are
+    placement-independent."""
+    if len(jax.devices()) < n_dev:
+        pytest.skip(f"needs {n_dev} devices")
+    if case == "fanout_delay":
+        connect, weight = F.FixedFanout(7), F.NormalWeight(0.1, 0.4)
+        delay, window = F.UniformIntDelay(0, 3), None
+        n_pre, n_post = 37, 53
+    elif case == "prob":
+        connect, weight = F.FixedProbability(0.15), F.UniformWeight(0, 1)
+        delay, window = None, None
+        n_pre, n_post = 41, 64
+    else:
+        connect, weight = F.FixedFanout(5), F.NormalWeight(0.0, 1.0)
+        delay, window = F.ConstantDelay(2), (16, 40)
+        n_pre, n_post = 29, 48
+    key = _key(11)
+    ref = _reference_blocks(connect, key, n_pre, n_post, n_dev,
+                            weight=weight, delay=delay, window=window)
+    got = DI.device_init_local(connect, key, n_pre, n_post, _mesh(n_dev),
+                               weight=weight, delay=delay,
+                               post_window=window)
+    assert got[4] == ref[4] and got[5] == ref[5]     # shard_size, k_local
+    for name, a, b in zip(("g", "post", "valid", "delay"), got[:4],
+                          ref[:4]):
+        if b is None:
+            assert a is None
+            continue
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"{name} differs at D={n_dev}"
+
+
+def test_device_init_local_peak_model_scales_per_device():
+    """O(nnz/device): the fused path's modeled peak construction bytes
+    shrink as devices are added; generate-then-partition does not."""
+    n_pre, k = 4096, 64
+    fused, gen = [], []
+    for D in (1, 2, 4, 8):
+        m = DI.construction_peak_model(n_pre, k, D, k_local=max(1, k // D),
+                                       has_delay=True)
+        fused.append(m["fused_local_bytes"])
+        gen.append(m["generate_partition_bytes"])
+    # each doubling of D roughly halves the fused peak...
+    assert fused[1] < 0.75 * fused[0]
+    assert fused[3] < 0.25 * fused[0]
+    # ...while the full-materialization path stays O(nnz) per device
+    assert gen[3] > 0.5 * gen[0]
+    assert fused[3] < gen[3]
+
+
+# ---------------------------------------------------------------------------
+# FixedProbability max_k overflow clamp (bugfix: silent out-of-slot writes)
+# ---------------------------------------------------------------------------
+
+def test_fixed_probability_overflow_clamps_and_flags():
+    """Rows whose binomial draw exceeds the provided slot padding must be
+    clamped (no out-of-slot indices) and flagged, not silently wrapped."""
+    key = _key(0)
+    # k far below the mean degree forces overflow on essentially every row
+    post, counts, over = DI._fixed_probability_rows(
+        key, jnp.arange(16), 100, 0.5, 10)
+    counts = np.asarray(counts)
+    assert counts.max() <= 10
+    assert np.asarray(over).any()
+    # flagged rows are exactly those whose raw draw exceeded k
+    ckey = jax.random.fold_in(key, 0xDE)
+    raw = np.asarray([
+        jax.random.binomial(
+            jax.random.fold_in(jax.random.fold_in(ckey, r), 1), 100, 0.5)
+        for r in range(16)]).astype(np.int32)
+    assert np.array_equal(np.asarray(over), raw > 10)
+
+
+def test_fixed_probability_overflow_trace_instant():
+    from repro.obs import trace
+    trace.clear()
+    DI._report_overflow(jnp.int32(3), n_pre=8, n_post=100, p=0.9, k=4)
+    ev = [e for e in trace.events()
+          if e.get("name") == "device_init.overflow"]
+    assert len(ev) == 1
+    args = ev[0]["args"]
+    assert args["rows_clamped"] == 3 and args["max_k"] == 4
+    trace.clear()
+    # zero overflow -> no event
+    DI._report_overflow(jnp.int32(0), n_pre=8, n_post=100, p=0.9, k=4)
+    assert not [e for e in trace.events()
+                if e.get("name") == "device_init.overflow"]
+
+
+@pytest.mark.parametrize("p", [0.97, 1.0])
+def test_fixed_probability_p_to_one_boundary(p):
+    """At p -> 1 the slot bound saturates at n_post, so the public path
+    never overflows: every row gets ~n_post distinct in-range targets and
+    the degree matches Binomial(n_post, p) exactly at p == 1."""
+    n_pre, n_post = 20, 40
+    post, g, valid = DI.device_fixed_probability(_key(3), n_pre, n_post, p)
+    post, valid = np.asarray(post), np.asarray(valid)
+    assert post.shape[1] <= n_post
+    deg = valid.sum(axis=1)
+    if p == 1.0:
+        assert (deg == n_post).all()
+    else:
+        assert deg.max() <= n_post and deg.min() >= 1
+    for i in range(n_pre):
+        vs = post[i, valid[i]]
+        assert len(set(vs.tolist())) == len(vs)
+        assert vs.min() >= 0 and vs.max() < n_post

@@ -407,3 +407,83 @@ def test_soak_smoke_modest_scale():
     assert row["verified_streams"] == row["completed"]
     assert row["occupancy"] > 0.0
     assert row["p99_step_us"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# select_streams with heterogeneous dendritic delays (PR 9): the ring
+# cursor and per-slot delay state must survive shrink/grow re-packing
+# ---------------------------------------------------------------------------
+
+def _delay_model(mesh=None):
+    from repro.core.snn.spec import ModelSpec
+    from repro.core.snn.synapses import ExpDecay
+    from repro.sparse.formats import (FixedFanout, OneToOne, UniformIntDelay,
+                                      UniformWeight)
+    s = ModelSpec("gw_delay")
+    s.add_neuron_population(
+        "a", 48, "izhikevich",
+        input_fn=lambda k, t, n: 6.0 * jax.random.normal(k, (n,)))
+    s.add_neuron_population("b", 24, "izhikevich")
+    s.add_synapse_population("ab", "a", "b", connect=FixedFanout(6),
+                             weight=UniformWeight(0, 0.8),
+                             psm=ExpDecay(4.0), delay=UniformIntDelay(0, 3))
+    s.add_synapse_population("bb", "b", "b", connect=OneToOne(),
+                             weight=0.2, delay_steps=2)
+    return s.build(dt=1.0, seed=5, mesh=mesh)
+
+
+def _serve1(model, st, n_streams, chunk=6):
+    left = jnp.full((n_streams,), 100, jnp.int32)
+    return model.serve_chunk(st, {}, left, chunk)[0]
+
+
+def _slot_eq(tree_a, slot_a, tree_b, slot_b, what=""):
+    for a, b in zip(jax.tree.leaves(tree_a), jax.tree.leaves(tree_b)):
+        assert np.array_equal(np.asarray(a[slot_a]),
+                              np.asarray(b[slot_b])), what
+
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_ring_cursor_and_delay_state_survive_shrink_grow(sharded):
+    """A stream with in-flight spikes parked in its dendritic delay ring
+    is shrunk out of a 4-slot table, served, and grown back alongside a
+    fresh slot: every state leaf — the ring contents and its cursor
+    included — must track an untouched 4-stream control bit for bit."""
+    mesh = make_snn_mesh(_n_dev()) if sharded else None
+    model = _delay_model(mesh)
+    keys4 = jnp.stack([jax.random.PRNGKey(i) for i in range(4)])
+
+    ctrl = _serve1(model, model.init_stream_state(keys4), 4)
+    st = _serve1(model, model.init_stream_state(keys4), 4)
+    # mid-flight state is non-trivial: something is parked in the ring
+    assert np.any(np.asarray(ctrl.syn["ab"].dendritic))
+
+    # shrink 4 -> 2 keeping [3, 1]; the delay state must ride along
+    st = model.select_streams(st, np.array([3, 1]),
+                              jnp.stack([jax.random.PRNGKey(9)] * 2))
+    for gname in ("ab", "bb"):
+        for keep, src in ((0, 3), (1, 1)):
+            assert np.array_equal(
+                np.asarray(st.syn[gname].dendritic[keep]),
+                np.asarray(ctrl.syn[gname].dendritic[src])), gname
+            assert np.array_equal(np.asarray(st.syn[gname].cursor[keep]),
+                                  np.asarray(ctrl.syn[gname].cursor[src]))
+
+    # serve both paths a second chunk; then grow 2 -> 3 with a fresh slot
+    ctrl = _serve1(model, ctrl, 4)
+    st = _serve1(model, st, 2)
+    st = model.select_streams(
+        st, np.array([0, 1, -1]),
+        jnp.stack([jax.random.PRNGKey(i) for i in (0, 0, 42)]))
+    _slot_eq(st, 0, ctrl, 3, "slot 3 after shrink+serve")
+    _slot_eq(st, 1, ctrl, 1, "slot 1 after shrink+serve")
+
+    # a third chunk served as the grown 3-batch: the fresh neighbour must
+    # not perturb the carried streams' delay state either
+    ctrl = _serve1(model, ctrl, 4)
+    st = _serve1(model, st, 3)
+    _slot_eq(st, 0, ctrl, 3, "slot 3 after grow+serve")
+    _slot_eq(st, 1, ctrl, 1, "slot 1 after grow+serve")
+    fresh = _serve1(model, model.init_stream_state(
+        jnp.stack([jax.random.PRNGKey(42)])), 1)
+    _slot_eq(st, 2, fresh, 0, "fresh slot vs solo serve")

@@ -1,0 +1,109 @@
+"""Multi-host construction + bit-exactness: 2-process jax.distributed.
+
+Two subprocesses (2 fake CPU devices each) form a 4-device global mesh
+via ``init_distributed`` and build the same model with ``init="device"``
+— each process runs ``device_init_local`` for its own shards only.  The
+parent splices their locally-addressable spike-count shards together and
+compares bitwise against a single-process 4-device oracle, and checks
+the construction checksums of the post-sharded connectivity blocks
+(weights bit-cast to int, post indices, delay slots) match the oracle's.
+
+Environment-level distributed failures (coordination service refusing
+to come up in a sandbox) skip rather than fail; any divergence in the
+constructed graph or the stepped dynamics is a hard failure.
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+WORKER = str(Path(__file__).resolve().parent / "_multihost_worker.py")
+
+# stderr markers of the distributed runtime failing to come up at all
+# (vs. the model code failing, which must fail the test)
+_ENV_FAILURES = ("DEADLINE_EXCEEDED", "UNAVAILABLE", "barrier",
+                 "coordination service", "Connection refused")
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def _worker_env(n_local_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_local_devices}")
+    env["JAX_PLATFORMS"] = "cpu"
+    return env
+
+
+def _parse(out: subprocess.CompletedProcess) -> dict:
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _assemble(shards, padded):
+    """Splice [start, values] shard pieces into one array, checking the
+    pieces tile the padded length exactly (no gap, no overlap)."""
+    full = np.full(padded, -1, np.int64)
+    for start, vals in shards:
+        seg = np.asarray(vals, np.int64)
+        assert np.all(full[start: start + len(seg)] == -1), "overlap"
+        full[start: start + len(seg)] = seg
+    assert np.all(full >= 0), "gap in shard coverage"
+    return full
+
+
+@pytest.mark.slow
+def test_two_process_distributed_build_and_step_bit_exact():
+    port = _free_port()
+    workers = [
+        subprocess.Popen([sys.executable, WORKER, str(port), str(pid), "2"],
+                         env=_worker_env(2), text=True,
+                         stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+        for pid in range(2)]
+    try:
+        outs = [p.communicate(timeout=560) for p in workers]
+    except subprocess.TimeoutExpired:
+        for p in workers:
+            p.kill()
+        pytest.skip("distributed workers timed out (sandboxed runtime?)")
+    rcs = [p.returncode for p in workers]
+    if any(rcs):
+        err = "\n".join(o[1][-2000:] for o in outs)
+        if any(m.lower() in err.lower() for m in _ENV_FAILURES):
+            pytest.skip(f"jax.distributed unavailable here:\n{err[-500:]}")
+        raise AssertionError(f"worker failed rc={rcs}:\n{err}")
+
+    # single-process oracle: same model, same 4-device mesh, no distributed
+    oracle_raw = subprocess.run([sys.executable, WORKER, "0", "0", "1"],
+                                env=_worker_env(4), text=True,
+                                capture_output=True, timeout=560)
+    assert oracle_raw.returncode == 0, oracle_raw.stderr[-2000:]
+    oracle = _parse(oracle_raw)
+    assert oracle["nproc"] == 1 and oracle["ndev"] == 4
+
+    results = []
+    for pid, (stdout, _) in enumerate(outs):
+        res = json.loads(stdout.strip().splitlines()[-1])
+        assert res["pid"] == pid
+        assert res["nproc"] == 2, "init_distributed did not span 2 processes"
+        assert res["ndev"] == 4 and res["ndev_local"] == 2
+        # construction is placement-independent: every process sees the
+        # same global graph checksums as the single-process oracle
+        assert res["csum"] == oracle["csum"], f"pid {pid} graph diverged"
+        assert res["padded"] == oracle["padded"]
+        results.append(res)
+
+    for name, padded in oracle["padded"].items():
+        ref = _assemble(oracle["shards"][name], padded)
+        pieces = (results[0]["shards"][name] + results[1]["shards"][name])
+        got = _assemble(pieces, padded)
+        np.testing.assert_array_equal(got, ref, err_msg=name)

@@ -668,3 +668,80 @@ def test_probes_and_custom_updates_8_device_subprocess():
     assert res["post_norm_exact"], \
         "sharded custom-update reduction diverged"
     assert res["finite"]
+
+
+# ---------------------------------------------------------------------------
+# memory_report accounting vs the actual allocations (PR 9)
+# ---------------------------------------------------------------------------
+
+def test_memory_report_probe_bytes_match_allocated_buffers():
+    """The capacity planner sizes hosts off memory_report, so every probe
+    entry's buffer_bytes must equal the ring buffer _probe_init actually
+    allocates — in particular unreduced spike rings are bit-packed to
+    uint32 words (PR 8) and must not be accounted at the 32x larger
+    logical bool [cap, n] size."""
+    s = _spec(probes=[
+        (("raster", "a", "spikes"), {}),                   # packed ring
+        (("rate", "a", "spikes"), {"reduce": "sum"}),      # reduced scalar
+        (("vm", "a", "V"), {"every": 3, "window": 2}),     # strided window
+        (("tr", "aa", "x_pre"), {"every": 5}),             # wu_pre vector
+    ])
+    model = s.build(dt=1.0, seed=0)
+    n_steps = 24
+    bufs, caps = model.simulator._probe_init(n_steps)
+    by_name = {r["name"]: r for r in model.memory_report(n_steps=n_steps)
+               if r["kind"] == "probe"}
+    assert set(by_name) == set(bufs)
+    for name, buf in bufs.items():
+        entry = by_name[name]
+        assert entry["buffer_bytes"] == buf.nbytes, (
+            name, entry, buf.shape, str(buf.dtype))
+        assert entry["is_packed"] == (buf.dtype == jnp.uint32), name
+    assert by_name["raster"]["is_packed"]          # ~32x smaller than bool
+    assert not by_name["rate"]["is_packed"]
+    assert by_name["rate"]["buffer_bytes"] == 24 * 4
+    assert by_name["vm"]["buffer_bytes"] == 2 * 30 * 4
+
+
+def test_memory_report_without_nsteps_reports_window_capacity():
+    s = _spec(probes=[(("vm", "a", "V"), {"window": 5}),
+                      (("raster", "a", "spikes"), {})], stdp=False)
+    model = s.build(dt=1.0, seed=0)
+    by_name = {r["name"]: r for r in model.memory_report()
+               if r["kind"] == "probe"}
+    assert by_name["vm"]["buffer_bytes"] == 5 * 30 * 4
+    # unbounded ring without n_steps: per-sample cost is still reported
+    assert "buffer_bytes" not in by_name["raster"]
+    assert by_name["raster"]["bytes_per_sample"] == 4 * ((30 + 31) // 32)
+
+
+# ---------------------------------------------------------------------------
+# record_raster shim vs a user probe named "spikes" (PR 9)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", ["spikes_first", "spikes_last"])
+def test_record_raster_collides_with_probe_named_spikes(order):
+    """Two writers for the 'spikes' recordings key must be a loud
+    SpecError, not a silent last-one-wins — in either declaration
+    order."""
+    probes = [(("spikes", "a", "spikes"), {}), (("vm", "a", "V"), {})]
+    if order == "spikes_last":
+        probes.reverse()
+    model = _spec(probes=probes, stdp=False).build(dt=1.0, seed=0)
+    with pytest.raises(SpecError, match="record_raster.*spikes"):
+        model.run(5, record_raster=True)
+    # without the shim the probe set is perfectly legal
+    r = model.run(5)
+    assert np.asarray(r.recordings["spikes"]).shape == (5, 30)
+
+
+def test_record_raster_still_warns_when_no_probe_collides():
+    """Probes on the spikes *variable* under other names do not collide:
+    the shim keeps its DeprecationWarning path."""
+    model = _spec(probes=[(("spk_a", "a", "spikes"), {}),
+                          (("spk_b", "b", "spikes"), {})],
+                  stdp=False).build(dt=1.0, seed=0)
+    with pytest.warns(DeprecationWarning, match="record_raster"):
+        r = model.run(5, record_raster=True)
+    assert np.array_equal(np.asarray(r.raster["a"]),
+                          np.asarray(r.recordings["spk_a"]))
